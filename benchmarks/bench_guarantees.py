@@ -1,0 +1,71 @@
+"""Fig. 2/5/6: statistical guarantees.  A valid 95% CI requires the 95th
+percentile of |err| / CI-half-width <= 1.  BLOCKING violates this (bias with
+shrinking CI); BAS stays valid, including at tiny budgets and pilot sizes."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    Agg,
+    BASConfig,
+    Query,
+    calibrate_threshold,
+    run_bas,
+    run_blocking,
+)
+from repro.data import make_syn_scores
+
+from .common import coverage, error_ratio_p95, repeat_method, row, truth_of
+
+
+def run(fast: bool = True):
+    n_rep = 20 if fast else 100
+    n = 300 if fast else 600
+    rows = []
+    ds = make_syn_scores(n, n, selectivity=5e-3, fnr=0.05, fpr=0.1, seed=1)
+    val = make_syn_scores(n, n, selectivity=5e-3, fnr=0.05, fpr=0.1, seed=2)
+    tau = calibrate_threshold(val.weights_override, val.truth_flat(), 0.9)
+    truth = truth_of(ds, Agg.COUNT)
+    w = ds.weights_override
+
+    for budget in (2000, 8000, 20000):
+        mk = lambda: Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=budget)  # noqa: E731
+        ests_b, res_b, dt_b = repeat_method(
+            mk, lambda q, s: run_blocking(q, tau, seed=s, weights=w), n_rep
+        )
+        ests_a, res_a, dt_a = repeat_method(
+            mk, lambda q, s: run_bas(q, seed=s, weights=w), n_rep
+        )
+        rows.append(row(f"fig5_error_ratio_p95_blocking_b{budget}", dt_b,
+                        f"{error_ratio_p95(res_b, truth):.2f}"))
+        rows.append(row(f"fig5_error_ratio_p95_bas_b{budget}", dt_a,
+                        f"{error_ratio_p95(res_a, truth):.2f}"))
+        rows.append(row(f"fig5_coverage_bas_b{budget}", dt_a,
+                        f"{coverage(res_a, truth):.2f}"))
+
+    # Fig 6 left: tiny budget validity
+    mk = lambda: Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=1000)  # noqa: E731
+    _, res, dt = repeat_method(mk, lambda q, s: run_bas(q, seed=s, weights=w), n_rep)
+    rows.append(row("fig6_error_ratio_p95_bas_b1000", dt,
+                    f"{error_ratio_p95(res, truth):.2f}"))
+    # Fig 6 right: pilot-size insensitivity
+    for pf in (0.02, 0.1, 0.3):
+        cfg = BASConfig(pilot_fraction=pf)
+        _, res, dt = repeat_method(
+            mk, lambda q, s: run_bas(q, cfg, seed=s, weights=w), n_rep
+        )
+        rows.append(row(f"fig6_error_ratio_p95_bas_pilot{pf:g}", dt,
+                        f"{error_ratio_p95(res, truth):.2f}"))
+
+    # Fig 5 other aggregates (SUM / AVG) on an attribute column
+    g_col = ds.columns1["value"]
+    g = lambda idx: g_col[idx[:, 0]]  # noqa: E731
+    for agg in (Agg.SUM, Agg.AVG):
+        truth_g = truth_of(ds, agg, g)
+        mk = lambda: Query(spec=ds.spec(), agg=agg, oracle=ds.oracle(), budget=8000, g=g)  # noqa: E731, B023
+        _, res, dt = repeat_method(mk, lambda q, s: run_bas(q, seed=s, weights=w), n_rep)
+        rows.append(row(f"fig5_error_ratio_p95_bas_{agg.value}", dt,
+                        f"{error_ratio_p95(res, truth_g):.2f}"))
+        rows.append(row(f"fig5_coverage_bas_{agg.value}", dt,
+                        f"{coverage(res, truth_g):.2f}"))
+    return rows

@@ -1,0 +1,96 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU — structural check) vs
+pure-jnp reference, wall time + agreement.  On TPU the same entry points run
+compiled."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.similarity import normalize
+
+from .common import row
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(fast: bool = True):
+    rows = []
+    rng = np.random.default_rng(0)
+
+    # sim_hist
+    from repro.kernels.sim_hist.kernel import sim_hist_pallas
+    from repro.kernels.sim_hist.ref import sim_hist_ref
+
+    e1 = jnp.asarray(normalize(rng.standard_normal((512, 64))))
+    e2 = jnp.asarray(normalize(rng.standard_normal((512, 64))))
+    dt_k, out_k = _time(lambda a, b: sim_hist_pallas(a, b, n_bins=512, bm=128,
+                                                     bn=128, interpret=True), e1, e2)
+    dt_r, out_r = _time(lambda a, b: sim_hist_ref(a, b, n_bins=512), e1, e2)
+    agree = bool((np.asarray(out_k) == np.asarray(out_r)).all())
+    rows.append(row("kernel_sim_hist_pallas", dt_k, f"agree={agree}"))
+    rows.append(row("kernel_sim_hist_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
+
+    # sim_topk
+    from repro.kernels.sim_topk.kernel import sim_topk_pallas
+    from repro.kernels.sim_topk.ref import sim_topk_ref
+
+    dt_k, (vk, ik) = _time(lambda a, b: sim_topk_pallas(a, b, k=8, bm=128, bn=128,
+                                                        interpret=True), e1, e2)
+    dt_r, (vr, ir) = _time(lambda a, b: sim_topk_ref(a, b, k=8), e1, e2)
+    agree = bool(np.allclose(np.asarray(vk), np.asarray(vr), atol=1e-5))
+    rows.append(row("kernel_sim_topk_pallas", dt_k, f"agree={agree}"))
+    rows.append(row("kernel_sim_topk_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
+
+    # flash_attention
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+
+    q = jnp.asarray(rng.standard_normal((1, 4, 256, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, 256, 64)), jnp.float32)
+    dt_k, ok = _time(lambda *a: flash_attention_pallas(*a, causal=True, bq=64,
+                                                       bkv=64, interpret=True), q, k, v)
+    dt_r, orf = _time(lambda *a: flash_attention_ref(*a, causal=True), q, k, v)
+    agree = bool(np.allclose(np.asarray(ok), np.asarray(orf), atol=2e-4))
+    rows.append(row("kernel_flash_attention_pallas", dt_k, f"agree={agree}"))
+    rows.append(row("kernel_flash_attention_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
+
+    # rwkv6_scan
+    from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_pallas
+    from repro.kernels.rwkv6_scan.ref import rwkv6_scan_ref
+
+    r = jnp.asarray(rng.standard_normal((1, 4, 128, 32)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 4, 128, 32)) * 0.3, jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((1, 4, 128, 32)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.8, 0.999, (1, 4, 128, 32)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((4, 32)) * 0.1, jnp.float32)
+    dt_k, ok = _time(lambda *a: rwkv6_scan_pallas(*a, ct=32, interpret=True),
+                     r, kk, vv, w, u)
+    dt_r, orf = _time(rwkv6_scan_ref, r, kk, vv, w, u)
+    agree = bool(np.allclose(np.asarray(ok), np.asarray(orf), atol=1e-3))
+    rows.append(row("kernel_rwkv6_scan_pallas", dt_k, f"agree={agree}"))
+    rows.append(row("kernel_rwkv6_scan_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
+
+    # rglru_scan
+    from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
+    from repro.kernels.rglru_scan.ref import rglru_scan_ref
+
+    a = jnp.asarray(rng.uniform(0.8, 0.999, (2, 256, 256)), jnp.float32)
+    g = jnp.asarray(rng.standard_normal((2, 256, 256)) * 0.1, jnp.float32)
+    dt_k, ok = _time(lambda *x: rglru_scan_pallas(*x, ct=64, br=256, interpret=True),
+                     a, g)
+    dt_r, orf = _time(rglru_scan_ref, a, g)
+    agree = bool(np.allclose(np.asarray(ok), np.asarray(orf), atol=1e-3))
+    rows.append(row("kernel_rglru_scan_pallas", dt_k, f"agree={agree}"))
+    rows.append(row("kernel_rglru_scan_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
+    return rows

@@ -1,0 +1,47 @@
+"""Fig. 14 / Appendix A: CPU-phase latency decomposition of BAS (similarity,
+stratification, pilot, allocation, execution, resampling CI) — and the
+speedup of the fused sim_hist kernel path vs the paper's sort-based
+stratification."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Agg, Query, run_bas
+from repro.core.similarity import pair_weights
+from repro.core.stratify import stratify_dense, stratify_streaming
+from repro.core.types import BASConfig
+from repro.data import make_clustered_tables
+
+from .common import row
+
+
+def run(fast: bool = True):
+    rows = []
+    n = 600 if fast else 2000
+    ds = make_clustered_tables(n, n, n_entities=n, noise=0.4, seed=23)
+    q = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(),
+              budget=max(n * n // 40, 2000))
+    res = run_bas(q, seed=0)
+    t = res.detail["timings"]
+    total = t["total_s"]
+    for phase in ("similarity_s", "stratify_s", "pilot_s", "allocate_s",
+                  "execute_s", "ci_s"):
+        rows.append(row(f"fig14_{phase[:-2]}", t[phase],
+                        f"{t[phase] / total:.3f}"))
+    rows.append(row("fig14_total", total, f"{total:.3f}s"))
+
+    # sort-based (paper) vs histogram/kernel stratification at scale
+    w = pair_weights(ds.emb1, ds.emb2).reshape(-1)
+    cfg = BASConfig()
+    t0 = time.perf_counter()
+    stratify_dense(w, 0.2, q.budget, cfg)
+    dt_sort = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    stratify_streaming(ds.emb1, ds.emb2, 0.2, q.budget, cfg, use_kernel=True)
+    dt_hist = time.perf_counter() - t0
+    rows.append(row("fig14_stratify_sort", dt_sort, f"{dt_sort*1e3:.1f}ms"))
+    rows.append(row("fig14_stratify_simhist_kernel", dt_hist,
+                    f"speedup_x={dt_sort / max(dt_hist, 1e-9):.2f}"))
+    return rows

@@ -1,0 +1,35 @@
+"""Fig. 12: sensitivity to embedding quality — Syn(FNR, FPR) grid.  BAS must
+dominate BLOCKING at high FNR and WWJ at high FPR."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Agg, Query, calibrate_threshold, run_bas, run_blocking, run_wwj
+from repro.data import make_syn_scores
+
+from .common import rel_rmse, repeat_method, row, truth_of
+
+
+def run(fast: bool = True):
+    n_rep = 10 if fast else 100
+    rows = []
+    for fnr, fpr in ((0.0, 0.0), (0.3, 0.0), (0.0, 0.3), (0.3, 0.3), (0.5, 0.5)):
+        ds = make_syn_scores(300, 300, selectivity=4e-3, fnr=fnr, fpr=fpr, seed=11)
+        val = make_syn_scores(300, 300, selectivity=4e-3, fnr=fnr, fpr=fpr, seed=12)
+        w = ds.weights_override
+        tau = calibrate_threshold(val.weights_override, val.truth_flat(), 0.9)
+        truth = truth_of(ds, Agg.COUNT)
+        mk = lambda: Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=5000)  # noqa: E731
+        tag = f"fn{int(fnr*100)}_fp{int(fpr*100)}"
+        out = {}
+        for m, fn in {
+            "blocking": lambda q, s: run_blocking(q, tau, seed=s, weights=w),
+            "wwj": lambda q, s: run_wwj(q, seed=s, weights=w),
+            "bas": lambda q, s: run_bas(q, seed=s, weights=w),
+        }.items():
+            ests, _, dt = repeat_method(mk, fn, n_rep)
+            out[m] = rel_rmse(ests, truth)
+            rows.append(row(f"fig12_{tag}_{m}_rmse", dt, f"{out[m]:.4f}"))
+        rows.append(row(f"fig12_{tag}_bas_vs_best_baseline", 0.0,
+                        f"{min(out['blocking'], out['wwj']) / max(out['bas'], 1e-9):.2f}"))
+    return rows

@@ -1,0 +1,92 @@
+"""Fig. 7: end-to-end relative RMSE of BAS vs UNIFORM / BLOCKING / WWJ /
+ABAE / BLAZEIT across the dataset suite (paper-workload analogs, a Syn
+stress case, and a multi-way chain join)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    Agg,
+    BASConfig,
+    Query,
+    calibrate_threshold,
+    run_abae,
+    run_bas,
+    run_blazeit,
+    run_blocking,
+    run_uniform,
+    run_wwj,
+)
+from repro.core.similarity import chain_weights
+from repro.data import dataset_registry, make_chain_dataset, make_syn_scores
+
+from .common import rel_rmse, repeat_method, row, truth_of
+
+
+def _bench_dataset(name, ds, budget, n_rep, rows, agg=Agg.COUNT, g=None):
+    w = ds.weights_override if getattr(ds, "weights_override", None) is not None \
+        else chain_weights(ds.spec().embeddings)
+    truth = truth_of(ds, agg, g)
+    if truth == 0:
+        return
+    tau = float(np.quantile(w, 0.995))
+    mk = lambda: Query(spec=ds.spec(), agg=agg, oracle=ds.oracle(), budget=budget, g=g)  # noqa: E731
+    methods = {
+        "uniform": lambda q, s: run_uniform(q, seed=s),
+        "blocking": lambda q, s: run_blocking(q, tau, seed=s, weights=w),
+        "wwj": lambda q, s: run_wwj(q, seed=s, weights=w),
+        "abae": lambda q, s: run_abae(q, seed=s, weights=w),
+        "blazeit": lambda q, s: run_blazeit(q, seed=s, weights=w),
+        "bas": lambda q, s: run_bas(q, seed=s, weights=w),
+    }
+    rmses = {}
+    for m, fn in methods.items():
+        ests, _, dt = repeat_method(mk, fn, n_rep)
+        rmses[m] = rel_rmse(ests, truth)
+        rows.append(row(f"fig7_{name}_{m}_rmse", dt, f"{rmses[m]:.4f}"))
+    best_base = min(v for k, v in rmses.items() if k != "bas" and np.isfinite(v))
+    if rmses["bas"] <= 1e-9 and best_base <= 1e-9:
+        impr = 1.0
+    else:
+        impr = best_base / max(rmses["bas"], best_base * 1e-3, 1e-9)
+    rows.append(row(f"fig7_{name}_bas_improvement_x", 0.0, f"{impr:.2f}"))
+
+
+def run(fast: bool = True):
+    n_rep = 12 if fast else 100
+    scale = 0.35 if fast else 1.0
+    budget_frac = 0.04
+    rows = []
+    for name, mk_ds in dataset_registry(scale=scale).items():
+        ds = mk_ds()
+        budget = max(int(ds.spec().n_tuples * budget_frac), 2000)
+        _bench_dataset(name, ds, budget, n_rep, rows)
+
+    # Syn stress case with both failure modes
+    ds = make_syn_scores(300, 300, selectivity=3e-3, fnr=0.2, fpr=0.2, seed=5)
+    _bench_dataset("syn_fn20_fp20", ds, 5000, n_rep, rows)
+
+    # AVG on an attribute (veri-style transit time)
+    reg = dataset_registry(scale=scale)
+    ds = reg["veri"]()
+    g_col2 = ds.columns2["ts"]
+    g_col1 = ds.columns1["ts"]
+    g = lambda idx: g_col2[idx[:, 1]] - g_col1[idx[:, 0]]  # noqa: E731
+    _bench_dataset("veri_avg", ds, max(int(ds.spec().n_tuples * 0.05), 2000),
+                   n_rep, rows, agg=Agg.AVG, g=g)
+
+    # 3-way chain join (Ecomm-Q10 analog): BAS vs UNIFORM vs WWJ
+    chain = make_chain_dataset([60, 50, 55], d=24, n_entities=20, noise=0.35, seed=7)
+    w = chain_weights(chain.embeddings)
+    truth = float(chain.truth_flat().sum())
+    if truth > 0:
+        mk = lambda: Query(spec=chain.spec(), agg=Agg.COUNT, oracle=chain.oracle(), budget=8000)  # noqa: E731
+        for m, fn in {
+            "uniform": lambda q, s: run_uniform(q, seed=s),
+            "wwj": lambda q, s: run_wwj(q, seed=s),
+            "bas": lambda q, s: run_bas(q, seed=s, weights=w),
+        }.items():
+            ests, _, dt = repeat_method(mk, fn, n_rep)
+            rows.append(row(f"fig7_chain3_{m}_rmse", dt,
+                            f"{rel_rmse(ests, truth):.4f}"))
+    return rows

@@ -1,0 +1,43 @@
+"""Fig. 13: sensitivity of BAS to the maximum blocking ratio alpha (13a) and
+the weight exponent (13b).  BAS should fluctuate mildly and consistently beat
+UNIFORM/WWJ."""
+from __future__ import annotations
+
+from repro.core import Agg, BASConfig, Query, run_bas, run_uniform, run_wwj
+from repro.data import dataset_registry
+
+from .common import rel_rmse, repeat_method, row, truth_of
+
+
+def run(fast: bool = True):
+    n_rep = 10 if fast else 100
+    scale = 0.3 if fast else 1.0
+    rows = []
+    ds = dataset_registry(scale=scale)["flickr30k"]()
+    truth = truth_of(ds, Agg.COUNT)
+    budget = max(int(ds.spec().n_tuples * 0.04), 2000)
+    mk = lambda: Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=budget)  # noqa: E731
+
+    for alpha in (0.1, 0.2, 0.3):
+        cfg = BASConfig(alpha=alpha)
+        ests, _, dt = repeat_method(mk, lambda q, s: run_bas(q, cfg, seed=s), n_rep)
+        rows.append(row(f"fig13a_alpha{int(alpha*100)}_bas_rmse", dt,
+                        f"{rel_rmse(ests, truth):.4f}"))
+    ests_u, _, dt_u = repeat_method(mk, lambda q, s: run_uniform(q, seed=s), n_rep)
+    rows.append(row("fig13a_uniform_rmse", dt_u, f"{rel_rmse(ests_u, truth):.4f}"))
+
+    ds2 = dataset_registry(scale=scale)["company"]()
+    truth2 = truth_of(ds2, Agg.COUNT)
+    budget2 = max(int(ds2.spec().n_tuples * 0.04), 2000)
+    mk2 = lambda: Query(spec=ds2.spec(), agg=Agg.COUNT, oracle=ds2.oracle(), budget=budget2)  # noqa: E731
+    for expo in (0.5, 1.0, 2.0):
+        cfg = BASConfig(weight_exponent=expo)
+        ests_b, _, dt_b = repeat_method(mk2, lambda q, s: run_bas(q, cfg, seed=s), n_rep)
+        ests_w, _, dt_w = repeat_method(
+            mk2, lambda q, s: run_wwj(q, cfg, seed=s), n_rep
+        )
+        rows.append(row(f"fig13b_exp{expo:g}_bas_rmse", dt_b,
+                        f"{rel_rmse(ests_b, truth2):.4f}"))
+        rows.append(row(f"fig13b_exp{expo:g}_wwj_rmse", dt_w,
+                        f"{rel_rmse(ests_w, truth2):.4f}"))
+    return rows

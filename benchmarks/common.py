@@ -1,0 +1,67 @@
+"""Shared benchmark harness: repetition runner, RMSE/error-ratio metrics,
+CSV row emission (name, us_per_call, derived)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Agg, Query
+from repro.core.types import QueryResult
+
+
+def truth_of(ds, agg: Agg, g=None) -> float:
+    t = ds.truth_flat()
+    if agg is Agg.COUNT:
+        return float(t.sum())
+    import numpy as np
+
+    from repro.core.similarity import flat_to_tuples
+
+    idx = np.nonzero(t > 0)[0]
+    tup = flat_to_tuples(idx, ds.spec().sizes)
+    vals = g(tup) if g is not None else np.ones(len(idx))
+    if agg is Agg.SUM:
+        return float(vals.sum())
+    if agg is Agg.AVG:
+        return float(vals.mean())
+    if agg is Agg.MAX:
+        return float(vals.max())
+    if agg is Agg.MIN:
+        return float(vals.min())
+    return float(np.median(vals))
+
+
+def repeat_method(make_query, run, n_rep: int, seed0: int = 0):
+    """Runs `run(query, seed)` n_rep times on fresh queries/oracles.
+    Returns (estimates, results, seconds_per_call)."""
+    ests, results = [], []
+    t0 = time.perf_counter()
+    for r in range(n_rep):
+        q = make_query()
+        res = run(q, seed0 + r)
+        ests.append(res.estimate)
+        results.append(res)
+    dt = (time.perf_counter() - t0) / max(n_rep, 1)
+    return np.array(ests), results, dt
+
+
+def rel_rmse(estimates: np.ndarray, truth: float) -> float:
+    estimates = np.asarray(estimates, np.float64)
+    estimates = estimates[np.isfinite(estimates)]
+    if len(estimates) == 0 or truth == 0:
+        return float("nan")
+    return float(np.sqrt(np.mean((estimates - truth) ** 2)) / abs(truth))
+
+
+def error_ratio_p95(results: list, truth: float) -> float:
+    ratios = [r.error_ratio(truth) for r in results]
+    return float(np.quantile(ratios, 0.95))
+
+
+def coverage(results: list, truth: float) -> float:
+    return float(np.mean([r.ci.contains(truth) for r in results]))
+
+
+def row(name: str, seconds_per_call: float, derived) -> str:
+    return f"{name},{seconds_per_call * 1e6:.1f},{derived}"

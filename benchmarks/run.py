@@ -1,0 +1,52 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Default is the fast profile (CI
+runtime); ``--full`` uses paper-scale repetition counts.  ``--only rmse``
+filters modules.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = {
+    "guarantees": "benchmarks.bench_guarantees",    # Fig 2/5/6
+    "rmse": "benchmarks.bench_rmse",                # Fig 7
+    "selection": "benchmarks.bench_selection",      # Fig 8
+    "planner": "benchmarks.bench_planner",          # Fig 9
+    "allocation": "benchmarks.bench_allocation",    # Fig 10
+    "noise": "benchmarks.bench_noise",              # Fig 12
+    "sensitivity": "benchmarks.bench_sensitivity",  # Fig 13
+    "latency": "benchmarks.bench_latency",          # Fig 14 / App A
+    "kernels": "benchmarks.bench_kernels",          # Pallas vs ref
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale reps")
+    ap.add_argument("--only", default=None, help="comma-separated module keys")
+    args = ap.parse_args()
+    keys = list(MODULES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in keys:
+        import importlib
+
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(MODULES[key])
+            rows = mod.run(fast=not args.full)
+            for r in rows:
+                print(r, flush=True)
+            print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# {key} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""End-to-end driver: TRAIN the Oracle, then ANSWER a join query with it.
+
+1. Builds a synthetic entity-record corpus (noisy string variants).
+2. Trains the pair-scoring Oracle LM (joinml-oracle config; reduced size by
+   default, ``--full`` uses the ~100M configuration) with the full substrate:
+   sharded deterministic loader, AdamW + schedule, microbatching, async
+   checkpointing, preemption handling, straggler monitoring.
+3. Serves the trained model as the budgeted ModelOracle of a BAS COUNT query
+   and reports estimate/CI against ground truth — the paper's full pipeline
+   with a *learned* Oracle instead of a ground-truth array.
+
+    PYTHONPATH=src python examples/train_oracle.py [--steps 300] [--full]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpoint import AsyncCheckpointer, restore_latest
+from repro.configs import get_config, get_smoke_config
+from repro.core import Agg, ModelOracle, Query, run_bas
+from repro.core.similarity import normalize
+from repro.core.types import JoinSpec
+from repro.data.pipeline import (
+    ByteTokenizer,
+    ShardedLoader,
+    make_entity_corpus,
+    make_pair_batch,
+    pair_example,
+)
+from repro.models import init_params
+from repro.runtime.fault_tolerance import PreemptionHandler, StragglerMonitor
+from repro.serve.serve_loop import PairScorer
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--full", action="store_true", help="~100M oracle config")
+    ap.add_argument("--ckpt", default="/tmp/joinml_oracle_ckpt")
+    args = ap.parse_args()
+
+    tok = ByteTokenizer()
+    if args.full:
+        import dataclasses
+
+        cfg = dataclasses.replace(
+            get_config("joinml-oracle"), vocab_size=tok.vocab_size, remat=False
+        )
+    else:
+        cfg = get_smoke_config(
+            "joinml-oracle", vocab_size=tok.vocab_size, num_layers=4,
+            d_model=128, num_heads=4, num_kv_heads=4, head_dim=32, d_ff=512,
+        )
+    print(f"oracle config: {cfg.name} ({cfg.param_count()/1e6:.1f}M params)")
+
+    records, ids = make_entity_corpus(n_entities=80, records_per_entity=4,
+                                      noise=0.08, seed=0)
+
+    def batch_fn(rng):
+        b = make_pair_batch(tok, records, ids, args.batch, args.max_len, rng)
+        return {"tokens": b["tokens"], "loss_mask": b["loss_mask"]}
+
+    loader = ShardedLoader(batch_fn, args.batch, num_hosts=1, host_id=0, seed=7)
+    params = init_params(cfg, jax.random.key(0))
+    opt = init_opt_state(params)
+    ocfg = OptimizerConfig(peak_lr=2e-3, warmup_steps=20, decay_steps=args.steps)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, num_microbatches=2))
+
+    ckpt = AsyncCheckpointer(args.ckpt, keep_last=2)
+    preempt = PreemptionHandler()
+    preempt.install()
+    stragglers = StragglerMonitor(threshold=5.0)
+
+    # resume if a checkpoint exists (restart path)
+    restored, manifest = restore_latest(args.ckpt, {"params": params, "opt": opt})
+    start = 0
+    if restored is not None:
+        params, opt = restored["params"], restored["opt"]
+        start = manifest["step"]
+        print(f"resumed from checkpoint step {start}")
+
+    t_start = time.time()
+    for _ in range(start, args.steps):
+        t0 = time.time()
+        step, batch = next(loader)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt, m = step_fn(params, opt, batch)
+        stragglers.record(step, time.time() - t0)
+        if step % 50 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss={float(m['loss']):.4f}  "
+                  f"lr={float(m['lr']):.2e}  gnorm={float(m['grad_norm']):.2f}")
+        if step % 100 == 99 or preempt.preempted:
+            ckpt.save(step + 1, {"params": params, "opt": opt})
+        if preempt.preempted:
+            print("preempted: checkpointed and exiting")
+            ckpt.wait()
+            return
+    ckpt.save(args.steps, {"params": params, "opt": opt})
+    ckpt.wait()
+    loader.close()
+    print(f"trained {args.steps} steps in {time.time()-t_start:.1f}s; "
+          f"stragglers flagged: {len(stragglers.reports)}")
+
+    # ---- serve the trained model as the Oracle of a BAS query -------------
+    # two tables: one record variant of each entity per side (the classic EM
+    # split — records are in-domain, the *pairs* are what the Oracle decides)
+    r1, id1 = records[0::4], ids[0::4]
+    r2, id2 = records[1::4], ids[1::4]
+    truth = (np.array(id1)[:, None] == np.array(id2)[None, :]).astype(np.int8)
+
+    def tok_pair(pair):
+        t, _ = pair_example(tok, r1[pair[0]], r2[pair[1]], None, args.max_len)
+        return t[t != tok.PAD]
+
+    scorer = PairScorer(cfg, params, tok_pair, tok.YES, tok.NO,
+                        max_len=args.max_len, batch_size=32)
+    # oracle quality + threshold calibration on a labelled sample: the model
+    # was trained on balanced pairs, so at 1% selectivity the decision
+    # threshold must sit well above 0.5 to control false positives
+    rng = np.random.default_rng(1)
+    pos = np.argwhere(truth == 1)
+    negs = np.argwhere(truth == 0)
+    neg = negs[rng.choice(len(negs), 150)]
+    sample = np.concatenate([pos[:50], neg])
+    labels = truth[sample[:, 0], sample[:, 1]]
+    p_scores = scorer.score(sample)
+    thresh = float(np.quantile(p_scores[labels == 0], 0.995))
+    pred = p_scores > thresh
+    prec = float(labels[pred].mean()) if pred.any() else 0.0
+    rec = float(pred[labels == 1].mean())
+    print(f"\ntrained-oracle on held-out pairs: precision={prec:.0%} "
+          f"recall={rec:.0%} at calibrated threshold {thresh:.2f}")
+
+    # embeddings: character 3-gram hashes (cheap proxy, like TF-IDF in §7.6)
+    def embed(recs):
+        out = np.zeros((len(recs), 64), np.float32)
+        for i, r in enumerate(recs):
+            for j in range(len(r) - 2):
+                out[i, hash(r[j : j + 3]) % 64] += 1.0
+        return normalize(out)
+
+    spec = JoinSpec(embeddings=[embed(r1), embed(r2)])
+    oracle = ModelOracle(lambda idx: scorer.score(idx), threshold=thresh)
+    q = Query(spec=spec, agg=Agg.COUNT, oracle=oracle, budget=1500,
+              confidence=0.95)
+    res = run_bas(q, seed=0)
+    true_count = float(truth.sum())
+    print(f"BAS with learned Oracle: COUNT ~= {res.estimate:.0f} "
+          f"CI=[{res.ci.lo:.0f}, {res.ci.hi:.0f}]  "
+          f"ground truth={true_count:.0f}  oracle_calls={res.oracle_calls} "
+          f"(budget 1500 of {truth.size} pairs)")
+    print("note: BAS estimates the *Oracle's* answer with guarantees — any "
+          "residual gap to ground truth is the trained Oracle's own error "
+          "(paper §2 assumes the Oracle is ground truth).")
+
+
+if __name__ == "__main__":
+    main()

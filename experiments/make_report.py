@@ -1,0 +1,77 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run JSON records.
+
+    PYTHONPATH=src python experiments/make_report.py [--dir experiments/dryrun]
+"""
+import argparse
+import json
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.roofline import hw  # noqa: E402
+from repro.roofline.report import load_records, roofline_fraction  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    recs = [r for r in load_records(args.dir)
+            if r.get("rules", "default") == "default" and not r.get("tag")]
+
+    print("### Dry-run summary (both meshes)\n")
+    for mesh in ("16x16", "2x16x16"):
+        rs = [r for r in recs if r["mesh"] == mesh]
+        ok = sum(r["status"] == "ok" for r in rs)
+        sk = sum(r["status"] == "skipped" for r in rs)
+        er = len(rs) - ok - sk
+        print(f"* **{mesh}**: {ok} compiled, {sk} skipped (documented), {er} errors "
+              f"of {len(rs)} cells")
+    print()
+
+    print("### Roofline table (single pod, 256 chips; seconds per step)\n")
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant | "
+           "kernel-adj M | kernel-adj bound | MODEL_FLOPS/chip | useful | "
+           "mem/chip GiB | roofline frac |")
+    print(hdr)
+    print("|" + "---|" * 12)
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "16x16":
+            continue
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | *skipped: "
+                  f"{r['reason']}* | — | — | — | — | — | — |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | ERROR |||||||||| ")
+            continue
+        rf = r["roofline"]
+        ka = r.get("roofline_kernel_adj", rf)
+        adj_bound = max(ka["compute_s"], ka["memory_s"], ka["collective_s"])
+        frac = r["model_flops_per_chip"] / (adj_bound * hw.PEAK_FLOPS_BF16)
+        print(
+            "| {arch} | {shape} | {c:.3e} | {m:.3e} | {x:.3e} | {dom} | "
+            "{kam:.3e} | {kab:.3e} | {mf:.2e} | {ur:.2f} | {mem:.1f} | "
+            "{frac:.4f} |".format(
+                arch=r["arch"], shape=r["shape"], c=rf["compute_s"],
+                m=rf["memory_s"], x=rf["collective_s"], dom=rf["dominant"],
+                kam=ka["memory_s"], kab=adj_bound,
+                mf=r["model_flops_per_chip"], ur=r["useful_compute_ratio"],
+                mem=r["memory"]["total_bytes"] / 2**30, frac=frac,
+            )
+        )
+    print()
+    print("### Multi-pod (2x16x16, 512 chips) — pod axis shards\n")
+    print("| arch | shape | compile s | memory/chip GiB | collective s |")
+    print("|---|---|---|---|---|")
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != "2x16x16" or r["status"] != "ok":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.1f} | "
+              f"{r['memory']['total_bytes']/2**30:.2f} | "
+              f"{r['roofline']['collective_s']:.3e} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""JoinML-X: approximate analytical join queries over unstructured data,
+with statistical guarantees, on multi-pod TPU meshes (JAX + Pallas)."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,9 @@
+"""The paper's embedding model: a small encoder-style LM whose mean-pooled
+hidden state is the record embedding (MiniLM-scale)."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="joinml-embedder", family="dense",
+    num_layers=6, d_model=384, num_heads=6, num_kv_heads=6, head_dim=64,
+    d_ff=1536, vocab_size=32768, tied_embeddings=True, causal=False, act="silu",
+)

@@ -1,0 +1,33 @@
+"""JoinML-X core: the paper's algorithms (WWJ, BAS) and query engine."""
+from .types import (  # noqa: F401
+    Agg,
+    BASConfig,
+    ConfidenceInterval,
+    JoinSpec,
+    Query,
+    QueryResult,
+    constant_attr,
+)
+from .oracle import ArrayOracle, FnOracle, ModelOracle, Oracle, PairChainOracle  # noqa: F401
+from .bas import run_bas, run_exact  # noqa: F401
+from .bas_streaming import run_bas_streaming  # noqa: F401
+from .baselines import (  # noqa: F401
+    calibrate_threshold,
+    run_abae,
+    run_blazeit,
+    run_blocking,
+    run_uniform,
+    run_wwj,
+)
+from .selection import (  # noqa: F401
+    run_bas_groupby,
+    run_bas_selection,
+    run_topk_heavy_hitters,
+)
+from .engine import Catalog, JoinMLEngine, Table, parse_query  # noqa: F401
+from .planner import (  # noqa: F401
+    bas_cardinality_provider,
+    dp_chain_plan,
+    plan_cost_under_truth,
+    uniform_cardinality_provider,
+)

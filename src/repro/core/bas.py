@@ -1,0 +1,333 @@
+"""Blocking-augmented Sampling — the paper's main contribution (§5.2-5.3, Alg. 4).
+
+Pipeline (dense path; the streaming path swaps stage 1 for the histogram
+stratifier, see ``stratify.py``):
+
+1. *Stratify*: top alpha*b pairs by weight -> K equal strata D_1..D_K
+   (max blocking regime); everything else is D_0 (min sampling regime).
+2. *Pilot* (budget b1): WWJ-sample every stratum ∝ weight, estimate
+   per-stratum sampling variance of the agg-linearised HT terms.
+3. *Allocate*: beta* = argmin estimated MSE (allocate.py).
+4. *Execute* (budget b2): Oracle everything in blocked strata; WWJ-sample the
+   rest with BudgetAssign sizes; merge with pilot samples (same within-stratum
+   distribution -> poolable); optional top-up rounds spend budget freed by the
+   Oracle cache.
+5. *Estimate + CI*: combined estimators (estimators.py) and bootstrap-t
+   (bootstrap.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import allocate as alloc_mod
+from .bootstrap import bootstrap_t_ci
+from .estimators import (
+    BlockedRegime,
+    StratumSample,
+    combined_avg,
+    combined_cdf_median,
+    combined_count,
+    combined_extreme,
+    combined_sum,
+)
+from .similarity import chain_weights, flat_to_tuples
+from .stratify import Stratification, stratify_dense
+from .types import Agg, BASConfig, ConfidenceInterval, Query, QueryResult
+from .wander import flat_sample
+
+
+def _sample_stratum(
+    weights: np.ndarray,
+    flat_idx: np.ndarray,
+    n: int,
+    query: Query,
+    rng: np.random.Generator,
+    defensive_mix: float = 0.0,
+) -> StratumSample:
+    """WWJ within-stratum sampling: prob ∝ weight (plus a defensive uniform
+    component), HT prob = exact normalised q."""
+    w = weights[flat_idx]
+    pos, q = flat_sample(w, n, rng, defensive_mix)
+    chosen = flat_idx[pos]
+    tup = flat_to_tuples(chosen, query.spec.sizes)
+    o = query.oracle.label(tup)
+    g = query.attr()(tup)
+    return StratumSample(o=o, g=g, q=q, size=len(flat_idx))
+
+
+def _linearised_variance(s: StratumSample, agg: Agg, ratio: float, count_hat: float) -> float:
+    """Pilot variance of the agg-appropriate linearised HT terms."""
+    if agg is Agg.COUNT:
+        t = s.count_terms()
+    elif agg in (Agg.SUM, Agg.MEDIAN, Agg.MIN, Agg.MAX):
+        t = s.sum_terms()
+    else:  # AVG: influence function (s_t - R*c_t) / C
+        c = max(count_hat, 1e-12)
+        t = (s.sum_terms() - ratio * s.count_terms()) / c
+    return float(np.var(t, ddof=1)) if len(t) > 1 else 0.0
+
+
+def _stratum_flat_indices(strat: Stratification, weights: np.ndarray):
+    """Returns list of per-stratum flat index arrays for strata 0..K.
+    D_0 is represented lazily as a boolean complement mask for memory."""
+    per = [None]  # D_0 handled via mask
+    for i in range(1, strat.num_strata + 1):
+        per.append(strat.stratum_indices(i))
+    return per
+
+
+def run_exact(query: Query) -> QueryResult:
+    """Label everything (only valid when budget >= |D|)."""
+    n = query.spec.n_tuples
+    tup = flat_to_tuples(np.arange(n), query.spec.sizes)
+    o = query.oracle.label(tup)
+    g = query.attr()(tup)
+    blocked = BlockedRegime(o=o, g=g)
+    if query.agg is Agg.COUNT:
+        est = blocked.count
+    elif query.agg is Agg.SUM:
+        est = blocked.sum
+    elif query.agg is Agg.AVG:
+        est = blocked.sum / max(blocked.count, 1e-12)
+    elif query.agg in (Agg.MIN, Agg.MAX):
+        est = combined_extreme([], blocked, query.agg.value)
+    else:
+        est = combined_cdf_median([], blocked)
+    return QueryResult(
+        estimate=float(est),
+        ci=ConfidenceInterval(float(est), float(est), query.confidence),
+        oracle_calls=query.oracle.calls,
+        detail={"mode": "exact"},
+    )
+
+
+def run_bas(
+    query: Query,
+    cfg: Optional[BASConfig] = None,
+    seed: int = 0,
+    weights: Optional[np.ndarray] = None,
+) -> QueryResult:
+    cfg = cfg or BASConfig()
+    rng = np.random.default_rng(seed)
+    t_start = time.perf_counter()
+    timings: dict = {}
+
+    query.oracle.set_budget(query.budget)
+    n_total = query.spec.n_tuples
+    if query.budget >= n_total:
+        return run_exact(query)
+
+    # ---- similarity + stratification -------------------------------------
+    t0 = time.perf_counter()
+    if weights is None:
+        weights = chain_weights(
+            query.spec.embeddings, cfg.weight_exponent, cfg.weight_floor
+        )
+    timings["similarity_s"] = time.perf_counter() - t0
+
+    b = query.budget
+    b1 = max(int(round(cfg.pilot_fraction * b)), 8)
+    b2 = b - b1
+
+    t0 = time.perf_counter()
+    strat = stratify_dense(weights, cfg.alpha, b, cfg)
+    k = strat.num_strata
+    sizes = strat.stratum_sizes()
+    per_idx = _stratum_flat_indices(strat, weights)
+    top_sum = float(weights[strat.order].sum())
+    total_sum = float(weights.sum())
+    weight_sums = np.empty(k + 1, np.float64)
+    weight_sums[0] = max(total_sum - top_sum, 0.0)
+    for i in range(1, k + 1):
+        weight_sums[i] = float(weights[per_idx[i]].sum())
+    # D_0 sampling weights: zero out the blocking regime
+    w0 = np.array(weights, np.float64, copy=True)
+    w0[strat.order] = 0.0
+    timings["stratify_s"] = time.perf_counter() - t0
+
+    # ---- stage 1: pilot ---------------------------------------------------
+    t0 = time.perf_counter()
+    shares = weight_sums / max(weight_sums.sum(), 1e-300)
+    n_pilot = np.maximum((shares * b1).astype(np.int64), 2)
+    while n_pilot.sum() > b1 and n_pilot.max() > 2:
+        n_pilot[np.argmax(n_pilot)] -= 1
+
+    samples: list[Optional[StratumSample]] = [None] * (k + 1)
+    for i in range(k + 1):
+        idx = per_idx[i]
+        if i == 0:
+            if sizes[0] == 0:
+                continue
+            pos, q = flat_sample(w0, int(n_pilot[0]), rng, cfg.defensive_mix)
+            tup = flat_to_tuples(pos, query.spec.sizes)
+            o = query.oracle.label(tup)
+            g = query.attr()(tup)
+            samples[0] = StratumSample(o=o, g=g, q=q, size=int(sizes[0]))
+        else:
+            if len(idx) == 0:
+                continue
+            samples[i] = _sample_stratum(weights, idx, int(n_pilot[i]), query, rng, cfg.defensive_mix)
+
+    live = [s for s in samples if s is not None]
+    c_hat, _ = combined_count(live, BlockedRegime(np.zeros(0), np.zeros(0)))
+    s_hat, _ = combined_sum(live, BlockedRegime(np.zeros(0), np.zeros(0)))
+    ratio = s_hat / c_hat if c_hat > 0 else 0.0
+    sigma2 = np.zeros(k + 1, np.float64)
+    for i in range(k + 1):
+        if samples[i] is not None:
+            sigma2[i] = _linearised_variance(samples[i], query.agg, ratio, c_hat)
+    timings["pilot_s"] = time.perf_counter() - t0
+
+    # ---- allocation ---------------------------------------------------------
+    t0 = time.perf_counter()
+    b2_eff = query.budget - query.oracle.calls
+    if query.agg in (Agg.MIN, Agg.MAX):
+        allocation = _allocate_extreme(samples, sizes, weight_sums, b2_eff, query.agg)
+    else:
+        allocation = alloc_mod.argmin_beta(
+            sigma2, weight_sums, sizes, b2_eff, cfg.exact_beta_max_k
+        )
+    beta = set(int(i) for i in allocation.beta)
+    timings["allocate_s"] = time.perf_counter() - t0
+
+    # ---- stage 2: blocking + sampling ---------------------------------------
+    t0 = time.perf_counter()
+    blocked_o, blocked_g = [], []
+    for i in sorted(beta):
+        tup = flat_to_tuples(per_idx[i], query.spec.sizes)
+        blocked_o.append(query.oracle.label(tup))
+        blocked_g.append(query.attr()(tup))
+    blocked = BlockedRegime(
+        o=np.concatenate(blocked_o) if blocked_o else np.zeros(0),
+        g=np.concatenate(blocked_g) if blocked_g else np.zeros(0),
+    )
+
+    sampled_ids = [i for i in range(k + 1) if i not in beta and sizes[i] > 0]
+    rounds = 0
+    while rounds < 4:
+        remaining = query.budget - query.oracle.calls
+        if remaining < 2 * max(len(sampled_ids), 1):
+            break
+        w_s = np.array([weight_sums[i] for i in sampled_ids])
+        share = w_s / max(w_s.sum(), 1e-300)
+        n_main = np.maximum((share * remaining).astype(np.int64), 1)
+        while n_main.sum() > remaining:
+            n_main[np.argmax(n_main)] -= 1
+        before = query.oracle.calls
+        for j, i in enumerate(sampled_ids):
+            if n_main[j] <= 0:
+                continue
+            if i == 0:
+                pos, q = flat_sample(w0, int(n_main[j]), rng, cfg.defensive_mix)
+                tup = flat_to_tuples(pos, query.spec.sizes)
+                o = query.oracle.label(tup)
+                g = query.attr()(tup)
+                new = StratumSample(o=o, g=g, q=q, size=int(sizes[0]))
+            else:
+                new = _sample_stratum(weights, per_idx[i], int(n_main[j]), query, rng, cfg.defensive_mix)
+            samples[i] = new if samples[i] is None else samples[i].merge(new)
+        rounds += 1
+        if query.oracle.calls == before:  # everything cached; budget cannot move
+            break
+    timings["execute_s"] = time.perf_counter() - t0
+
+    # ---- estimate + CI -------------------------------------------------------
+    t0 = time.perf_counter()
+    live = [samples[i] for i in range(k + 1) if i not in beta and samples[i] is not None]
+    if query.agg in (Agg.COUNT, Agg.SUM, Agg.AVG):
+        est, ci = bootstrap_t_ci(
+            live, blocked, query.agg, query.confidence, cfg.n_bootstrap, rng
+        )
+    elif query.agg in (Agg.MIN, Agg.MAX):
+        est = combined_extreme(live, blocked, query.agg.value)
+        gb = query.g_bounds
+        if query.agg is Agg.MAX:
+            hi = gb[1] if gb else est
+            ci = ConfidenceInterval(est, hi, query.confidence)
+        else:
+            lo = gb[0] if gb else est
+            ci = ConfidenceInterval(lo, est, query.confidence)
+    elif query.agg is Agg.MEDIAN:
+        est = combined_cdf_median(live, blocked)
+        ci = _bootstrap_median_ci(live, blocked, query.confidence, cfg.n_bootstrap, rng)
+    else:
+        raise ValueError(query.agg)
+    timings["ci_s"] = time.perf_counter() - t0
+    timings["total_s"] = time.perf_counter() - t_start
+
+    return QueryResult(
+        estimate=float(est),
+        ci=ci,
+        oracle_calls=query.oracle.calls,
+        detail={
+            "mode": "bas",
+            "beta": sorted(beta),
+            "num_strata": k,
+            "stratum_sizes": sizes.tolist(),
+            "pilot_n": n_pilot.tolist(),
+            "est_mse": allocation.est_mse,
+            "timings": timings,
+        },
+    )
+
+
+def _bootstrap_median_ci(samples, blocked, p, n_boot, rng):
+    """Percentile bootstrap on the combined weighted-CDF median (paper notes
+    MEDIAN is Hadamard differentiable so the bootstrap is valid)."""
+    meds = []
+    for _ in range(min(n_boot, 400)):
+        rs = []
+        for s in samples:
+            ridx = rng.integers(0, s.n, size=s.n)
+            rs.append(StratumSample(o=s.o[ridx], g=s.g[ridx], q=s.q[ridx], size=s.size))
+        meds.append(combined_cdf_median(rs, blocked))
+    meds = np.array([m for m in meds if np.isfinite(m)])
+    if len(meds) < 10:
+        m = combined_cdf_median(samples, blocked)
+        return ConfidenceInterval(m, m, p)
+    lo = float(np.quantile(meds, (1 - p) / 2))
+    hi = float(np.quantile(meds, 1 - (1 - p) / 2))
+    return ConfidenceInterval(lo, hi, p)
+
+
+def _allocate_extreme(samples, sizes, weight_sums, b2, agg):
+    """MIN/MAX allocation (paper §5.3): block the strata most likely to contain
+    the extreme.  Exceedance score per stratum = exponential-tail estimate of
+    P(value beyond current observed extreme) from pilot positives."""
+    k = len(sizes) - 1
+    sign = 1.0 if agg is Agg.MAX else -1.0
+    observed = [
+        sign * s.g[s.o > 0] for s in samples if s is not None and (s.o > 0).any()
+    ]
+    cur = max((float(v.max()) for v in observed), default=-np.inf)
+    scores = np.zeros(k + 1)
+    for i in range(1, k + 1):
+        s = samples[i]
+        if s is None:
+            continue
+        v = sign * s.g[s.o > 0]
+        if len(v) == 0:
+            continue
+        mu = float(v.mean())
+        scale = float(v.std(ddof=1)) if len(v) > 1 else abs(mu) + 1.0
+        scale = max(scale, 1e-9)
+        # exponential tail: P(X > cur) ~ exp(-(cur - mu)/scale)
+        scores[i] = np.exp(-max(cur - mu, 0.0) / scale) * sizes[i]
+    order = np.argsort(scores[1:])[::-1] + 1
+    beta, cost = [], 0
+    for i in order:
+        if scores[i] <= 0:
+            break
+        if cost + sizes[i] <= b2 * 0.9:  # keep some budget for sampling
+            beta.append(int(i))
+            cost += int(sizes[i])
+    mask = np.zeros(k + 1, bool)
+    mask[beta] = True
+    return alloc_mod.Allocation(
+        beta=np.array(sorted(beta), np.int64),
+        n_per_stratum=alloc_mod.budget_assign(b2, weight_sums, sizes, mask),
+        est_mse=float("nan"),
+    )

@@ -1,0 +1,188 @@
+"""BAS without materialising the cross product (paper §5.3, the
+"cross product cannot fit into memory" regime).
+
+Differences from the dense path (``bas.run_bas``):
+
+* stratification uses the histogram threshold (``stratify_streaming``, backed
+  by the fused ``sim_hist`` Pallas kernel) — O(bins) memory, two streaming
+  passes;
+* the minimum sampling regime D_0 is sampled by **walk + rejection**: WWJ
+  walk proposals from the full-space distribution p(i,j) = (1/N1) w_ij / r_i
+  are rejected if they fall in the blocking regime; accepted tuples have
+  exact probability p(s) / (1 - P(top)), where P(top) = sum of full-space
+  probabilities over the collected top set (computable from the streamed row
+  sums) — so Horvitz-Thompson stays exact;
+* per-stratum weights are recomputed by gathering only the stratum's pairs.
+
+Memory: O(N1 + N2 + alpha*b + b) — never O(N1*N2).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from . import allocate as alloc_mod
+from .bootstrap import bootstrap_t_ci
+from .estimators import BlockedRegime, StratumSample, combined_count, combined_sum
+from .similarity import flat_to_tuples, pair_weights
+from .stratify import stratify_streaming
+from .types import Agg, BASConfig, Query, QueryResult
+from .wander import flat_sample
+
+
+def _pairwise_w(e1, e2, i, j, cfg):
+    """Elementwise weights for aligned index vectors (no cross block)."""
+    sims = np.einsum("nd,nd->n", e1[i].astype(np.float64), e2[j].astype(np.float64))
+    w = np.clip(sims, 0.0, 1.0)
+    w = np.maximum(w, cfg.weight_floor)
+    if cfg.weight_exponent != 1.0:
+        w = w**cfg.weight_exponent
+    return w
+
+
+def _walk_rejection_sample(e1, e2, row_sums, top_set, n, cfg, rng, max_rounds=50):
+    """Sample n tuples from D_0 with exact probabilities (walk + rejection)."""
+    n1, n2 = e1.shape[0], e2.shape[0]
+    total_rows = row_sums.sum()
+    out_idx = np.empty(n, np.int64)
+    out_p = np.empty(n, np.float64)
+    got = 0
+    for _ in range(max_rounds):
+        need = n - got
+        if need <= 0:
+            break
+        m = max(int(need * 1.3) + 16, 32)
+        i = rng.integers(0, n1, size=m)
+        # categorical over row i's weights, streamed per unique row block
+        w_rows = pair_weights(e1[i], e2, cfg.weight_exponent, cfg.weight_floor)
+        cdf = np.cumsum(w_rows, axis=1)
+        tot = cdf[:, -1]
+        u = rng.random(m) * tot
+        j = np.minimum((cdf < u[:, None]).sum(axis=1), n2 - 1)
+        flat = i.astype(np.int64) * n2 + j
+        p = (1.0 / n1) * w_rows[np.arange(m), j] / tot
+        keep = np.array([f not in top_set for f in flat])
+        k = int(keep.sum())
+        take = min(k, need)
+        out_idx[got : got + take] = flat[keep][:take]
+        out_p[got : got + take] = p[keep][:take]
+        got += take
+    if got < n:
+        out_idx, out_p = out_idx[:got], out_p[:got]
+    return out_idx, out_p
+
+
+def run_bas_streaming(
+    query: Query,
+    cfg: Optional[BASConfig] = None,
+    seed: int = 0,
+    n_bins: int = 4096,
+    use_kernel: bool = True,
+) -> QueryResult:
+    """Two-table streaming BAS.  Same estimator/CI machinery as the dense
+    path; supports COUNT/SUM/AVG."""
+    assert query.spec.k == 2, "streaming path covers two-table joins"
+    cfg = cfg or BASConfig()
+    rng = np.random.default_rng(seed)
+    query.oracle.set_budget(query.budget)
+    e1 = np.asarray(query.spec.embeddings[0], np.float32)
+    e2 = np.asarray(query.spec.embeddings[1], np.float32)
+    n1, n2 = e1.shape[0], e2.shape[0]
+    t0 = time.perf_counter()
+
+    b = query.budget
+    b1 = max(int(round(cfg.pilot_fraction * b)), 8)
+
+    strat = stratify_streaming(e1, e2, cfg.alpha, b, cfg, n_bins=n_bins,
+                               use_kernel=use_kernel)
+    k = strat.num_strata
+    sizes = strat.stratum_sizes()
+    top_set = set(strat.order.tolist())
+
+    # full-space sampling distribution pieces for D_0 rejection sampling
+    row_sums = np.zeros(n1, np.float64)
+    B = 4096
+    for s in range(0, n1, B):
+        row_sums[s : s + B] = pair_weights(
+            e1[s : s + B], e2, cfg.weight_exponent, cfg.weight_floor
+        ).sum(axis=1)
+    top_i = strat.order // n2
+    top_j = strat.order % n2
+    top_w = _pairwise_w(e1, e2, top_i, top_j, cfg)
+    p_top = float(((1.0 / n1) * top_w / row_sums[top_i]).sum())
+
+    per_idx = [None] + [strat.stratum_indices(i) for i in range(1, k + 1)]
+    per_w = [None] + [
+        _pairwise_w(e1, e2, ix // n2, ix % n2, cfg) for ix in per_idx[1:]
+    ]
+    weight_sums = np.zeros(k + 1, np.float64)
+    weight_sums[0] = max(row_sums.sum() - top_w.sum(), 0.0)
+    for i in range(1, k + 1):
+        weight_sums[i] = per_w[i].sum()
+
+    def sample_stratum(i, n):
+        if i == 0:
+            idx, p = _walk_rejection_sample(e1, e2, row_sums, top_set, n, cfg, rng)
+            q = p / max(1.0 - p_top, 1e-12)   # exact prob within D_0
+        else:
+            pos, q = flat_sample(per_w[i], n, rng, cfg.defensive_mix)
+            idx = per_idx[i][pos]
+        tup = flat_to_tuples(idx, (n1, n2))
+        o = query.oracle.label(tup)
+        g = query.attr()(tup)
+        return StratumSample(o=o, g=g, q=q, size=int(sizes[i]))
+
+    # ---- pilot ---------------------------------------------------------
+    shares = weight_sums / max(weight_sums.sum(), 1e-300)
+    n_pilot = np.maximum((shares * b1).astype(np.int64), 2)
+    while n_pilot.sum() > b1 and n_pilot.max() > 2:
+        n_pilot[np.argmax(n_pilot)] -= 1
+    samples = [None] * (k + 1)
+    for i in range(k + 1):
+        if sizes[i] > 0:
+            samples[i] = sample_stratum(i, int(n_pilot[i]))
+    sigma2 = np.zeros(k + 1)
+    for i, s in enumerate(samples):
+        if s is not None and s.n > 1:
+            t = s.sum_terms() if query.agg is not Agg.COUNT else s.count_terms()
+            sigma2[i] = float(np.var(t, ddof=1))
+
+    # ---- allocate + execute --------------------------------------------
+    b2_eff = b - query.oracle.calls
+    allocation = alloc_mod.argmin_beta(sigma2, weight_sums, sizes, b2_eff,
+                                       cfg.exact_beta_max_k)
+    beta = set(int(x) for x in allocation.beta)
+    blocked_o, blocked_g = [], []
+    for i in sorted(beta):
+        tup = flat_to_tuples(per_idx[i], (n1, n2))
+        blocked_o.append(query.oracle.label(tup))
+        blocked_g.append(query.attr()(tup))
+    blocked = BlockedRegime(
+        o=np.concatenate(blocked_o) if blocked_o else np.zeros(0),
+        g=np.concatenate(blocked_g) if blocked_g else np.zeros(0),
+    )
+    sampled_ids = [i for i in range(k + 1) if i not in beta and sizes[i] > 0]
+    remaining = b - query.oracle.calls
+    if remaining > 2 * max(len(sampled_ids), 1):
+        w_s = np.array([weight_sums[i] for i in sampled_ids])
+        share = w_s / max(w_s.sum(), 1e-300)
+        n_main = np.maximum((share * remaining).astype(np.int64), 1)
+        while n_main.sum() > remaining:
+            n_main[np.argmax(n_main)] -= 1
+        for j, i in enumerate(sampled_ids):
+            if n_main[j] > 0:
+                new = sample_stratum(i, int(n_main[j]))
+                samples[i] = new if samples[i] is None else samples[i].merge(new)
+
+    live = [samples[i] for i in range(k + 1)
+            if i not in beta and samples[i] is not None]
+    est, ci = bootstrap_t_ci(live, blocked, query.agg, query.confidence,
+                             cfg.n_bootstrap, rng)
+    return QueryResult(
+        estimate=float(est), ci=ci, oracle_calls=query.oracle.calls,
+        detail={"mode": "bas_streaming", "beta": sorted(beta),
+                "num_strata": k, "p_top": p_top,
+                "total_s": time.perf_counter() - t0},
+    )

@@ -1,0 +1,171 @@
+"""JoinML query front-end (paper Fig. 1 syntax).
+
+Parses::
+
+    SELECT {AVG|SUM|COUNT|MIN|MAX|MEDIAN}(expr)
+    FROM t1 JOIN t2 [JOIN t3 ...]
+    ON NL('...') [AND ...]
+    ORACLE BUDGET b WITH PROBABILITY p
+
+into a :class:`repro.core.types.Query` against a registered catalog of tables
+(embeddings + attribute columns) and an Oracle, then executes it with the
+selected algorithm (BAS by default).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional
+
+import numpy as np
+
+from . import baselines, bas
+from .oracle import Oracle
+from .types import Agg, AttrFn, BASConfig, JoinSpec, Query, QueryResult
+
+
+@dataclasses.dataclass
+class Table:
+    name: str
+    embeddings: np.ndarray                 # (N, d) unit-normalised
+    columns: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+
+    @property
+    def n(self) -> int:
+        return int(self.embeddings.shape[0])
+
+
+class Catalog:
+    def __init__(self):
+        self.tables: dict[str, Table] = {}
+
+    def register(self, table: Table) -> None:
+        self.tables[table.name] = table
+
+    def __getitem__(self, name: str) -> Table:
+        return self.tables[name]
+
+
+_QUERY_RE = re.compile(
+    r"SELECT\s+(?P<agg>AVG|SUM|COUNT|MIN|MAX|MEDIAN)\s*\(\s*(?P<expr>[^)]*)\s*\)\s+"
+    r"FROM\s+(?P<tables>.+?)\s+ON\s+NL\s*\(\s*'(?P<nl>[^']*)'\s*\)"
+    r"(?:\s+ORACLE\s+BUDGET\s+(?P<budget>\d+))?"
+    r"(?:\s+WITH\s+PROBABILITY\s+(?P<prob>[\d.]+))?\s*;?\s*$",
+    re.IGNORECASE | re.DOTALL,
+)
+
+
+@dataclasses.dataclass
+class ParsedQuery:
+    agg: Agg
+    expr: str
+    table_names: list[str]
+    nl_condition: str
+    budget: Optional[int]
+    confidence: Optional[float]
+
+
+def parse_query(sql: str) -> ParsedQuery:
+    m = _QUERY_RE.match(" ".join(sql.split()))
+    if not m:
+        raise ValueError(f"cannot parse JoinML query: {sql!r}")
+    names = [
+        t.strip() for t in re.split(r"\s+JOIN\s+", m.group("tables"), flags=re.I)
+    ]
+    return ParsedQuery(
+        agg=Agg[m.group("agg").upper()],
+        expr=m.group("expr").strip(),
+        table_names=names,
+        nl_condition=m.group("nl"),
+        budget=int(m.group("budget")) if m.group("budget") else None,
+        confidence=float(m.group("prob")) if m.group("prob") else None,
+    )
+
+
+def _compile_expr(expr: str, tables: list[Table]) -> Optional[AttrFn]:
+    """Compile the aggregate expression into g(idx).
+
+    Supports '*', 'k' (constant), 'tN.col', 'tA.col - tB.col',
+    'ABS(tA.col - tB.col)'.  Table refs are by name or alias position.
+    """
+    expr = expr.strip()
+    if expr in ("*", "", "1"):
+        return None
+    name_to_pos = {t.name: i for i, t in enumerate(tables)}
+
+    def col(ref: str) -> tuple[int, np.ndarray]:
+        tname, cname = ref.strip().split(".")
+        pos = name_to_pos[tname]
+        return pos, tables[pos].columns[cname]
+
+    m = re.match(r"ABS\s*\(\s*(.+)\s*\)\s*$", expr, re.I)
+    absolute = False
+    if m:
+        absolute = True
+        expr = m.group(1)
+    m = re.match(r"([\w.]+)\s*-\s*([\w.]+)\s*$", expr)
+    if m:
+        (p1, c1), (p2, c2) = col(m.group(1)), col(m.group(2))
+
+        def g(idx: np.ndarray) -> np.ndarray:
+            v = c1[idx[:, p1]] - c2[idx[:, p2]]
+            return np.abs(v) if absolute else v
+
+        return g
+    m = re.match(r"([\w.]+)$", expr)
+    if m and "." in expr:
+        p1, c1 = col(expr)
+
+        def g(idx: np.ndarray) -> np.ndarray:
+            v = c1[idx[:, p1]].astype(np.float64)
+            return np.abs(v) if absolute else v
+
+        return g
+    raise ValueError(f"unsupported aggregate expression: {expr!r}")
+
+
+class JoinMLEngine:
+    """Executes JoinML queries.  ``oracle_factory(nl_condition, table_names)``
+    supplies the Oracle for a given join predicate (e.g. a ModelOracle bound to
+    the serving stack, or an ArrayOracle in tests)."""
+
+    def __init__(
+        self,
+        catalog: Catalog,
+        oracle_factory: Callable[[str, list[str]], Oracle],
+        cfg: Optional[BASConfig] = None,
+    ):
+        self.catalog = catalog
+        self.oracle_factory = oracle_factory
+        self.cfg = cfg or BASConfig()
+
+    def build(self, sql: str, budget: Optional[int] = None,
+              confidence: Optional[float] = None) -> Query:
+        pq = parse_query(sql)
+        tables = [self.catalog[n] for n in pq.table_names]
+        spec = JoinSpec(embeddings=[t.embeddings for t in tables])
+        g = _compile_expr(pq.expr, tables)
+        return Query(
+            spec=spec,
+            agg=pq.agg,
+            oracle=self.oracle_factory(pq.nl_condition, pq.table_names),
+            g=g,
+            budget=budget or pq.budget or 10000,
+            confidence=confidence or pq.confidence or 0.95,
+        )
+
+    def execute(self, sql: str, method: str = "bas", seed: int = 0,
+                budget: Optional[int] = None,
+                confidence: Optional[float] = None) -> QueryResult:
+        q = self.build(sql, budget, confidence)
+        if method == "bas":
+            return bas.run_bas(q, self.cfg, seed=seed)
+        if method == "wwj":
+            return baselines.run_wwj(q, self.cfg, seed=seed)
+        if method == "uniform":
+            return baselines.run_uniform(q, seed=seed)
+        if method == "abae":
+            return baselines.run_abae(q, self.cfg, seed=seed)
+        if method == "blazeit":
+            return baselines.run_blazeit(q, self.cfg, seed=seed)
+        raise ValueError(f"unknown method {method!r}")

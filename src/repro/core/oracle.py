@@ -1,0 +1,125 @@
+"""Oracle interfaces + budget ledger.
+
+The Oracle is the expensive pairwise (k-tuple-wise) labeller (paper §2).  Every
+implementation routes through :class:`BudgetLedger`, which (a) enforces the
+user-facing guarantee "the Oracle will not be executed on more than b tuples"
+and (b) caches results so pilot-stage labels are reused in the main stage for
+free (paper §5.3: "to avoid applying Oracle on the same data tuples twice, we
+cache the Oracle results").
+"""
+from __future__ import annotations
+
+import abc
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class BudgetExceeded(RuntimeError):
+    pass
+
+
+class Oracle(abc.ABC):
+    """Labels k-tuples.  ``idx`` is an (n, k) int array of per-table indices."""
+
+    def __init__(self):
+        self._cache: dict = {}
+        self.calls = 0          # unique tuples actually labelled
+        self.requests = 0       # total tuples requested (incl. cache hits)
+        self.budget: Optional[int] = None
+
+    def set_budget(self, budget: Optional[int]) -> None:
+        self.budget = budget
+
+    @abc.abstractmethod
+    def _label(self, idx: np.ndarray) -> np.ndarray:
+        """Raw labelling; returns float array in {0.0, 1.0} of shape (n,)."""
+
+    def label(self, idx: np.ndarray) -> np.ndarray:
+        idx = np.asarray(idx)
+        if idx.ndim == 1:
+            idx = idx[:, None]
+        n = idx.shape[0]
+        self.requests += n
+        keys = [tuple(int(v) for v in row) for row in idx]
+        missing = [i for i, k in enumerate(keys) if k not in self._cache]
+        if missing:
+            if self.budget is not None and self.calls + len(missing) > self.budget:
+                raise BudgetExceeded(
+                    f"oracle budget {self.budget} exceeded: "
+                    f"{self.calls} used, {len(missing)} new requested"
+                )
+            new_idx = idx[missing]
+            new_labels = np.asarray(self._label(new_idx), dtype=np.float64)
+            for j, i in enumerate(missing):
+                self._cache[keys[i]] = float(new_labels[j])
+            self.calls += len(missing)
+        return np.array([self._cache[k] for k in keys], dtype=np.float64)
+
+    @property
+    def remaining(self) -> Optional[int]:
+        return None if self.budget is None else self.budget - self.calls
+
+    def reset(self) -> None:
+        self._cache.clear()
+        self.calls = 0
+        self.requests = 0
+
+
+class ArrayOracle(Oracle):
+    """Ground-truth labels from a dense k-dim {0,1} array (tests/benchmarks)."""
+
+    def __init__(self, truth: np.ndarray):
+        super().__init__()
+        self.truth = np.asarray(truth)
+
+    def _label(self, idx: np.ndarray) -> np.ndarray:
+        return self.truth[tuple(idx[:, j] for j in range(idx.shape[1]))].astype(
+            np.float64
+        )
+
+
+class FnOracle(Oracle):
+    """Labels via an arbitrary vectorised callable (e.g. pairwise chain rule)."""
+
+    def __init__(self, fn: Callable[[np.ndarray], np.ndarray]):
+        super().__init__()
+        self.fn = fn
+
+    def _label(self, idx: np.ndarray) -> np.ndarray:
+        return np.asarray(self.fn(idx), dtype=np.float64)
+
+
+class PairChainOracle(Oracle):
+    """k-way chain-join Oracle from per-edge pair label matrices.
+
+    A k-tuple matches iff every consecutive pair matches — the semantics the
+    paper uses for its multi-way joins (Company-Scale, Ecomm-Q10/Q11).
+    """
+
+    def __init__(self, edge_truth: list[np.ndarray]):
+        super().__init__()
+        self.edge_truth = [np.asarray(m) for m in edge_truth]
+
+    def _label(self, idx: np.ndarray) -> np.ndarray:
+        out = np.ones(idx.shape[0], dtype=np.float64)
+        for e, m in enumerate(self.edge_truth):
+            out *= m[idx[:, e], idx[:, e + 1]].astype(np.float64)
+        return out
+
+
+class ModelOracle(Oracle):
+    """Oracle backed by a served model: scorer(idx) -> probability, thresholded.
+
+    ``scorer`` is expected to be the serving stack's batched pair scorer (see
+    ``repro.serve``); this class only adds the ledger semantics.
+    """
+
+    def __init__(self, scorer: Callable[[np.ndarray], np.ndarray], threshold: float = 0.5):
+        super().__init__()
+        self.scorer = scorer
+        self.threshold = threshold
+
+    def _label(self, idx: np.ndarray) -> np.ndarray:
+        probs = np.asarray(self.scorer(idx), dtype=np.float64)
+        return (probs >= self.threshold).astype(np.float64)

@@ -1,0 +1,95 @@
+"""Embedding similarity and sampling weights (paper §2, §5.1).
+
+All similarity math is JAX (jit-compiled, shardable); the outputs the
+statistical layer needs (weight vectors, sums) are returned as float64 numpy
+for numerically robust aggregation.
+
+Weight convention: embeddings are unit-normalised, so ``E1 @ E2.T`` is the
+cosine similarity.  The paper treats similarity as an (approximate) match
+probability, so we map it to a strictly positive weight::
+
+    w = max(clip(cos, 0, 1), floor) ** exponent
+
+The floor keeps every tuple reachable (a zero sampling probability would break
+unbiasedness for false negatives — the exact failure mode of blocking the
+paper is fixing); the exponent reproduces the Fig. 13b sensitivity knob.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def normalize(emb: np.ndarray) -> np.ndarray:
+    emb = np.asarray(emb, dtype=np.float32)
+    norm = np.linalg.norm(emb, axis=-1, keepdims=True)
+    return emb / np.maximum(norm, 1e-12)
+
+
+@functools.partial(jax.jit, static_argnames=("exponent", "floor"))
+def _pair_weights_jax(e1, e2, exponent: float, floor: float):
+    sim = jnp.dot(e1, e2.T, preferred_element_type=jnp.float32)
+    sim = jnp.clip(sim, 0.0, 1.0)
+    w = jnp.maximum(sim, floor)
+    if exponent != 1.0:
+        w = w**exponent
+    return w
+
+
+def pair_weights(
+    e1: np.ndarray,
+    e2: np.ndarray,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 8192,
+) -> np.ndarray:
+    """(N1, N2) sampling weights.  Blocked to bound peak memory."""
+    e1 = np.asarray(e1, np.float32)
+    e2 = np.asarray(e2, np.float32)
+    n1 = e1.shape[0]
+    if n1 <= block:
+        return np.asarray(_pair_weights_jax(e1, e2, exponent, floor), np.float64)
+    out = np.empty((n1, e2.shape[0]), np.float64)
+    for s in range(0, n1, block):
+        out[s : s + block] = np.asarray(
+            _pair_weights_jax(e1[s : s + block], e2, exponent, floor), np.float64
+        )
+    return out
+
+
+def chain_weights(
+    embeddings: list[np.ndarray],
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+) -> np.ndarray:
+    """Flattened (N1*...*Nk,) weights: product of consecutive pair weights.
+
+    Paper Alg. 2 line 4: W(t) = prod_j sim(E(t_j), E(t_{j+1})).  Dense path —
+    only used when the cross product fits in memory; the streaming/NN path in
+    ``stratify.py`` covers the rest.
+    """
+    sizes = [e.shape[0] for e in embeddings]
+    w = np.ones((1,), np.float64)
+    # w has shape (prod(sizes[:i+1]),) after step i
+    for i in range(len(embeddings) - 1):
+        pw = pair_weights(embeddings[i], embeddings[i + 1], exponent, floor)
+        if i == 0:
+            w = pw.reshape(-1)
+        else:
+            # w: (prod(sizes[:i+1]),) indexed by (..., t_i); extend with t_{i+1}
+            w = (w.reshape(-1, sizes[i])[:, :, None] * pw[None, :, :]).reshape(-1)
+    return w
+
+
+def flat_to_tuples(flat_idx: np.ndarray, sizes: tuple) -> np.ndarray:
+    """(n,) flat cross-product indices -> (n, k) per-table indices."""
+    return np.stack(np.unravel_index(np.asarray(flat_idx), sizes), axis=1).astype(
+        np.int64
+    )
+
+
+def tuples_to_flat(idx: np.ndarray, sizes: tuple) -> np.ndarray:
+    return np.ravel_multi_index(tuple(idx[:, j] for j in range(idx.shape[1])), sizes)

@@ -1,0 +1,190 @@
+"""Stratification of the cross product (paper Alg. 4 lines 1-5).
+
+Two paths:
+
+* **dense/exact** — materialised flat weights, one argsort; strata are
+  contiguous index ranges of the descending order.  Used when the cross
+  product fits in memory (paper's own prototype does the same with SortDesc).
+* **streaming/histogram** — TPU-native redesign (DESIGN.md §3): a blocked
+  similarity matmul fused with a histogram (Pallas kernel ``sim_hist``; jnp
+  fallback here) yields the global score distribution in O(bins) memory; the
+  top-m threshold is the histogram CDF quantile and a second pass collects the
+  indices above it.  This replaces the paper's O(N^2 log N^2) sort with two
+  O(N^2) streaming passes and never materialises the cross product.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .types import BASConfig
+
+
+@dataclasses.dataclass
+class Stratification:
+    """Strata over a flat pair space.
+
+    ``order``: flat indices sorted by weight descending (top region only for
+    streaming mode — then ``order`` covers exactly the maximum blocking
+    regime and ``rest_mask`` identifies D_0 implicitly).
+    ``bounds``: (K+1,) ints; stratum i (1-indexed as in the paper) is
+    ``order[bounds[i-1]:bounds[i]]``.  D_0 is everything not in ``order[:bounds[-1]]``.
+    """
+
+    order: np.ndarray
+    bounds: np.ndarray
+    n_total: int
+
+    @property
+    def num_strata(self) -> int:
+        return len(self.bounds) - 1
+
+    def stratum_indices(self, i: int) -> np.ndarray:
+        """Flat indices of stratum i in {1..K}."""
+        assert 1 <= i <= self.num_strata
+        return self.order[self.bounds[i - 1] : self.bounds[i]]
+
+    def stratum_sizes(self) -> np.ndarray:
+        """Sizes of [D_0, D_1, ..., D_K]."""
+        top = np.diff(self.bounds)
+        d0 = self.n_total - int(self.bounds[-1])
+        return np.concatenate([[d0], top]).astype(np.int64)
+
+    def blocking_regime_size(self) -> int:
+        return int(self.bounds[-1])
+
+    def d0_mask(self, n: int) -> np.ndarray:
+        m = np.ones(n, dtype=bool)
+        m[self.order[: self.bounds[-1]]] = False
+        return m
+
+
+def auto_num_strata(alpha: float, budget: int, cfg: BASConfig) -> int:
+    """Paper §5.3/§5.5: K s.t. each stratum gets >= ~1000 Oracle budget,
+    clamped to [min_strata, max_strata]."""
+    k = int(alpha * budget) // cfg.budget_per_stratum
+    return int(np.clip(k, cfg.min_strata, cfg.max_strata))
+
+
+def stratify_dense(
+    weights: np.ndarray, alpha: float, budget: int, cfg: BASConfig
+) -> Stratification:
+    """Exact stratification by sorting flat weights descending."""
+    weights = np.asarray(weights).reshape(-1)
+    n = weights.shape[0]
+    m = min(int(round(alpha * budget)), n)
+    k = auto_num_strata(alpha, budget, cfg)
+    k = max(1, min(k, m)) if m > 0 else 0
+    if m == 0:
+        return Stratification(
+            order=np.empty((0,), np.int64), bounds=np.zeros((1,), np.int64), n_total=n
+        )
+    # argpartition for top-m then sort only those (O(n + m log m))
+    if m < n:
+        top = np.argpartition(weights, n - m)[n - m :]
+    else:
+        top = np.arange(n)
+    top = top[np.argsort(weights[top])[::-1]]
+    bounds = np.round(np.linspace(0, m, k + 1)).astype(np.int64)
+    return Stratification(order=top.astype(np.int64), bounds=bounds, n_total=n)
+
+
+# ----------------------------------------------------------------------------
+# Streaming/histogram path (jnp fallback of the sim_hist Pallas kernel).
+# ----------------------------------------------------------------------------
+
+def weight_histogram(
+    e1: np.ndarray,
+    e2: np.ndarray,
+    n_bins: int = 4096,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+    use_kernel: bool = False,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Histogram of pair weights over the (never materialised) cross product.
+
+    Returns (counts[n_bins], edges[n_bins+1]) with edges spanning [0, 1].
+    """
+    from .similarity import pair_weights  # local import to avoid cycle
+
+    if use_kernel:
+        from repro.kernels.sim_hist import ops as sim_hist_ops
+
+        return sim_hist_ops.sim_hist(e1, e2, n_bins, exponent, floor)
+
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    counts = np.zeros(n_bins, np.int64)
+    n1 = e1.shape[0]
+    for s in range(0, n1, block):
+        w = pair_weights(e1[s : s + block], e2, exponent, floor)
+        c, _ = np.histogram(w, bins=edges)
+        counts += c
+    return counts, edges
+
+
+def threshold_for_top_m(counts: np.ndarray, edges: np.ndarray, m: int) -> float:
+    """Largest bin edge t such that #weights >= t is >= m (CDF from the top)."""
+    csum = np.cumsum(counts[::-1])[::-1]  # csum[i] = #weights in bins >= i
+    ok = np.nonzero(csum >= m)[0]
+    if len(ok) == 0:
+        return float(edges[0])
+    return float(edges[ok[-1]])
+
+
+def collect_top(
+    e1: np.ndarray,
+    e2: np.ndarray,
+    threshold: float,
+    m_cap: int,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+) -> np.ndarray:
+    """Second streaming pass: flat indices of pairs with weight >= threshold,
+    sorted by weight descending, truncated to m_cap."""
+    from .similarity import pair_weights
+
+    n1, n2 = e1.shape[0], e2.shape[0]
+    idx_chunks, w_chunks = [], []
+    for s in range(0, n1, block):
+        w = pair_weights(e1[s : s + block], e2, exponent, floor)
+        r, c = np.nonzero(w >= threshold)
+        idx_chunks.append(((r + s).astype(np.int64) * n2 + c))
+        w_chunks.append(w[r, c])
+    idx = np.concatenate(idx_chunks) if idx_chunks else np.empty(0, np.int64)
+    w = np.concatenate(w_chunks) if w_chunks else np.empty(0, np.float64)
+    order = np.argsort(w)[::-1][:m_cap]
+    return idx[order]
+
+
+def stratify_streaming(
+    e1: np.ndarray,
+    e2: np.ndarray,
+    alpha: float,
+    budget: int,
+    cfg: BASConfig,
+    n_bins: int = 4096,
+    use_kernel: bool = False,
+) -> Stratification:
+    """Histogram-thresholded stratification; equal-size strata like the dense
+    path but the threshold (hence membership at the boundary) is bin-resolution
+    approximate.  Strata remain exactly equal-sized; only *which* borderline
+    pairs land in D_K vs D_0 can differ — the estimator stays unbiased because
+    stratum membership is deterministic given the data."""
+    n = e1.shape[0] * e2.shape[0]
+    m = min(int(round(alpha * budget)), n)
+    k = auto_num_strata(alpha, budget, cfg)
+    k = max(1, min(k, m)) if m > 0 else 0
+    if m == 0:
+        return Stratification(np.empty(0, np.int64), np.zeros(1, np.int64), n)
+    counts, edges = weight_histogram(
+        e1, e2, n_bins, cfg.weight_exponent, cfg.weight_floor, use_kernel=use_kernel
+    )
+    thr = threshold_for_top_m(counts, edges, m)
+    order = collect_top(e1, e2, thr, m, cfg.weight_exponent, cfg.weight_floor)
+    m_eff = len(order)
+    k = max(1, min(k, m_eff))
+    bounds = np.round(np.linspace(0, m_eff, k + 1)).astype(np.int64)
+    return Stratification(order=order, bounds=bounds, n_total=n)

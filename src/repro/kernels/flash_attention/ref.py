@@ -1,0 +1,25 @@
+"""Pure-jnp oracle: exact softmax attention with causal/window masks."""
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, causal=True, window=0):
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, sq, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bngsd,bntd->bngst", qf, kf) * d**-0.5
+    sq_, skv = s.shape[-2], s.shape[-1]
+    qp = jnp.arange(sq_)[:, None]
+    kp = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq_, skv), bool)
+    if causal:
+        mask = qp >= kp
+    if window > 0:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask, s, -1e30)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    o = jnp.einsum("bngst,bntd->bngsd", p, vf)
+    return o.reshape(b, hq, sq, d).astype(q.dtype)

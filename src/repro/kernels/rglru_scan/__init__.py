@@ -1,0 +1,1 @@
+from .ops import rglru_scan  # noqa: F401

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: RG-LRU diagonal recurrence via lax.scan."""
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(a, g):
+    """a, g: (B, T, R).  h_t = a_t h_{t-1} + g_t, h_0 = 0.  Returns (B,T,R)."""
+    af = a.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    _, hs = jax.lax.scan(step, jnp.zeros(af.shape[::2], jnp.float32)[ :, :],
+                         (af.swapaxes(0, 1), gf.swapaxes(0, 1)))
+    return hs.swapaxes(0, 1)

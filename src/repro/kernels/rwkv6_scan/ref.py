@@ -1,0 +1,22 @@
+"""Pure-jnp oracle: RWKV6 recurrence via lax.scan (matches
+repro.models.recurrent.rwkv_time_mix inner loop)."""
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u):
+    """r,k,v,w: (B, H, T, hd); u: (H, hd).  Returns (B, H, T, hd) f32."""
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    b, h, t, hd = rf.shape
+    s0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B, H, hd)
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    xs = tuple(x.transpose(2, 0, 1, 3) for x in (rf, kf, vf, wf))
+    _, outs = jax.lax.scan(step, s0, xs)
+    return outs.transpose(1, 2, 0, 3)

@@ -1,0 +1,1 @@
+from .ops import sim_hist  # noqa: F401

@@ -1,0 +1,48 @@
+"""Public op: fused similarity histogram with numpy in/out for the core
+stratifier.  Uses the Pallas kernel (interpret on CPU, compiled on TPU) and
+pads inputs to block multiples."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernel import sim_hist_pallas
+from .ref import sim_hist_ref  # noqa: F401  (oracle for tests/benchmarks)
+
+
+def _pad(e, mult):
+    n = e.shape[0]
+    pad = (-n) % mult
+    if pad:
+        e = np.concatenate([e, np.zeros((pad, e.shape[1]), e.dtype)], axis=0)
+    return e, pad
+
+
+def sim_hist(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, block=256,
+             interpret=None):
+    """Returns (counts[n_bins], edges[n_bins+1]); histogram of pair weights.
+
+    Padding rows produce weight exactly ``floor`` (zero similarity); their
+    counts are subtracted from the floor bin afterwards.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    e1 = np.asarray(e1, np.float32)
+    e2 = np.asarray(e2, np.float32)
+    n1, n2 = e1.shape[0], e2.shape[0]
+    bm = min(block, max(8, 1 << (n1 - 1).bit_length()))
+    bn = min(block, max(8, 1 << (n2 - 1).bit_length()))
+    e1p, p1 = _pad(e1, bm)
+    e2p, p2 = _pad(e2, bn)
+    counts = np.asarray(
+        sim_hist_pallas(
+            jnp.asarray(e1p), jnp.asarray(e2p), n_bins=n_bins,
+            exponent=exponent, floor=floor, bm=bm, bn=bn, interpret=interpret,
+        )
+    ).astype(np.int64)
+    # remove padded-pair contributions (they land in the floor bin)
+    n_pad_pairs = e1p.shape[0] * e2p.shape[0] - n1 * n2
+    if n_pad_pairs:
+        fb = min(int((floor**exponent) * n_bins), n_bins - 1)
+        counts[fb] -= n_pad_pairs
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    return counts, edges

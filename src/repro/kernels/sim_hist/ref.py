@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the sim_hist kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def sim_hist_ref(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3):
+    scores = jnp.dot(
+        e1.astype(jnp.float32), e2.astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )
+    w = jnp.clip(scores, 0.0, 1.0)
+    w = jnp.maximum(w, floor)
+    if exponent != 1.0:
+        w = w**exponent
+    idx = jnp.clip((w * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    return jnp.zeros((n_bins,), jnp.int32).at[idx.reshape(-1)].add(1)

@@ -1,0 +1,1 @@
+from .ops import sim_topk  # noqa: F401

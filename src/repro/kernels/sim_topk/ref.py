@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for sim_topk."""
+import jax
+import jax.numpy as jnp
+
+
+def sim_topk_ref(e1, e2, k=8):
+    scores = jnp.clip(
+        jnp.dot(e1.astype(jnp.float32), e2.astype(jnp.float32).T), 0.0, 1.0
+    )
+    vals, idx = jax.lax.top_k(scores, k)
+    return vals, idx.astype(jnp.int32)

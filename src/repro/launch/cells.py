@@ -1,0 +1,245 @@
+"""Dry-run cell definitions: (architecture x input shape) -> jittable step,
+input ShapeDtypeStructs with shardings, and roofline trip-count hints.
+
+Shapes (assigned): train_4k (train_step), prefill_32k (forward),
+decode_32k / long_500k (serve_step: one token against a KV cache/state).
+``long_500k`` requires sub-quadratic sequence mixing and is skipped for pure
+full-attention architectures (documented in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config
+from repro.models import init_cache, init_params, forward, decode_step
+from repro.models.config import ModelConfig
+from repro.models.partition import param_logical_axes
+from repro.launch.sharding import (
+    DECODE_RULES,
+    SERVE_RULES,
+    TRAIN_RULES,
+    sharding_for,
+    sharding_context,
+    spec_for,
+)
+from repro.train import OptimizerConfig, init_opt_state, make_train_step
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+DEFAULT_MICROBATCHES = 8
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return False, "needs sub-quadratic attention (pure full-attention arch)"
+    return True, ""
+
+
+def all_cells():
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            out.append((arch, shape))
+    return out
+
+
+# ----------------------------------------------------------------------------
+# logical axes for batch inputs and caches
+# ----------------------------------------------------------------------------
+
+def _cache_logical_axes(cache) -> dict:
+    base = {
+        "k": ("batch", "seq", "kv_heads", "head_dim"),
+        "v": ("batch", "seq", "kv_heads", "head_dim"),
+        "xk": ("batch", "frames", "kv_heads", "head_dim"),
+        "xv": ("batch", "frames", "kv_heads", "head_dim"),
+        "s": ("batch", "heads", None, None),
+        "last_time": ("batch", "embed"),
+        "last_chan": ("batch", "embed"),
+        "h": ("batch", "rnn"),
+        "conv": ("batch", None, "rnn"),
+        "window": (),
+    }
+    import jax.tree_util as jtu
+
+    def spec(path, leaf):
+        keys = [p.key for p in path if hasattr(p, "key")]
+        name = keys[-1] if keys else ""
+        if name.startswith("l") and name.endswith("_k"):
+            name = "k"
+        if name.startswith("l") and name.endswith("_v"):
+            name = "v"
+        b = base.get(name, (None,) * getattr(leaf, "ndim", 0))
+        extra = getattr(leaf, "ndim", 0) - len(b)
+        if extra < 0:
+            b = b[-leaf.ndim:] if leaf.ndim else ()
+            extra = 0
+        return (None,) * extra + tuple(b)
+
+    flat, treedef = jtu.tree_flatten_with_path(cache)
+    return jtu.tree_unflatten(treedef, [spec(p, l) for p, l in flat])
+
+
+def _sds(shape, dtype, logical, mesh, rules):
+    return jax.ShapeDtypeStruct(
+        shape, dtype, sharding=sharding_for(logical, shape, mesh, rules)
+    )
+
+
+def _tree_sds(shapes_tree, logical_tree, mesh, rules):
+    is_spec = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+        isinstance(e, (str, type(None))) for e in x
+    )
+    return jax.tree.map(
+        lambda sds, logical: jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype,
+            sharding=sharding_for(logical, sds.shape, mesh, rules),
+        ),
+        shapes_tree,
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, rules) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    sh = SHAPES[shape_name]
+    b, s = sh["batch"], sh["seq"]
+    batch: dict = {}
+    if sh["kind"] in ("train", "prefill"):
+        s_text = s - (cfg.num_patches if cfg.num_patches else 0)
+        batch["tokens"] = _sds((b, s_text), jnp.int32, ("batch", None), mesh, rules)
+        if cfg.family == "encdec":
+            batch["frames"] = _sds(
+                (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16,
+                ("batch", None, None), mesh, rules,
+            )
+        if cfg.num_patches:
+            batch["patches"] = _sds(
+                (b, cfg.num_patches, cfg.d_model), jnp.bfloat16,
+                ("batch", None, None), mesh, rules,
+            )
+    else:
+        batch["tokens"] = _sds((b, 1), jnp.int32, ("batch", None), mesh, rules)
+    return batch
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_name: str
+    cfg: ModelConfig
+    fn: object              # jittable callable
+    args: tuple             # ShapeDtypeStructs (sharded)
+    trip_hints: dict
+    rules: dict
+    num_microbatches: int = 1
+
+    @property
+    def kind(self):
+        return SHAPES[self.shape_name]["kind"]
+
+
+def _trip_hints(cfg: ModelConfig, shape_name: str, num_micro: int) -> dict:
+    sh = SHAPES[shape_name]
+    s = sh["seq"]
+    kind = sh["kind"]
+    hints: dict = {"accum_scan": num_micro}
+    if cfg.family == "hybrid":
+        hints["layers_scan"] = cfg.num_layers // len(cfg.pattern)
+    elif cfg.family == "encdec":
+        hints["layers_scan"] = cfg.num_layers
+        hints["encoder_scan"] = cfg.encoder_layers
+    else:
+        hints["layers_scan"] = cfg.num_layers
+    if kind in ("train", "prefill"):
+        s_text = s - (cfg.num_patches or 0)
+        qc = cfg.attn_q_chunk
+        hints["attn_q_scan"] = max(math.ceil(s / qc), 1)
+        if cfg.family == "encdec":
+            hints["enc&attn_q_scan"] = max(math.ceil(cfg.encoder_seq / qc), 1)
+        hints["rwkv_time_scan"] = s
+        hints["rglru_time_scan"] = s
+    else:
+        hints["attn_q_scan"] = 1
+        hints["rwkv_time_scan"] = 1
+        hints["rglru_time_scan"] = 1
+    return hints
+
+
+def build_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    rules_override: Optional[dict] = None,
+    num_microbatches: Optional[int] = None,
+    cfg_overrides: Optional[dict] = None,
+) -> Cell:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    ok, why = cell_supported(cfg, shape_name)
+    if not ok:
+        raise ValueError(f"{arch} x {shape_name} unsupported: {why}")
+    sh = SHAPES[shape_name]
+    kind = sh["kind"]
+
+    if kind == "train":
+        rules = rules_override or TRAIN_RULES
+    elif kind == "prefill":
+        rules = rules_override or SERVE_RULES
+    else:
+        rules = rules_override or DECODE_RULES
+
+    n_micro = num_microbatches or (DEFAULT_MICROBATCHES if kind == "train" else 1)
+
+    # abstract params (+ opt state) with shardings
+    params_shape = jax.eval_shape(functools.partial(init_params, cfg), jax.random.key(0))
+    p_axes = param_logical_axes(params_shape)
+    params_sds = _tree_sds(params_shape, p_axes, mesh, rules)
+    batch = input_specs(cfg, shape_name, mesh, rules)
+
+    if kind == "train":
+        opt_shape = jax.eval_shape(init_opt_state, params_shape)
+        opt_axes = {
+            "m": p_axes, "v": p_axes, "step": (),
+        }
+        opt_sds = _tree_sds(opt_shape, opt_axes, mesh, rules)
+        step = make_train_step(cfg, OptimizerConfig(), num_microbatches=n_micro)
+        args = (params_sds, opt_sds, batch)
+        fn = step
+    elif kind == "prefill":
+        fn = functools.partial(forward, cfg)
+        args = (params_sds, batch)
+    else:
+        cache_shape = jax.eval_shape(lambda: init_cache(cfg, sh["batch"], sh["seq"]))
+        c_axes = _cache_logical_axes(cache_shape)
+        cache_sds = _tree_sds(cache_shape, c_axes, mesh, rules)
+        fn = functools.partial(decode_step, cfg)
+        pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+        args = (params_sds, cache_sds, batch["tokens"], pos_sds)
+
+    return Cell(
+        arch=arch, shape_name=shape_name, cfg=cfg, fn=fn, args=args,
+        trip_hints=_trip_hints(cfg, shape_name, n_micro), rules=rules,
+        num_microbatches=n_micro,
+    )
+
+
+def lower_cell(cell: Cell, mesh):
+    with sharding_context(mesh, cell.rules):
+        lowered = jax.jit(cell.fn).lower(*cell.args)
+    return lowered

@@ -1,0 +1,259 @@
+import os
+
+_DUMP_DIR = f"/tmp/repro_xla_dump_{os.getpid()}"
+# The dry-run (and ONLY the dry-run) needs 512 placeholder devices, plus an
+# HLO pass dump: the CPU backend's float normalization rewrites bf16 buffers
+# to f32 in the final executable, so roofline byte/collective terms are read
+# from the post-SPMD-partitioning module (true dtypes, per-device shapes).
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    f"--xla_dump_to={_DUMP_DIR} "
+    "--xla_dump_hlo_pass_re=spmd-partitioning"
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production mesh (16x16 single pod and 2x16x16 multi-pod), record
+memory_analysis / cost_analysis, and derive the roofline terms from the
+optimized HLO (repro.roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+  python -m repro.launch.dryrun --all --both-meshes
+"""
+import argparse  # noqa: E402
+import dataclasses  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             save_hlo: bool = False, rules_name: str = None,
+             num_microbatches: int = None, cfg_overrides: dict = None,
+             tag: str = "") -> dict:
+    from repro.configs import get_config
+    from repro.launch import cells as C
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline import hw
+    from repro.roofline.hlo_analysis import analyze
+    from repro.roofline.report import model_flops
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "rules": rules_name or "default", "status": "?", "tag": tag,
+        "cfg_overrides": cfg_overrides or {},
+        "num_microbatches": num_microbatches,
+    }
+    cfg = get_config(arch)
+    ok, why = C.cell_supported(cfg, shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _save(rec, out_dir)
+        return rec
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_chips = int(len(mesh.devices.reshape(-1)))
+        rules = _resolve_rules(rules_name)
+        t0 = time.time()
+        cell = C.build_cell(
+            arch, shape_name, mesh, rules_override=rules,
+            num_microbatches=num_microbatches, cfg_overrides=cfg_overrides,
+        )
+        lowered = C.lower_cell(cell, mesh)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+        ma = compiled.memory_analysis()
+        ca = compiled.cost_analysis() or {}
+        hlo = _grab_spmd_hlo() or compiled.as_text()
+        cost = analyze(hlo, cell.trip_hints)
+        # kernel-adjusted: attention score traffic is VMEM-resident in the
+        # validated Pallas flash kernel (see roofline.hlo_analysis docstring)
+        cost_adj = analyze(hlo, cell.trip_hints, vmem_scopes=("attn_q_scan",))
+
+        sh = C.SHAPES[shape_name]
+        mf = model_flops(cfg, sh)
+        compute_s = cost.flops / hw.PEAK_FLOPS_BF16
+        memory_s = cost.bytes / hw.HBM_BW
+        collective_s = cost.collective_bytes / hw.ICI_BW
+        dominant = max(
+            ("compute", compute_s), ("memory", memory_s),
+            ("collective", collective_s), key=lambda kv: kv[1],
+        )[0]
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=dict(
+                argument_bytes=ma.argument_size_in_bytes,
+                output_bytes=ma.output_size_in_bytes,
+                temp_bytes=ma.temp_size_in_bytes,
+                total_bytes=(ma.argument_size_in_bytes + ma.temp_size_in_bytes),
+                hbm_fraction=round(
+                    (ma.argument_size_in_bytes + ma.temp_size_in_bytes)
+                    / hw.HBM_BYTES, 3),
+            ),
+            xla_cost=dict(
+                flops=ca.get("flops", 0.0),
+                bytes=ca.get("bytes accessed", 0.0),
+            ),
+            hlo_flops=cost.flops,
+            hlo_bytes=cost.bytes,
+            collective_bytes=cost.collective_bytes,
+            collective_ops=cost.collective_ops,
+            unresolved_whiles=cost.unresolved_whiles[:8],
+            roofline=dict(
+                compute_s=compute_s,
+                memory_s=memory_s,
+                collective_s=collective_s,
+                dominant=dominant,
+                bound_s=max(compute_s, memory_s, collective_s),
+            ),
+            roofline_kernel_adj=dict(
+                compute_s=cost_adj.flops / hw.PEAK_FLOPS_BF16,
+                memory_s=cost_adj.bytes / hw.HBM_BW,
+                collective_s=cost_adj.collective_bytes / hw.ICI_BW,
+            ),
+            model_flops=mf,
+            model_flops_per_chip=mf / n_chips,
+            useful_compute_ratio=(mf / n_chips) / cost.flops if cost.flops else 0.0,
+            trip_hints=cell.trip_hints,
+            n_chips=n_chips,
+        )
+        if save_hlo:
+            fn = os.path.join(out_dir, f"{_slug(arch)}_{shape_name}_{mesh_name}.hlo.gz")
+            with gzip.open(fn, "wt") as f:
+                f.write(hlo)
+    except Exception as e:  # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    _save(rec, out_dir)
+    return rec
+
+
+def _grab_spmd_hlo():
+    """Return (and consume) the newest post-SPMD-partitioning pass dump."""
+    import glob
+
+    files = glob.glob(os.path.join(_DUMP_DIR, "*after_spmd-partitioning*"))
+    if not files:
+        return None
+    newest = max(files, key=os.path.getmtime)
+    with open(newest) as f:
+        text = f.read()
+    for fn in files:  # keep the dump dir from growing across cells
+        try:
+            os.remove(fn)
+        except OSError:
+            pass
+    return text
+
+
+def _resolve_rules(name):
+    if not name or name == "default":
+        return None
+    from repro.launch import sharding as S
+
+    return getattr(S, name)
+
+
+def _slug(arch):
+    return arch.replace(".", "_").replace("/", "_")
+
+
+def _save(rec, out_dir):
+    os.makedirs(out_dir, exist_ok=True)
+    suffix = "" if rec.get("rules", "default") == "default" else f"_{rec['rules']}"
+    if rec.get("tag"):
+        suffix += f"_{rec['tag']}"
+    fn = os.path.join(
+        out_dir, f"{_slug(rec['arch'])}_{rec['shape']}_{rec['mesh']}{suffix}.json"
+    )
+    with open(fn, "w") as f:
+        json.dump(rec, f, indent=1, default=float)
+
+
+def _parse_cfg(kvs):
+    out = {}
+    for kv in kvs or []:
+        k, v = kv.split("=", 1)
+        if v in ("True", "true"):
+            v = True
+        elif v in ("False", "false"):
+            v = False
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--rules", default=None, help="sharding rule set name")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--cfg", action="append", default=None,
+                    help="model-config override key=value (repeatable)")
+    ap.add_argument("--tag", default="", help="variant tag for output files")
+    args = ap.parse_args()
+    cfg_overrides = _parse_cfg(args.cfg)
+
+    from repro.launch import cells as C
+
+    if args.all:
+        todo = C.all_cells()
+    else:
+        assert args.arch and args.shape, "--arch and --shape or --all"
+        todo = [(args.arch, args.shape)]
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    n_ok = n_skip = n_err = 0
+    for arch, shape in todo:
+        for mp in meshes:
+            rec = run_cell(arch, shape, mp, args.out, args.save_hlo, args.rules,
+                           args.microbatches, cfg_overrides, args.tag)
+            tag = rec["status"]
+            if tag == "ok":
+                n_ok += 1
+                r = rec["roofline"]
+                print(
+                    f"[ok]   {arch:24s} {shape:12s} {rec['mesh']:8s} "
+                    f"compile={rec['compile_s']:7.1f}s "
+                    f"C={r['compute_s']:.3e} M={r['memory_s']:.3e} "
+                    f"X={r['collective_s']:.3e} dom={r['dominant']:10s} "
+                    f"mem/chip={rec['memory']['total_bytes']/2**30:.2f}GiB",
+                    flush=True,
+                )
+            elif tag == "skipped":
+                n_skip += 1
+                print(f"[skip] {arch:24s} {shape:12s} {rec['mesh']:8s} {rec['reason']}",
+                      flush=True)
+            else:
+                n_err += 1
+                print(f"[ERR]  {arch:24s} {shape:12s} {rec['mesh']:8s} {rec['error']}",
+                      flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Parameter partitioning: logical axes per parameter leaf, derived from the
+leaf's path and rank (t5x-style path rules) so the spec never drifts from the
+param tree structure.
+
+Logical names used on params:
+  "fsdp"      — dim sharded over the FSDP axes (pod, data) in training rules
+  "model_dim" — dim sharded over the tensor-parallel "model" axis
+  "vocab"     — vocabulary dim ("model" axis)
+  "expert"    — MoE expert dim ("model" axis, expert parallelism)
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+# (key name) -> base logical axes (without any stacked-layer leading dims)
+_RULES = {
+    "embed": ("vocab", "fsdp"),
+    "head": ("fsdp", "vocab"),
+    "patch_proj": ("fsdp", "model_dim"),
+    # attention
+    "wq": ("fsdp", "model_dim"),
+    "wk": ("fsdp", "model_dim"),
+    "wv": ("fsdp", "model_dim"),
+    "wo": ("model_dim", "fsdp"),
+    "bq": ("model_dim",),
+    "bk": ("model_dim",),
+    "bv": ("model_dim",),
+    # mlp
+    "w_gate": ("fsdp", "model_dim"),
+    "w_up": ("fsdp", "model_dim"),
+    "w_down": ("model_dim", "fsdp"),
+    "b_up": ("model_dim",),
+    "b_down": (None,),
+    # moe (rank-3 leaves resolved below)
+    "router": (None, "expert"),
+    # rwkv time mix
+    "w_r": ("fsdp", "model_dim"),
+    "w_k": ("fsdp", "model_dim"),
+    "w_v": ("model_dim", "fsdp"),
+    "w_g": ("fsdp", "model_dim"),
+    "w_o": ("model_dim", "fsdp"),
+    "decay_a": ("fsdp", None),
+    "decay_b": (None, "fsdp"),
+    "bonus_u": (None, None),
+    # rglru
+    "w_x": ("fsdp", "model_dim"),
+    "w_y": ("fsdp", "model_dim"),
+    "conv_w": (None, "model_dim"),
+    "conv_b": ("model_dim",),
+    "w_gate_a": ("fsdp", "model_dim"),
+    "b_gate_a": ("model_dim",),
+    "w_gate_x": ("fsdp", "model_dim"),
+    "b_gate_x": ("model_dim",),
+    "lambda": ("model_dim",),
+}
+
+# Expert weights: EP over "model" on the expert dim; the ff dim shards over
+# the FSDP axes *without* per-layer gathers (each device keeps its ff slice
+# and the down-proj contraction partial-sums) — gathering full expert
+# tensors per layer would move ~5 GB/layer for the 235B MoE.
+_MOE_RULES = {
+    "w_gate": ("expert", None, "fsdp"),
+    "w_up": ("expert", None, "fsdp"),
+    "w_down": ("expert", "fsdp", None),
+}
+
+
+def _leaf_spec(path: tuple, leaf) -> tuple:
+    keys = [p.key for p in path if hasattr(p, "key")]
+    name = keys[-1] if keys else ""
+    in_moe = "moe" in keys
+    if in_moe and name in _MOE_RULES:
+        base = _MOE_RULES[name]
+    elif name in _RULES:
+        base = _RULES[name]
+    else:
+        base = (None,) * leaf.ndim  # norms, scalars, mus
+    extra = leaf.ndim - len(base)
+    if extra < 0:  # e.g. tied/unstacked variant; truncate from the left
+        base = base[-leaf.ndim:]
+        extra = 0
+    return (None,) * extra + tuple(base)
+
+
+def param_logical_axes(params) -> dict:
+    """Tree of logical-axis tuples matching ``params``."""
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths_and_leaves, treedef = flat
+    specs = [_leaf_spec(p, l) for p, l in paths_and_leaves]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def param_shardings(params_shape, mesh, rules):
+    """NamedShardings for a tree of ShapeDtypeStructs (or arrays)."""
+    from repro.launch.sharding import sharding_for
+
+    axes = param_logical_axes(params_shape)
+    return jax.tree.map(
+        lambda spec, leaf: sharding_for(spec, leaf.shape, mesh, rules),
+        axes,
+        params_shape,
+        is_leaf=lambda x: isinstance(x, tuple)
+        and all(isinstance(e, (str, type(None))) for e in x),
+    )

@@ -1,0 +1,223 @@
+"""Recurrent sequence mixers: RWKV6 (Finch) time/channel mix and the RG-LRU
+(RecurrentGemma/Griffin) block.
+
+Both are written as lax.scan recurrences over time (``rwkv_time_scan`` /
+``rglru_time_scan`` named scopes for the roofline analyzer).  The Pallas
+kernels in ``repro.kernels.rwkv6_scan`` / ``rglru_scan`` implement the
+chunked TPU-native versions; these jnp forms are their lowering-compatible
+references and the decode path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.sharding import shard_activation
+from .config import ModelConfig
+from .layers import dense_init, dtype_of
+
+
+# ----------------------------------------------------------------------------
+# RWKV6
+# ----------------------------------------------------------------------------
+
+def rwkv_params(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    lora = cfg.rwkv_decay_lora
+    ks = jax.random.split(key, 12)
+    return {
+        "time": {
+            "mu_r": jnp.full((d,), 0.5, dt),
+            "mu_k": jnp.full((d,), 0.5, dt),
+            "mu_v": jnp.full((d,), 0.5, dt),
+            "mu_g": jnp.full((d,), 0.5, dt),
+            "mu_w": jnp.full((d,), 0.5, dt),
+            "w_r": dense_init(ks[0], (d, d), dt),
+            "w_k": dense_init(ks[1], (d, d), dt),
+            "w_v": dense_init(ks[2], (d, d), dt),
+            "w_g": dense_init(ks[3], (d, d), dt),
+            "w_o": dense_init(ks[4], (d, d), dt),
+            # data-dependent decay (Finch): w = exp(-exp(w0 + tanh(x A) B))
+            "decay_w0": jnp.full((d,), -6.0, jnp.float32),
+            "decay_a": dense_init(ks[5], (d, lora), dt),
+            "decay_b": dense_init(ks[6], (lora, d), dt, scale=0.01),
+            "bonus_u": dense_init(ks[7], (h, hd), jnp.float32, scale=0.1),
+            "ln_x": jnp.ones((d,), jnp.float32),
+        },
+        "channel": {
+            "mu_k": jnp.full((d,), 0.5, dt),
+            "mu_r": jnp.full((d,), 0.5, dt),
+            "w_k": dense_init(ks[8], (d, cfg.d_ff), dt),
+            "w_v": dense_init(ks[9], (cfg.d_ff, d), dt),
+            "w_r": dense_init(ks[10], (d, d), dt),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """x: (B, T, d); last: (B, d) value preceding x[:, 0]."""
+    prev = jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+    return prev
+
+
+def rwkv_time_mix(p, cfg: ModelConfig, x, state, last_x):
+    """RWKV6 attention substitute.
+
+    x: (B, T, d); state: (B, H, hd, hd) f32; last_x: (B, d).
+    Returns (out, new_state, new_last_x).
+    """
+    b, t, d = x.shape
+    hd = cfg.rwkv_head_dim
+    h = d // hd
+    prev = _token_shift(x, last_x)
+
+    def mix(mu):
+        return x + (prev - x) * mu
+
+    r = (mix(p["mu_r"]) @ p["w_r"]).reshape(b, t, h, hd)
+    k = (mix(p["mu_k"]) @ p["w_k"]).reshape(b, t, h, hd)
+    v = (mix(p["mu_v"]) @ p["w_v"]).reshape(b, t, h, hd)
+    g = jax.nn.silu(mix(p["mu_g"]) @ p["w_g"])
+    xw = mix(p["mu_w"])
+    dec = p["decay_w0"] + jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(b, t, h, hd)
+    u = p["bonus_u"]  # (H, hd)
+
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp  # (B, H, hd) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B, H, hd, hd)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., :, None] * s + kv
+        return s, out
+
+    with jax.named_scope("rwkv_time_scan"):
+        state, outs = jax.lax.scan(
+            step,
+            state,
+            (
+                rf.swapaxes(0, 1),
+                kf.swapaxes(0, 1),
+                vf.swapaxes(0, 1),
+                w.swapaxes(0, 1),
+            ),
+        )
+    # outs: (T, B, H, hd) -> (B, T, d)
+    out = outs.swapaxes(0, 1).reshape(b, t, d)
+    # per-head group norm (ln_x)
+    out = out.reshape(b, t, h, hd)
+    mu_ = out.mean(-1, keepdims=True)
+    var = out.var(-1, keepdims=True)
+    out = (out - mu_) * jax.lax.rsqrt(var + 1e-5)
+    out = out.reshape(b, t, d) * p["ln_x"]
+    out = (out.astype(x.dtype) * g) @ p["w_o"]
+    return out, state, x[:, -1, :]
+
+
+def rwkv_channel_mix(p, cfg: ModelConfig, x, last_x):
+    prev = _token_shift(x, last_x)
+    xk = x + (prev - x) * p["mu_k"]
+    xr = x + (prev - x) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_k"]))
+    k = shard_activation(k, ("batch", "seq", "mlp"))
+    return jax.nn.sigmoid(xr @ p["w_r"]) * (k @ p["w_v"]), x[:, -1, :]
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int):
+    hd = cfg.rwkv_head_dim
+    h = cfg.d_model // hd
+    return {
+        "s": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "last_time": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+        "last_chan": jnp.zeros((batch, cfg.d_model), jnp.dtype(cfg.dtype)),
+    }
+
+
+# ----------------------------------------------------------------------------
+# RG-LRU (Griffin / RecurrentGemma)
+# ----------------------------------------------------------------------------
+
+RG_LRU_C = 8.0
+
+
+def rglru_params(key, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    d, r = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, r), dt),
+        "w_y": dense_init(ks[1], (d, r), dt),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, r), dt, scale=0.5),
+        "conv_b": jnp.zeros((r,), dt),
+        "w_gate_a": dense_init(ks[3], (r, r), dt),
+        "b_gate_a": jnp.zeros((r,), jnp.float32),
+        "w_gate_x": dense_init(ks[4], (r, r), dt),
+        "b_gate_x": jnp.zeros((r,), jnp.float32),
+        "lambda": jnp.asarray(
+            np.linspace(0.65, 0.999, r).astype(np.float32)
+        ),  # resolved to Lambda via softplus-параметrisation below
+        "w_o": dense_init(ks[5], (r, d), dt),
+    }
+
+
+def _causal_conv(x, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv via shifted adds (no conv HLO).
+
+    x: (B, T, r); conv_w: (W, r); conv_state: (B, W-1, r) previous inputs.
+    Returns (out, new_conv_state)."""
+    b, t, r = x.shape
+    w = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((b, w - 1, r), x.dtype)
+    ext = jnp.concatenate([conv_state, x], axis=1)  # (B, T+W-1, r)
+    out = jnp.zeros_like(x)
+    for i in range(w):
+        out = out + ext[:, i : i + t, :] * conv_w[w - 1 - i]
+    new_state = ext[:, -(w - 1) :, :] if w > 1 else conv_state
+    return out + conv_b, new_state
+
+
+def rglru_mix(p, cfg: ModelConfig, x, h0, conv_state):
+    """Griffin recurrent block.
+
+    x: (B, T, d); h0: (B, r) f32; conv_state: (B, W-1, r).
+    Returns (out, h_T, new_conv_state)."""
+    b, t, d = x.shape
+    y = jax.nn.gelu(x @ p["w_y"])
+    u = x @ p["w_x"]
+    u = shard_activation(u, ("batch", "seq", "rnn"))
+    u, conv_state = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    rg = jax.nn.sigmoid((u @ p["w_gate_a"]).astype(jnp.float32) + p["b_gate_a"])
+    ig = jax.nn.sigmoid((u @ p["w_gate_x"]).astype(jnp.float32) + p["b_gate_x"])
+    log_a = -RG_LRU_C * jax.nn.softplus(p["lambda"]) * rg  # (B, T, r) f32
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        ig * u.astype(jnp.float32)
+    )
+
+    def step(h, inp):
+        at, gt = inp
+        h = at * h + gt
+        return h, h
+
+    with jax.named_scope("rglru_time_scan"):
+        h_t, hs = jax.lax.scan(step, h0, (a.swapaxes(0, 1), gated.swapaxes(0, 1)))
+    hs = hs.swapaxes(0, 1).astype(x.dtype)  # (B, T, r)
+    out = (y * hs) @ p["w_o"]
+    return out, h_t, conv_state
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.rnn_width), jnp.dtype(cfg.dtype)),
+    }

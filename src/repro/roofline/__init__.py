@@ -1,0 +1,3 @@
+from . import hw  # noqa: F401
+from .hlo_analysis import analyze, parse_hlo  # noqa: F401
+from .report import load_records, model_flops, roofline_fraction, roofline_table  # noqa: F401

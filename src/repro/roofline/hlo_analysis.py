@@ -1,0 +1,329 @@
+"""Optimized-HLO text analyzer: FLOPs, HBM-byte and collective-byte totals
+per device, with while-loop trip-count expansion.
+
+Why not ``compiled.cost_analysis()``: XLA counts a while body ONCE, so any
+scan-over-layers model is undercounted by ~num_layers.  This analyzer builds
+the computation call graph from the HLO text and recurses through fusions,
+calls and whiles; a while's trip count comes from *hints* — the innermost
+``jax.named_scope`` name appearing in the while op's metadata
+(``layers_scan``, ``accum_scan``, ``attn_q_scan``, ``rwkv_time_scan``,
+``rglru_time_scan`` — all scans the model code owns are named).
+
+Byte accounting is a traffic proxy:
+  * dot/convolution — operand + result bytes (weight/activation reads are the
+    true MXU-side traffic; sliced weights are counted via their slice, not
+    the full stacked array);
+  * fusions and other materialising ops — 2 x result bytes (one write + one
+    read by the consumer), with an in-place-stacking correction: a fusion
+    inside a while body whose result's leading dim equals the trip count and
+    whose result type matches an operand is a dynamic-update-slice
+    accumulator and is counted once per loop, not per iteration;
+  * collectives — standard per-device cost factors (all-reduce 2x, rest 1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$")
+_OPCODE_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\],{}]+)+)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+_CALL_ATTR_RE = re.compile(r"(calls|to_apply|body|condition)=%?([\w.\-]+)")
+
+COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+    "all-reduce-start": 2.0,
+    "all-gather-start": 1.0,
+    "collective-permute-start": 1.0,
+}
+
+_SKIP_BYTES = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "broadcast", "reshape",
+}
+
+
+def _shapes_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list
+    attrs: str
+    op_name: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: list
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_ops: dict = dataclasses.field(default_factory=dict)
+    unresolved_whiles: list = dataclasses.field(default_factory=list)
+
+    def __add__(self, o):
+        co = dict(self.collective_ops)
+        for k, v in o.collective_ops.items():
+            co[k] = co.get(k, 0.0) + v
+        return Cost(
+            self.flops + o.flops,
+            self.bytes + o.bytes,
+            self.collective_bytes + o.collective_bytes,
+            co,
+            self.unresolved_whiles + o.unresolved_whiles,
+        )
+
+    def scaled(self, f: float):
+        return Cost(
+            self.flops * f, self.bytes * f, self.collective_bytes * f,
+            {k: v * f for k, v in self.collective_ops.items()},
+            self.unresolved_whiles,
+        )
+
+
+def parse_hlo(text: str) -> dict:
+    """HLO module text -> {computation name: Computation}."""
+    comps: dict = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line.startswith(" "):  # computation header or close
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|=)", line)
+            if m and "{" in line:
+                cur = Computation(m.group(1), [])
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        mo = _OPCODE_RE.match(rest)
+        if not mo:
+            continue
+        result_type, opcode = mo.group(1), mo.group(2)
+        # operands are inside the first (...) after the opcode
+        depth, start, end = 0, rest.find(opcode + "(") + len(opcode), None
+        for i in range(start, len(rest)):
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        args = rest[start + 1 : end] if end else ""
+        attrs = rest[end + 1 :] if end else ""
+        md = _METADATA_RE.search(rest)
+        cur.ops.append(
+            Op(
+                name=name,
+                opcode=opcode,
+                result_type=result_type,
+                operands=_OPERAND_RE.findall(args),
+                attrs=attrs,
+                op_name=md.group(1) if md else "",
+            )
+        )
+    return comps
+
+
+def _dot_flops(op: Op, symtab: dict) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.result_type):
+        out_elems *= d
+    # contraction size from lhs operand shape
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    if not m or not op.operands:
+        return 2.0 * out_elems  # degenerate
+    lhs = symtab.get(op.operands[0])
+    if lhs is None:
+        return 2.0 * out_elems
+    dims = _shape_dims(lhs.result_type)
+    k = 1
+    for idx in m.group(1).split(","):
+        if idx and int(idx) < len(dims):
+            k *= dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+def _innermost_hint(op_name: str, hints: dict) -> Optional[float]:
+    """Most specific matching hint.  Keys may be compound ("a&b"): every part
+    must appear in the op_name; specificity = number of parts, ties broken by
+    the innermost (right-most) occurrence of the last part."""
+    best, best_rank = None, (-1, -1)
+    for key, val in hints.items():
+        parts = key.split("&")
+        if not all(p in op_name for p in parts):
+            continue
+        rank = (len(parts), op_name.rfind(parts[-1]))
+        if rank > best_rank:
+            best, best_rank = float(val), rank
+    return best
+
+
+def analyze(
+    text: str,
+    trip_hints: Optional[dict] = None,
+    vmem_scopes: tuple = (),
+) -> Cost:
+    """Per-device cost of the entry computation with while expansion.
+
+    ``vmem_scopes``: named scopes whose *intermediate* results are VMEM-
+    resident in the fused Pallas kernel (e.g. ``attn_q_scan`` for flash
+    attention — the score/softmax tensors never touch HBM on device).  Ops in
+    those scopes contribute dot-operand bytes (the K/V streaming the kernel
+    really does) but not fusion-result bytes.  This is the kernel-adjusted
+    memory model used in §Perf; the unadjusted numbers are the XLA-lowerable
+    baseline.
+    """
+    trip_hints = trip_hints or {}
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found in HLO text")
+    memo: dict = {}
+
+    def in_vmem_scope(op_name: str) -> bool:
+        return any(s in op_name for s in vmem_scopes)
+
+    def comp_cost(comp: Computation, trip_ctx: float) -> Cost:
+        key = (comp.name, trip_ctx)
+        if key in memo:
+            return memo[key]
+        memo[key] = Cost()  # cycle guard
+        symtab = {op.name: op for op in comp.ops}
+        total = Cost()
+        for op in comp.ops:
+            oc = op.opcode
+            called = dict(_CALL_ATTR_RE.findall(op.attrs))
+            if oc == "while":
+                body = comps.get(called.get("body", ""))
+                cond = comps.get(called.get("condition", ""))
+                trip = _innermost_hint(op.op_name, trip_hints)
+                if trip is None:
+                    trip = 1.0
+                    total.unresolved_whiles.append(op.op_name or op.name)
+                inner = Cost()
+                if body:
+                    inner = inner + comp_cost(body, trip)
+                if cond:
+                    inner = inner + comp_cost(cond, trip)
+                total = total + inner.scaled(trip)
+                continue
+            if oc in ("fusion", "call", "conditional", "custom-call"):
+                # inner dot flops + collectives; bytes at the fusion boundary
+                for attr_name, cname in _CALL_ATTR_RE.findall(op.attrs):
+                    sub = comps.get(cname)
+                    if sub is not None and oc != "custom-call":
+                        sc = comp_cost(sub, 1.0)
+                        total = total + Cost(flops=sc.flops,
+                                             collective_bytes=sc.collective_bytes,
+                                             collective_ops=sc.collective_ops)
+                op_bytes = 2.0 * _shapes_bytes(op.result_type)
+                if in_vmem_scope(op.op_name):
+                    op_bytes = 0.0
+                # in-place scan-stacking accumulator: counted once per loop
+                dims = _shape_dims(op.result_type)
+                same_as_operand = any(
+                    symtab[o].result_type == op.result_type
+                    for o in op.operands if o in symtab
+                )
+                if (
+                    op_bytes and trip_ctx > 1.0
+                    and same_as_operand
+                    and dims
+                    and abs(dims[0] - trip_ctx) < 0.5
+                ):
+                    op_bytes /= trip_ctx
+                total = total + Cost(bytes=op_bytes)
+                continue
+            if oc in ("dot", "convolution"):
+                fl = _dot_flops(op, symtab)
+                if in_vmem_scope(op.op_name):
+                    # kernel streams operands from HBM; score results stay in VMEM
+                    op_bytes = sum(
+                        _shapes_bytes(symtab[o].result_type)
+                        for o in op.operands if o in symtab
+                    )
+                else:
+                    op_bytes = _shapes_bytes(op.result_type) + sum(
+                        _shapes_bytes(symtab[o].result_type)
+                        for o in op.operands if o in symtab
+                    )
+                total = total + Cost(flops=fl, bytes=op_bytes)
+                continue
+            if oc in COLLECTIVES:
+                size = _shapes_bytes(op.result_type)
+                if oc.startswith("reduce-scatter") and op.operands:
+                    o0 = symtab.get(op.operands[0])
+                    if o0:
+                        size = _shapes_bytes(o0.result_type)
+                cb = size * COLLECTIVES[oc]
+                total = total + Cost(
+                    bytes=size, collective_bytes=cb, collective_ops={oc: cb}
+                )
+                continue
+            if oc in _SKIP_BYTES or oc.endswith("-done"):
+                continue
+            if in_vmem_scope(op.op_name):
+                continue
+            op_bytes = 2.0 * _shapes_bytes(op.result_type)
+            dims = _shape_dims(op.result_type)
+            same_as_operand = any(
+                symtab[o].result_type == op.result_type
+                for o in op.operands if o in symtab
+            )
+            if (
+                trip_ctx > 1.0 and same_as_operand and dims
+                and abs(dims[0] - trip_ctx) < 0.5
+            ):
+                op_bytes /= trip_ctx
+            total = total + Cost(bytes=op_bytes)
+        memo[key] = total
+        return total
+
+    return comp_cost(entry, 1.0)

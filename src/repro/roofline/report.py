@@ -1,0 +1,76 @@
+"""Roofline report helpers: analytic MODEL_FLOPS and table generation from
+dry-run JSON records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.models.config import ModelConfig
+from . import hw
+
+
+def model_flops(cfg: ModelConfig, shape: dict) -> float:
+    """Analytic useful FLOPs per step: 6*N*D for training, 2*N*D for prefill,
+    2*N*B for one decode token (N = active params for MoE)."""
+    n = cfg.active_param_count()
+    if shape["kind"] == "train":
+        tokens = shape["batch"] * shape["seq"]
+        return 6.0 * n * tokens
+    if shape["kind"] == "prefill":
+        tokens = shape["batch"] * shape["seq"]
+        return 2.0 * n * tokens
+    return 2.0 * n * shape["batch"]  # decode: one token per sequence
+
+
+def load_records(out_dir: str) -> list:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_table(recs: list, mesh: str = "16x16") -> str:
+    """Markdown roofline table (single-pod records per the assignment)."""
+    rows = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS/chip | useful ratio | mem/chip GiB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if (r.get("mesh") != mesh or r.get("rules", "default") != "default"
+                or r.get("tag")):
+            continue
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped: "
+                f"{r['reason']} | — | — | — |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | |")
+            continue
+        rf = r["roofline"]
+        rows.append(
+            "| {arch} | {shape} | {c:.3e} | {m:.3e} | {x:.3e} | {dom} | "
+            "{mf:.3e} | {ur:.2f} | {mem:.2f} |".format(
+                arch=r["arch"], shape=r["shape"], c=rf["compute_s"],
+                m=rf["memory_s"], x=rf["collective_s"], dom=rf["dominant"],
+                mf=r["model_flops_per_chip"], ur=r["useful_compute_ratio"],
+                mem=r["memory"]["total_bytes"] / 2**30,
+            )
+        )
+    return "\n".join(rows)
+
+
+def roofline_fraction(rec: dict) -> float:
+    """Achieved fraction of the compute roofline: useful model FLOPs per chip
+    over (bound time x peak).  This is the MFU-style score the perf loop
+    drives up."""
+    if rec.get("status") != "ok":
+        return 0.0
+    bound = rec["roofline"]["bound_s"]
+    if bound <= 0:
+        return 0.0
+    return rec["model_flops_per_chip"] / (bound * hw.PEAK_FLOPS_BF16)

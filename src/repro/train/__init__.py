@@ -1,0 +1,10 @@
+from .optimizer import (  # noqa: F401
+    OptimizerConfig,
+    adamw_update,
+    clip_by_global_norm,
+    compress_grads,
+    global_norm,
+    init_opt_state,
+    lr_schedule,
+)
+from .train_loop import make_train_step  # noqa: F401

@@ -1,0 +1,69 @@
+"""Train-step factory: microbatched (gradient-accumulation) loss/grad with
+remat, mixed precision, optional gradient compression, and the AdamW update —
+one jittable function for the launcher and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import loss_fn
+from repro.models.config import ModelConfig
+from .optimizer import OptimizerConfig, adamw_update, compress_grads, init_opt_state
+
+
+def _split_microbatches(batch: dict, n: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n == 0, f"batch {b} not divisible by microbatches {n}"
+        return x.reshape(n, b // n, *x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: Optional[OptimizerConfig] = None,
+    num_microbatches: int = 1,
+):
+    opt_cfg = opt_cfg or OptimizerConfig()
+
+    def grads_of(params, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+        return loss, grads
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches > 1:
+            micro = _split_microbatches(batch, num_microbatches)
+
+            def accum(carry, mb):
+                loss_acc, g_acc = carry
+                loss, grads = grads_of(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads
+                )
+                return (loss_acc + loss, g_acc), ()
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            with jax.named_scope("accum_scan"):
+                (loss_sum, grads), _ = jax.lax.scan(
+                    accum, (jnp.zeros((), jnp.float32), zeros), micro
+                )
+            loss = loss_sum / num_microbatches
+            grads = jax.tree.map(lambda g: g / num_microbatches, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+        grads = compress_grads(grads, opt_cfg.grad_compression)
+        params, opt_state, stats = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **stats}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+__all__ = ["make_train_step", "init_opt_state", "OptimizerConfig"]

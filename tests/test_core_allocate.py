@@ -1,0 +1,87 @@
+import numpy as np
+import pytest
+
+from repro.core.allocate import argmin_beta, budget_assign, estimate_mse
+
+
+def rand_instance(rng, k):
+    sigma2 = rng.lognormal(0, 2, k + 1)
+    wsum = rng.random(k + 1) + 0.01
+    sizes = rng.integers(50, 200, size=k + 1)
+    b2 = int(sizes.sum() * 0.6)
+    return sigma2, wsum, sizes, b2
+
+
+def brute_force(sigma2, wsum, sizes, b2):
+    k = len(sigma2) - 1
+    best, best_mse = None, np.inf
+    for mask_bits in range(1 << k):
+        mask = np.zeros(k + 1, bool)
+        for i in range(1, k + 1):
+            mask[i] = (mask_bits >> (i - 1)) & 1
+        mse = estimate_mse(sigma2, wsum, sizes, mask, b2)
+        if mse < best_mse:
+            best_mse, best = mse, mask.copy()
+    return best, best_mse
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_exact_matches_brute_force(seed):
+    rng = np.random.default_rng(seed)
+    sigma2, wsum, sizes, b2 = rand_instance(rng, 6)
+    alloc = argmin_beta(sigma2, wsum, sizes, b2, exact_max_k=16)
+    _, bf_mse = brute_force(sigma2, wsum, sizes, b2)
+    assert alloc.est_mse == pytest.approx(bf_mse, rel=1e-9)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_greedy_close_to_exact(seed):
+    rng = np.random.default_rng(100 + seed)
+    sigma2, wsum, sizes, b2 = rand_instance(rng, 8)
+    exact = argmin_beta(sigma2, wsum, sizes, b2, exact_max_k=16)
+    greedy = argmin_beta(sigma2, wsum, sizes, b2, exact_max_k=0)
+    # greedy+swap must be feasible and near-optimal (<= 25% worse)
+    assert np.isfinite(greedy.est_mse)
+    assert greedy.est_mse <= exact.est_mse * 1.25 + 1e-12
+
+
+def test_budget_assign_properties():
+    wsum = np.array([1.0, 2.0, 3.0, 4.0])
+    sizes = np.array([1000, 50, 50, 50])
+    mask = np.array([False, False, True, False])
+    n = budget_assign(500, wsum, sizes, mask)
+    # blocked stratum gets its size
+    assert n[2] == 50
+    # remaining budget split ∝ weight over unblocked
+    rem = 500 - 50
+    np.testing.assert_allclose(n[0], rem * 1.0 / 7.0)
+    np.testing.assert_allclose(n[3], rem * 4.0 / 7.0)
+    np.testing.assert_allclose(n[~mask].sum(), rem)
+
+
+def test_blocking_high_variance_stratum_helps():
+    # one stratum dominates variance; blocking it should be chosen
+    sigma2 = np.array([0.1, 1e6, 0.1, 0.1])
+    wsum = np.array([1.0, 1.0, 1.0, 1.0])
+    sizes = np.array([10_000, 100, 100, 100])
+    alloc = argmin_beta(sigma2, wsum, sizes, b2=1000, exact_max_k=16)
+    assert 1 in set(alloc.beta.tolist())
+
+
+def test_infeasible_blocking_rejected():
+    # blocking everything would exceed the budget -> est mse finite only for
+    # feasible subsets
+    sigma2 = np.array([1.0, 1.0])
+    wsum = np.array([1.0, 1.0])
+    sizes = np.array([100, 10_000])
+    alloc = argmin_beta(sigma2, wsum, sizes, b2=500, exact_max_k=16)
+    assert 1 not in set(alloc.beta.tolist())
+    assert np.isfinite(alloc.est_mse)
+
+
+def test_d0_never_blocked():
+    sigma2 = np.array([1e9, 1.0, 1.0])
+    wsum = np.ones(3)
+    sizes = np.array([100, 100, 100])
+    alloc = argmin_beta(sigma2, wsum, sizes, b2=10_000, exact_max_k=16)
+    assert 0 not in set(alloc.beta.tolist())

@@ -1,0 +1,81 @@
+import numpy as np
+import pytest
+
+from repro.core import Agg, ArrayOracle, Catalog, JoinMLEngine, Table, parse_query
+from repro.data import make_clustered_tables
+
+
+def test_parse_paper_examples():
+    pq = parse_query(
+        "SELECT COUNT(*) FROM article JOIN db ON NL('{article.sentence} is "
+        "paraphrased from {db.sentence}.') ORACLE BUDGET 1000000 WITH PROBABILITY 0.95"
+    )
+    assert pq.agg is Agg.COUNT
+    assert pq.table_names == ["article", "db"]
+    assert pq.budget == 1000000
+    assert pq.confidence == 0.95
+
+    pq = parse_query(
+        "SELECT AVG(video1.ts - video2.ts) FROM video1 JOIN video2 "
+        "ON NL('Frame {video1.frame} and Frame {video2.frame} contains the same car.')"
+    )
+    assert pq.agg is Agg.AVG
+    assert pq.expr == "video1.ts - video2.ts"
+
+    pq = parse_query(
+        "SELECT SUM(a.n_answers) FROM a JOIN b JOIN c ON NL('x') ORACLE BUDGET 5"
+    )
+    assert pq.table_names == ["a", "b", "c"]
+
+
+def test_parse_rejects_garbage():
+    with pytest.raises(ValueError):
+        parse_query("SELECT FROM x")
+
+
+@pytest.fixture(scope="module")
+def engine():
+    ds = make_clustered_tables(150, 150, n_entities=200, noise=0.35, seed=31)
+    cat = Catalog()
+    cat.register(Table("video1", ds.emb1, ds.columns1))
+    cat.register(Table("video2", ds.emb2, ds.columns2))
+    truth = ds.truth
+
+    def oracle_factory(nl, names):
+        return ArrayOracle(truth)
+
+    return JoinMLEngine(cat, oracle_factory), ds
+
+
+def test_engine_count(engine):
+    eng, ds = engine
+    truth = float(ds.truth.sum())
+    res = eng.execute(
+        "SELECT COUNT(*) FROM video1 JOIN video2 ON NL('same car') "
+        "ORACLE BUDGET 4000 WITH PROBABILITY 0.95"
+    )
+    assert abs(res.estimate - truth) / max(truth, 1) < 0.6
+    assert res.oracle_calls <= 4000
+
+
+def test_engine_avg_expr(engine):
+    eng, ds = engine
+    res = eng.execute(
+        "SELECT AVG(video2.ts - video1.ts) FROM video1 JOIN video2 "
+        "ON NL('same car') ORACLE BUDGET 4000 WITH PROBABILITY 0.95"
+    )
+    m = ds.truth > 0
+    diffs = (ds.columns2["ts"][None, :] - ds.columns1["ts"][:, None])[m]
+    assert np.isfinite(res.estimate)
+    assert abs(res.estimate - diffs.mean()) < 4 * diffs.std() / np.sqrt(max(m.sum(), 1)) + 0.25 * abs(diffs.mean()) + 50
+
+
+def test_engine_all_methods(engine):
+    eng, ds = engine
+    for method in ("bas", "wwj", "uniform", "abae", "blazeit"):
+        res = eng.execute(
+            "SELECT COUNT(*) FROM video1 JOIN video2 ON NL('same car') "
+            "ORACLE BUDGET 2000 WITH PROBABILITY 0.9",
+            method=method,
+        )
+        assert np.isfinite(res.estimate)

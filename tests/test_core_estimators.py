@@ -1,0 +1,100 @@
+"""Exact-expectation tests: on tiny spaces we *enumerate* the sampling
+distribution, so unbiasedness checks are deterministic (no statistical flake).
+"""
+import numpy as np
+import pytest
+
+from repro.core.estimators import (
+    BlockedRegime,
+    StratumSample,
+    combined_avg,
+    combined_cdf_median,
+    combined_count,
+    combined_extreme,
+    combined_sum,
+    weighted_quantile,
+)
+
+
+def enumerate_expected_sum(o, g, w):
+    """E[HT estimate with n=1 sample] = sum_s q_s * (g_s o_s / q_s) = SUM."""
+    q = w / w.sum()
+    est = 0.0
+    for s in range(len(w)):
+        samp = StratumSample(o=[o[s]], g=[g[s]], q=[q[s]], size=len(w))
+        e, _ = combined_sum([samp], BlockedRegime(np.zeros(0), np.zeros(0)))
+        est += q[s] * e
+    return est
+
+
+def test_ht_sum_exactly_unbiased_by_enumeration():
+    rng = np.random.default_rng(0)
+    o = (rng.random(12) < 0.4).astype(float)
+    g = rng.lognormal(0, 1, 12)
+    w = rng.random(12) + 0.05
+    truth = float((g * o).sum())
+    est = enumerate_expected_sum(o, g, w)
+    np.testing.assert_allclose(est, truth, rtol=1e-12)
+
+
+def test_ht_count_exactly_unbiased_by_enumeration():
+    rng = np.random.default_rng(1)
+    o = (rng.random(9) < 0.5).astype(float)
+    w = rng.random(9) + 0.01
+    q = w / w.sum()
+    est = 0.0
+    for s in range(9):
+        samp = StratumSample(o=[o[s]], g=[1.0], q=[q[s]], size=9)
+        e, _ = combined_count([samp], BlockedRegime(np.zeros(0), np.zeros(0)))
+        est += q[s] * e
+    np.testing.assert_allclose(est, o.sum(), rtol=1e-12)
+
+
+def test_combined_adds_blocked_exactly():
+    blocked = BlockedRegime(o=np.array([1.0, 0.0, 1.0]), g=np.array([2.0, 9.0, 3.0]))
+    samp = StratumSample(o=[1.0, 1.0], g=[4.0, 4.0], q=[0.5, 0.5], size=2)
+    s, _ = combined_sum([samp], blocked)
+    c, _ = combined_count([samp], blocked)
+    # blocked: sum=5, count=2; sampled stratum: each term 4/0.5=8, mean=8
+    assert s == pytest.approx(5.0 + 8.0)
+    assert c == pytest.approx(2.0 + 2.0)
+
+
+def test_avg_ratio_and_bias_correction_direction():
+    blocked = BlockedRegime(o=np.ones(4), g=np.array([1.0, 2.0, 3.0, 4.0]))
+    est, var = combined_avg([], blocked, bias_correction=True)
+    assert est == pytest.approx(2.5)
+    assert var == 0.0
+
+
+def test_extreme_observed():
+    blocked = BlockedRegime(o=np.array([1.0, 1.0]), g=np.array([5.0, -2.0]))
+    samp = StratumSample(o=[1.0, 0.0], g=[7.0, 100.0], q=[0.5, 0.5], size=2)
+    assert combined_extreme([samp], blocked, "max") == 7.0
+    assert combined_extreme([samp], blocked, "min") == -2.0
+    # non-matching values (o=0) never contribute
+    samp2 = StratumSample(o=[0.0], g=[1e9], q=[1.0], size=1)
+    assert combined_extreme([samp2], blocked, "max") == 5.0
+
+
+def test_median_exact_on_blocked_only():
+    g = np.array([1.0, 2.0, 3.0, 4.0, 5.0])
+    blocked = BlockedRegime(o=np.ones(5), g=g)
+    med = combined_cdf_median([], blocked)
+    assert med == 3.0
+
+
+def test_median_ht_weighting():
+    # two sampled positives with very different HT weights: the heavy one
+    # dominates the CDF
+    samp = StratumSample(o=[1.0, 1.0], g=[10.0, 20.0], q=[0.9, 0.01], size=100)
+    med = combined_cdf_median([samp], BlockedRegime(np.zeros(0), np.zeros(0)))
+    assert med == 20.0
+
+
+def test_weighted_quantile_bounds():
+    v = np.array([3.0, 1.0, 2.0])
+    w = np.ones(3)
+    qs = weighted_quantile(v, w, np.array([0.0, 0.5, 1.0]))
+    assert qs[0] == 1.0 and qs[-1] == 3.0
+    assert 1.0 <= qs[1] <= 3.0

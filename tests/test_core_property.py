@@ -1,0 +1,169 @@
+"""Hypothesis property tests on the statistical engine's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core.allocate import argmin_beta, budget_assign, estimate_mse
+from repro.core.estimators import BlockedRegime, StratumSample, combined_count, combined_sum
+from repro.core.similarity import flat_to_tuples, tuples_to_flat
+from repro.core.stratify import stratify_dense, threshold_for_top_m
+from repro.core.types import BASConfig
+
+CFG = BASConfig()
+
+pos_floats = st.floats(min_value=1e-3, max_value=1e3, allow_nan=False)
+
+
+@given(
+    w=hnp.arrays(np.float64, st.integers(10, 200), elements=pos_floats),
+    alpha=st.floats(0.05, 0.9),
+    budget=st.integers(10, 500),
+)
+@settings(max_examples=40, deadline=None)
+def test_stratify_partition_properties(w, alpha, budget):
+    strat = stratify_dense(w, alpha, budget, CFG)
+    sizes = strat.stratum_sizes()
+    assert sizes.sum() == len(w)
+    assert (sizes >= 0).all()
+    m = strat.blocking_regime_size()
+    assert m == min(int(round(alpha * budget)), len(w))
+    assert len(np.unique(strat.order)) == len(strat.order)  # no duplicates
+    if m > 1:
+        ow = w[strat.order]
+        assert np.all(np.diff(ow) <= 1e-9)
+
+
+@given(
+    k=st.integers(1, 8),
+    seed=st.integers(0, 10_000),
+    b2=st.integers(50, 5000),
+)
+@settings(max_examples=40, deadline=None)
+def test_budget_assign_conservation(k, seed, b2):
+    rng = np.random.default_rng(seed)
+    wsum = rng.random(k + 1) + 1e-3
+    sizes = rng.integers(1, 100, size=k + 1)
+    mask = np.zeros(k + 1, bool)
+    mask[1:] = rng.random(k) < 0.4
+    n = budget_assign(b2, wsum, sizes, mask)
+    # blocked strata get exactly their size
+    assert np.all(n[mask] == sizes[mask])
+    # sampled budget = b2 - blocked cost (floored at 0)
+    rem = max(b2 - sizes[mask].sum(), 0)
+    np.testing.assert_allclose(n[~mask].sum(), rem, rtol=1e-9, atol=1e-9)
+    assert (n >= 0).all()
+
+
+@given(k=st.integers(1, 6), seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_argmin_beta_never_worse_than_empty(k, seed):
+    rng = np.random.default_rng(seed)
+    sigma2 = rng.lognormal(0, 1.5, k + 1)
+    wsum = rng.random(k + 1) + 1e-2
+    sizes = rng.integers(10, 80, size=k + 1)
+    b2 = int(sizes.sum())
+    alloc = argmin_beta(sigma2, wsum, sizes, b2, exact_max_k=16)
+    empty = estimate_mse(sigma2, wsum, sizes, np.zeros(k + 1, bool), b2)
+    assert alloc.est_mse <= empty + 1e-9
+
+
+@given(
+    st.integers(1, 5).flatmap(
+        lambda k: st.tuples(
+            st.just(tuple(np.random.default_rng(k).integers(2, 9, size=k))),
+            st.integers(0, 10_000),
+        )
+    )
+)
+@settings(max_examples=30, deadline=None)
+def test_flat_tuple_roundtrip_random(args):
+    sizes, seed = args
+    n_total = int(np.prod(sizes))
+    rng = np.random.default_rng(seed)
+    flat = rng.integers(0, n_total, size=20)
+    tup = flat_to_tuples(flat, sizes)
+    assert (tup < np.array(sizes)).all()
+    np.testing.assert_array_equal(tuples_to_flat(tup, sizes), flat)
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 50))
+@settings(max_examples=30, deadline=None)
+def test_ht_enumeration_unbiased(seed, n):
+    """Exact unbiasedness by enumeration for arbitrary weights/values."""
+    rng = np.random.default_rng(seed)
+    o = (rng.random(n) < 0.5).astype(float)
+    g = rng.lognormal(0, 1, n)
+    w = rng.random(n) + 1e-3
+    q = w / w.sum()
+    expect_sum = 0.0
+    expect_cnt = 0.0
+    for s in range(n):
+        samp = StratumSample(o=[o[s]], g=[g[s]], q=[q[s]], size=n)
+        es, _ = combined_sum([samp], BlockedRegime(np.zeros(0), np.zeros(0)))
+        ec, _ = combined_count([samp], BlockedRegime(np.zeros(0), np.zeros(0)))
+        expect_sum += q[s] * es
+        expect_cnt += q[s] * ec
+    np.testing.assert_allclose(expect_sum, (g * o).sum(), rtol=1e-9)
+    np.testing.assert_allclose(expect_cnt, o.sum(), rtol=1e-9)
+
+
+@given(
+    counts=hnp.arrays(np.int64, st.integers(4, 64), elements=st.integers(0, 1000)),
+    m_frac=st.floats(0.01, 0.99),
+)
+@settings(max_examples=40, deadline=None)
+def test_histogram_threshold_conservative(counts, m_frac):
+    total = int(counts.sum())
+    if total == 0:
+        return
+    edges = np.linspace(0, 1, len(counts) + 1)
+    m = max(int(m_frac * total), 1)
+    thr = threshold_for_top_m(counts, edges, m)
+    # mass at-or-above the threshold bin covers at least m
+    bin_idx = int(np.searchsorted(edges, thr, side="right")) - 1
+    bin_idx = max(min(bin_idx, len(counts) - 1), 0)
+    assert counts[bin_idx:].sum() >= m
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(4, 40),
+       mix=st.floats(0.05, 0.5))
+@settings(max_examples=30, deadline=None)
+def test_defensive_mix_bounds_ht_weights_and_stays_unbiased(seed, n, mix):
+    """Defensive mixture: (a) HT terms bounded by |support|/mix; (b) the
+    estimator stays exactly unbiased (enumeration over the proposal)."""
+    from repro.core.wander import flat_sample
+
+    rng = np.random.default_rng(seed)
+    w = rng.random(n) ** 6 + 1e-9          # heavily skewed weights
+    v = rng.lognormal(0, 1, n)
+    p = w / w.sum()
+    q = (1 - mix) * p + mix / n
+    # (a) bound: 1/q <= n/mix
+    assert (1.0 / q).max() <= n / mix + 1e-6
+    # (b) exact unbiasedness by enumeration: sum_s q_s * v_s/q_s = sum v
+    np.testing.assert_allclose((q * (v / q)).sum(), v.sum(), rtol=1e-9)
+    # and flat_sample really samples from q (probability bookkeeping)
+    pos, q_ret = flat_sample(w, 64, np.random.default_rng(seed), defensive_mix=mix)
+    np.testing.assert_allclose(q_ret, q[pos], rtol=1e-9)
+
+
+def test_streaming_rejection_probabilities_exact_by_enumeration():
+    """The walk+rejection D_0 sampler's claimed probabilities sum to
+    (1 - P(top)) over D_0 — so HT with q = p/(1-P(top)) is exactly unbiased."""
+    from repro.core.similarity import normalize, pair_weights
+    from repro.core.types import BASConfig
+
+    rng = np.random.default_rng(3)
+    e1 = normalize(rng.standard_normal((6, 8)))
+    e2 = normalize(rng.standard_normal((5, 8)))
+    cfg = BASConfig()
+    w = pair_weights(e1, e2, cfg.weight_exponent, cfg.weight_floor)
+    n1, n2 = w.shape
+    row_sums = w.sum(axis=1)
+    p_full = (1.0 / n1) * w / row_sums[:, None]     # the walk distribution
+    np.testing.assert_allclose(p_full.sum(), 1.0, rtol=1e-9)
+    top = {0 * n2 + 1, 3 * n2 + 2, 5 * n2 + 4}      # arbitrary blocking set
+    p_top = sum(p_full[f // n2, f % n2] for f in top)
+    d0 = [f for f in range(n1 * n2) if f not in top]
+    q = np.array([p_full[f // n2, f % n2] for f in d0]) / (1.0 - p_top)
+    np.testing.assert_allclose(q.sum(), 1.0, rtol=1e-9)

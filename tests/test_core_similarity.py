@@ -1,0 +1,63 @@
+import numpy as np
+import pytest
+
+from repro.core.similarity import (
+    chain_weights,
+    flat_to_tuples,
+    normalize,
+    pair_weights,
+    tuples_to_flat,
+)
+
+
+def test_pair_weights_matches_manual():
+    rng = np.random.default_rng(0)
+    e1 = normalize(rng.standard_normal((17, 8)))
+    e2 = normalize(rng.standard_normal((23, 8)))
+    w = pair_weights(e1, e2, exponent=1.0, floor=1e-6)
+    cos = e1.astype(np.float64) @ e2.astype(np.float64).T
+    manual = np.maximum(np.clip(cos, 0, 1), 1e-6)
+    np.testing.assert_allclose(w, manual, rtol=1e-5, atol=1e-6)
+
+
+def test_pair_weights_exponent():
+    rng = np.random.default_rng(1)
+    e1 = normalize(rng.standard_normal((5, 4)))
+    e2 = normalize(rng.standard_normal((7, 4)))
+    w1 = pair_weights(e1, e2, exponent=1.0)
+    w2 = pair_weights(e1, e2, exponent=2.0)
+    np.testing.assert_allclose(w2, w1**2, rtol=1e-5)
+
+
+def test_pair_weights_blocked_consistent():
+    rng = np.random.default_rng(2)
+    e1 = normalize(rng.standard_normal((100, 8)))
+    e2 = normalize(rng.standard_normal((40, 8)))
+    full = pair_weights(e1, e2)
+    blocked = pair_weights(e1, e2, block=16)
+    np.testing.assert_allclose(full, blocked, rtol=1e-6)
+
+
+def test_chain_weights_is_product():
+    rng = np.random.default_rng(3)
+    embs = [normalize(rng.standard_normal((n, 6))) for n in (4, 5, 3)]
+    w = chain_weights(embs)
+    w01 = pair_weights(embs[0], embs[1])
+    w12 = pair_weights(embs[1], embs[2])
+    manual = (w01[:, :, None] * w12[None, :, :]).reshape(-1)
+    np.testing.assert_allclose(w, manual, rtol=1e-6)
+
+
+def test_flat_tuple_roundtrip():
+    sizes = (4, 5, 3)
+    flat = np.arange(4 * 5 * 3)
+    tup = flat_to_tuples(flat, sizes)
+    assert tup.shape == (60, 3)
+    back = tuples_to_flat(tup, sizes)
+    np.testing.assert_array_equal(back, flat)
+
+
+def test_normalize_unit_norm():
+    rng = np.random.default_rng(4)
+    e = normalize(rng.standard_normal((10, 16)) * 7.0)
+    np.testing.assert_allclose(np.linalg.norm(e, axis=1), 1.0, rtol=1e-5)

@@ -1,0 +1,84 @@
+import numpy as np
+
+from repro.core.stratify import (
+    Stratification,
+    auto_num_strata,
+    collect_top,
+    stratify_dense,
+    stratify_streaming,
+    threshold_for_top_m,
+    weight_histogram,
+)
+from repro.core.similarity import normalize, pair_weights
+from repro.core.types import BASConfig
+
+CFG = BASConfig()
+
+
+def test_auto_num_strata_clamps():
+    assert auto_num_strata(0.2, 1000, CFG) == 5        # min K
+    assert auto_num_strata(0.2, 100_000, CFG) == 20    # alpha*b/1000
+    assert auto_num_strata(0.2, 10_000_000, CFG) == 64  # max K
+
+
+def test_stratify_dense_invariants():
+    rng = np.random.default_rng(0)
+    w = rng.random(10_000)
+    strat = stratify_dense(w, alpha=0.2, budget=5000, cfg=CFG)
+    m = strat.blocking_regime_size()
+    assert m == 1000  # alpha * budget
+    # order is sorted descending
+    ow = w[strat.order]
+    assert np.all(np.diff(ow) <= 1e-12)
+    # order really is the global top-m
+    thresh = np.sort(w)[::-1][m - 1]
+    assert ow.min() >= thresh - 1e-12
+    # strata partition the blocking regime into equal (±1) sizes
+    sizes = strat.stratum_sizes()
+    assert sizes[1:].sum() == m
+    assert sizes[0] == 10_000 - m
+    assert sizes[1:].max() - sizes[1:].min() <= 1
+    # strata are similarity-ordered: min weight of stratum i >= max of i+1
+    for i in range(1, strat.num_strata):
+        a = w[strat.stratum_indices(i)]
+        b = w[strat.stratum_indices(i + 1)]
+        assert a.min() >= b.max() - 1e-12
+
+
+def test_stratify_dense_small_space():
+    w = np.array([0.9, 0.1, 0.5])
+    strat = stratify_dense(w, alpha=0.5, budget=100, cfg=CFG)
+    assert strat.blocking_regime_size() == 3  # capped at |D|
+    assert strat.stratum_sizes().sum() == 3
+
+
+def test_histogram_threshold_matches_exact():
+    rng = np.random.default_rng(1)
+    e1 = normalize(rng.standard_normal((200, 16)))
+    e2 = normalize(rng.standard_normal((150, 16)))
+    w = pair_weights(e1, e2).reshape(-1)
+    counts, edges = weight_histogram(e1, e2, n_bins=512)
+    assert counts.sum() == len(w)
+    m = 500
+    thr = threshold_for_top_m(counts, edges, m)
+    n_above = int((w >= thr).sum())
+    assert n_above >= m  # threshold is conservative (collects at least m)
+    top = collect_top(e1, e2, thr, m)
+    exact_top = np.argsort(w)[::-1][:m]
+    # identical up to bin-boundary ties: overlap must be near-total
+    overlap = len(set(top.tolist()) & set(exact_top.tolist())) / m
+    assert overlap > 0.98
+
+
+def test_stratify_streaming_close_to_dense():
+    rng = np.random.default_rng(2)
+    e1 = normalize(rng.standard_normal((100, 16)))
+    e2 = normalize(rng.standard_normal((100, 16)))
+    w = pair_weights(e1, e2).reshape(-1)
+    dense = stratify_dense(w, alpha=0.2, budget=2000, cfg=CFG)
+    stream = stratify_streaming(e1, e2, alpha=0.2, budget=2000, cfg=CFG)
+    assert stream.blocking_regime_size() == dense.blocking_regime_size()
+    overlap = len(
+        set(stream.order.tolist()) & set(dense.order.tolist())
+    ) / dense.blocking_regime_size()
+    assert overlap > 0.98

@@ -1,0 +1,315 @@
+"""Substrate tests: optimizer, train loop, checkpointing (atomic/async/
+reshard), fault tolerance, data pipeline, serving."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import init_params, loss_fn
+from repro.train import (
+    OptimizerConfig,
+    adamw_update,
+    compress_grads,
+    init_opt_state,
+    lr_schedule,
+    make_train_step,
+)
+
+
+def test_lr_schedule_shape():
+    cfg = OptimizerConfig(peak_lr=1.0, warmup_steps=10, decay_steps=100)
+    lrs = [float(lr_schedule(jnp.int32(s), cfg)) for s in [0, 5, 10, 50, 100, 200]]
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0, abs=0.11)
+    assert lrs[3] < 1.0
+    assert lrs[-1] == pytest.approx(cfg.min_lr_ratio, abs=1e-3)
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = init_opt_state(params)
+    cfg = OptimizerConfig(peak_lr=0.5, warmup_steps=0, decay_steps=1000,
+                          weight_decay=0.0)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(params, grads, opt, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.6
+
+
+def test_grad_compression_roundtrip():
+    g = {"a": jnp.array([1.234e-3, -5.6, 0.0])}
+    for mode, atol in (("none", 0.0), ("bf16", 0.05), ("int8", 5.6 / 127 / 2 + 1e-6)):
+        out = compress_grads(g, mode)
+        np.testing.assert_allclose(
+            np.asarray(out["a"]), np.asarray(g["a"]), rtol=0.05, atol=atol
+        )
+
+
+def test_train_step_microbatch_equivalence():
+    """Gradient accumulation must match the single-batch gradient."""
+    cfg = get_smoke_config("llama3.2-1b", remat=False)
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)))}
+    opt = init_opt_state(params)
+    ocfg = OptimizerConfig(peak_lr=0.0, warmup_steps=0, weight_decay=0.0)
+    s1 = make_train_step(cfg, ocfg, num_microbatches=1)
+    s4 = make_train_step(cfg, ocfg, num_microbatches=4)
+    _, _, m1 = s1(params, opt, batch)
+    _, _, m4 = s4(params, opt, batch)
+    assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=2e-2)
+    assert float(m1["grad_norm"]) == pytest.approx(float(m4["grad_norm"]), rel=3e-2)
+
+
+def test_train_loop_loss_decreases():
+    """A few hundred optimizer steps on a tiny oracle model fit a small
+    synthetic pair dataset (e2e learnability of the substrate)."""
+    from repro.data.pipeline import ByteTokenizer, make_entity_corpus, make_pair_batch
+
+    tok = ByteTokenizer()
+    cfg = get_smoke_config("qwen2-1.5b", vocab_size=tok.vocab_size, remat=False)
+    params = init_params(cfg, jax.random.key(0))
+    opt = init_opt_state(params)
+    ocfg = OptimizerConfig(peak_lr=3e-3, warmup_steps=5, decay_steps=80)
+    step_fn = jax.jit(make_train_step(cfg, ocfg))
+    records, ids = make_entity_corpus(16, 3, noise=0.05, seed=0)
+    rng = np.random.default_rng(0)
+    losses = []
+    for s in range(60):
+        batch = make_pair_batch(tok, records, ids, batch=8, max_len=48, rng=rng)
+        batch = {"tokens": jnp.asarray(batch["tokens"]),
+                 "loss_mask": jnp.asarray(batch["loss_mask"])}
+        params, opt, m = step_fn(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8
+    assert np.isfinite(losses).all()
+
+
+# ----------------------------------------------------------------------------
+# checkpointing
+# ----------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    from repro.checkpoint.checkpoint import latest_step, restore, save
+
+    tree = {
+        "w": jnp.arange(12, dtype=jnp.bfloat16).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.float32)},
+        "step": jnp.int32(7),
+    }
+    d = save(str(tmp_path), 7, tree, extra={"note": "x"})
+    assert os.path.basename(d) == "step_00000007"
+    assert latest_step(str(tmp_path)) == 7
+    out, manifest = restore(str(tmp_path), 7, tree)
+    assert manifest["extra"]["note"] == "x"
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(tree["w"], np.float32))
+    # no tmp dirs left behind
+    assert not [f for f in os.listdir(tmp_path) if f.startswith(".tmp")]
+
+
+def test_checkpoint_async_and_cleanup(tmp_path):
+    from repro.checkpoint.checkpoint import AsyncCheckpointer, latest_step
+
+    ck = AsyncCheckpointer(str(tmp_path), keep_last=2)
+    tree = {"w": jnp.zeros((4,))}
+    for s in (1, 2, 3):
+        ck.save(s, tree)
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 3
+    steps = sorted(d for d in os.listdir(tmp_path) if d.startswith("step_"))
+    assert len(steps) == 2  # cleanup kept last 2
+
+
+def test_checkpoint_reshard_restore(tmp_path):
+    """Restore onto different shardings (elastic scaling path)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.checkpoint.checkpoint import restore, save
+    from repro.launch.mesh import make_host_mesh
+
+    tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    save(str(tmp_path), 1, tree)
+    mesh = make_host_mesh()
+    sh = {"w": NamedSharding(mesh, P(None, None))}
+    out, _ = restore(str(tmp_path), 1, tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(tree["w"]))
+    assert out["w"].sharding == sh["w"]
+
+
+def test_train_restart_resumes_identically(tmp_path):
+    """Crash after step k, restore, continue -> identical params as an
+    uninterrupted run (determinism of loader + checkpoint fidelity)."""
+    from repro.checkpoint.checkpoint import restore_latest, save
+    from repro.runtime.fault_tolerance import DeterministicSkipper
+
+    cfg = get_smoke_config("llama3.2-1b", remat=False, num_layers=1, d_model=32,
+                           num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                           vocab_size=64)
+    ocfg = OptimizerConfig(peak_lr=1e-3, warmup_steps=0)
+    step_fn = jax.jit(make_train_step(cfg, ocfg))
+    skipper = DeterministicSkipper(seed=42)
+
+    def batch_at(s):
+        rng = skipper.batch_rng(s)
+        return {"tokens": jnp.asarray(rng.integers(0, 64, (2, 12)))}
+
+    # uninterrupted run of 6 steps
+    p = init_params(cfg, jax.random.key(1))
+    o = init_opt_state(p)
+    for s in range(6):
+        p, o, _ = step_fn(p, o, batch_at(s))
+    ref = p
+
+    # interrupted: 3 steps, checkpoint, "crash", restore, 3 more
+    p2 = init_params(cfg, jax.random.key(1))
+    o2 = init_opt_state(p2)
+    for s in range(3):
+        p2, o2, _ = step_fn(p2, o2, batch_at(s))
+    save(str(tmp_path), 3, {"params": p2, "opt": o2})
+    restored, _ = restore_latest(str(tmp_path), {"params": p2, "opt": o2})
+    p3, o3 = restored["params"], restored["opt"]
+    for s in range(3, 6):
+        p3, o3, _ = step_fn(p3, o3, batch_at(s))
+    for a, b in zip(jax.tree.leaves(ref), jax.tree.leaves(p3)):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32), atol=1e-6
+        )
+
+
+# ----------------------------------------------------------------------------
+# fault tolerance
+# ----------------------------------------------------------------------------
+
+def test_retry_with_backoff():
+    from repro.runtime.fault_tolerance import retry_with_backoff
+
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise RuntimeError("transient")
+        return "ok"
+
+    assert retry_with_backoff(flaky, base_delay=0.001) == "ok"
+    assert calls["n"] == 3
+    with pytest.raises(ValueError):
+        retry_with_backoff(lambda: (_ for _ in ()).throw(ValueError()), base_delay=0.001)
+
+
+def test_straggler_monitor():
+    from repro.runtime.fault_tolerance import StragglerMonitor
+
+    hits = []
+    mon = StragglerMonitor(threshold=3.0, callback=hits.append)
+    for s in range(10):
+        mon.record(s, 0.1)
+    mon.record(10, 1.0)  # 10x median -> straggler
+    assert len(hits) == 1 and hits[0].ratio > 3.0
+
+
+def test_preemption_checkpoint_flow(tmp_path):
+    from repro.checkpoint.checkpoint import latest_step, save
+    from repro.runtime.fault_tolerance import PreemptionHandler
+
+    h = PreemptionHandler()
+    saved = []
+    for s in range(5):
+        if s == 2:
+            h.simulate()
+        if h.preempted:
+            save(str(tmp_path), s, {"x": jnp.zeros(())})
+            saved.append(s)
+            break
+    assert saved == [2]
+    assert latest_step(str(tmp_path)) == 2
+
+
+# ----------------------------------------------------------------------------
+# data pipeline
+# ----------------------------------------------------------------------------
+
+def test_tokenizer_roundtrip():
+    from repro.data.pipeline import ByteTokenizer
+
+    tok = ByteTokenizer()
+    s = "Acme Corp #42 ünïcode"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_sharded_loader_determinism_and_sharding():
+    from repro.data.pipeline import ShardedLoader
+
+    def batch_fn(rng):
+        return {"x": rng.integers(0, 100, (8, 3))}
+
+    l0 = ShardedLoader(batch_fn, 8, num_hosts=2, host_id=0, seed=1)
+    l1 = ShardedLoader(batch_fn, 8, num_hosts=2, host_id=1, seed=1)
+    s0, b0 = next(l0)
+    s1, b1 = next(l1)
+    assert s0 == s1 == 0
+    assert b0["x"].shape == (4, 3)
+    # shards are disjoint parts of the same global batch
+    rng = np.random.default_rng(np.random.SeedSequence([1, 0]))
+    full = batch_fn(rng)["x"]
+    np.testing.assert_array_equal(b0["x"], full[:4])
+    np.testing.assert_array_equal(b1["x"], full[4:])
+    # restart from step 5 replays the same stream
+    l5 = ShardedLoader(batch_fn, 8, num_hosts=2, host_id=0, seed=1, start_step=5)
+    s5, b5 = next(l5)
+    assert s5 == 5
+    rng5 = np.random.default_rng(np.random.SeedSequence([1, 5]))
+    np.testing.assert_array_equal(b5["x"], batch_fn(rng5)["x"][:4])
+    for l in (l0, l1, l5):
+        l.close()
+
+
+# ----------------------------------------------------------------------------
+# serving
+# ----------------------------------------------------------------------------
+
+def test_pair_scorer_batching():
+    from repro.data.pipeline import ByteTokenizer, pair_example
+    from repro.serve.serve_loop import PairScorer
+
+    tok = ByteTokenizer()
+    cfg = get_smoke_config("qwen2-1.5b", vocab_size=tok.vocab_size, remat=False)
+    params = init_params(cfg, jax.random.key(0))
+    records = ["alpha corp", "alpha corp.", "zeta llc", "omega gmbh"]
+
+    def tok_pair(pair):
+        t, _ = pair_example(tok, records[pair[0]], records[pair[1]], None, 48)
+        n = int((t != 0).sum())
+        return t[:n]
+
+    scorer = PairScorer(cfg, params, tok_pair, tok.YES, tok.NO, max_len=48,
+                        batch_size=3)
+    pairs = np.array([[0, 1], [0, 2], [2, 3], [1, 3], [0, 3]])
+    p = scorer.score(pairs)
+    assert p.shape == (5,)
+    assert ((p >= 0) & (p <= 1)).all()
+    # batch-size independence
+    scorer2 = PairScorer(cfg, params, tok_pair, tok.YES, tok.NO, max_len=48,
+                         batch_size=5)
+    np.testing.assert_allclose(p, scorer2.score(pairs), atol=2e-2)
+
+
+def test_continuous_batcher_matches_sequential_decode():
+    from repro.serve.serve_loop import ContinuousBatcher, Request
+
+    cfg = get_smoke_config("llama3.2-1b", remat=False)
+    params = init_params(cfg, jax.random.key(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(7, 200, size=n).astype(np.int32) for n in (5, 3, 7)]
+    cb = ContinuousBatcher(cfg, params, batch_size=4, max_len=64, eos_id=1)
+    for i, pr in enumerate(prompts):
+        cb.submit(Request(uid=i, prompt=pr, max_new_tokens=4))
+    done = cb.run_until_done(max_steps=200)
+    assert len(done) == 3
+    for req in done:
+        assert 1 <= len(req.out_tokens) <= 4
