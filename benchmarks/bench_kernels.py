@@ -40,6 +40,18 @@ def run(fast: bool = True):
     rows.append(row("kernel_sim_hist_pallas", dt_k, f"agree={agree}"))
     rows.append(row("kernel_sim_hist_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
 
+    # sim_hist with the per-row scale operand (k-way chain-prefix weights)
+    scale = jnp.asarray(rng.random(512), jnp.float32)
+    dt_k, out_k = _time(lambda a, b, s: sim_hist_pallas(a, b, s[:, None],
+                                                        n_bins=512, bm=128,
+                                                        bn=128, interpret=True),
+                        e1, e2, scale)
+    dt_r, out_r = _time(lambda a, b, s: sim_hist_ref(a, b, n_bins=512, scale=s),
+                        e1, e2, scale)
+    agree = bool((np.asarray(out_k) == np.asarray(out_r)).all())
+    rows.append(row("kernel_sim_hist_scaled_pallas", dt_k, f"agree={agree}"))
+    rows.append(row("kernel_sim_hist_scaled_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
+
     # sim_topk
     from repro.kernels.sim_topk.kernel import sim_topk_pallas
     from repro.kernels.sim_topk.ref import sim_topk_ref

@@ -1,14 +1,16 @@
 """Fig. 14 / Appendix A: CPU-phase latency decomposition of BAS (similarity,
-stratification, pilot, allocation, execution, resampling CI) — and the
-speedup of the fused sim_hist kernel path vs the paper's sort-based
-stratification."""
+stratification, pilot, allocation, execution, resampling CI) — the speedup of
+the fused sim_hist kernel path vs the paper's sort-based stratification — and
+the dense-vs-streaming crossover sweep that calibrates the memory-aware
+dispatcher (``repro.core.dispatch``)."""
 from __future__ import annotations
 
 import time
 
 import numpy as np
 
-from repro.core import Agg, Query, run_bas
+from repro.core import Agg, Query, choose_path, dense_weight_bytes, run_bas
+from repro.core.bas_streaming import run_bas_streaming
 from repro.core.similarity import pair_weights
 from repro.core.stratify import stratify_dense, stratify_streaming
 from repro.core.types import BASConfig
@@ -44,4 +46,37 @@ def run(fast: bool = True):
     rows.append(row("fig14_stratify_sort", dt_sort, f"{dt_sort*1e3:.1f}ms"))
     rows.append(row("fig14_stratify_simhist_kernel", dt_hist,
                     f"speedup_x={dt_sort / max(dt_hist, 1e-9):.2f}"))
+    rows.extend(crossover_sweep(fast))
+    return rows
+
+
+def crossover_sweep(fast: bool = True):
+    """Dense vs streaming end-to-end latency across problem sizes.
+
+    Emits one dense and one streaming row per size plus the dispatcher's
+    choice under the default cap, so ``BASConfig.max_dense_weight_bytes``
+    can be tuned from data instead of guesswork."""
+    rows = []
+    sizes = [150, 300, 600] if fast else [300, 600, 1200, 2400]
+    for n in sizes:
+        ds = make_clustered_tables(n, n, n_entities=max(n, 64), noise=0.4,
+                                   seed=29)
+        budget = max(n * n // 40, 2000)
+        spec = ds.spec()
+        t0 = time.perf_counter()
+        run_bas(Query(spec=spec, agg=Agg.COUNT, oracle=ds.oracle(),
+                      budget=budget), seed=0)
+        dt_dense = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        run_bas_streaming(Query(spec=spec, agg=Agg.COUNT, oracle=ds.oracle(),
+                                budget=budget), seed=0)
+        dt_stream = time.perf_counter() - t0
+        mb = dense_weight_bytes(spec) / 2**20
+        rows.append(row(f"crossover_dense_n{n}", dt_dense,
+                        f"flat_weights_mb={mb:.1f}"))
+        rows.append(row(
+            f"crossover_streaming_n{n}", dt_stream,
+            f"dense_over_streaming_x={dt_dense / max(dt_stream, 1e-9):.2f},"
+            f"auto_path={choose_path(spec)}",
+        ))
     return rows

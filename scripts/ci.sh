@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 CI entry point: install dev-only deps, run the full suite.
+# Usage: scripts/ci.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt || \
+  echo "WARN: dev deps install failed (offline?); property tests will skip" >&2
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -9,8 +9,9 @@ from .types import (  # noqa: F401
     constant_attr,
 )
 from .oracle import ArrayOracle, FnOracle, ModelOracle, Oracle, PairChainOracle  # noqa: F401
-from .bas import run_bas, run_exact  # noqa: F401
+from .bas import run_bas, run_exact, run_stratified_pipeline  # noqa: F401
 from .bas_streaming import run_bas_streaming  # noqa: F401
+from .dispatch import choose_path, dense_weight_bytes, run_auto  # noqa: F401
 from .baselines import (  # noqa: F401
     calibrate_threshold,
     run_abae,

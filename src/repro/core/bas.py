@@ -14,11 +14,22 @@ stratifier, see ``stratify.py``):
    Oracle cache.
 5. *Estimate + CI*: combined estimators (estimators.py) and bootstrap-t
    (bootstrap.py).
+
+Stages 2-5 are shared with the streaming path: :func:`run_stratified_pipeline`
+takes a :class:`StratifiedSpace` (per-stratum sizes, weight masses and two
+callbacks — sample a stratum, enumerate a blocked stratum's tuples) and runs
+pilot / allocation / execution / estimation identically for both regimes.
+``run_bas`` here wires the dense closures (materialised flat weights);
+``bas_streaming.run_bas_streaming`` wires the walk+rejection / gathered-pair
+closures.  Dispatch between the two is memory-aware: ``dispatch.run_auto``
+routes to this dense path only when the (N1*...*Nk,) float64 flat weight
+array fits under ``BASConfig.max_dense_weight_bytes``.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Optional
+from typing import Callable, Optional
 
 import numpy as np
 
@@ -104,49 +115,41 @@ def run_exact(query: Query) -> QueryResult:
     )
 
 
-def run_bas(
+# ----------------------------------------------------------------------------
+# Shared stages 2-5: pilot -> allocate -> execute -> estimate/CI.
+# ----------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StratifiedSpace:
+    """Everything the estimator assembly needs to know about a stratified
+    join space, independent of whether the cross product is materialised.
+
+    ``sample_stratum(i, n)`` draws n tuples from stratum i with exact
+    within-stratum probabilities (labels + attributes included);
+    ``stratum_tuples(i)`` enumerates stratum i's (n_i, k) tuple indices for
+    blocking (only ever called for i >= 1 — D_0 cannot be blocked)."""
+
+    sizes: np.ndarray          # (K+1,) |D_0..D_K|
+    weight_sums: np.ndarray    # (K+1,) total sampling weight per stratum
+    sample_stratum: Callable[[int, int], StratumSample]
+    stratum_tuples: Callable[[int], np.ndarray]
+
+
+def run_stratified_pipeline(
     query: Query,
-    cfg: Optional[BASConfig] = None,
-    seed: int = 0,
-    weights: Optional[np.ndarray] = None,
+    cfg: BASConfig,
+    rng: np.random.Generator,
+    space: StratifiedSpace,
+    detail: dict,
+    timings: dict,
+    t_start: float,
 ) -> QueryResult:
-    cfg = cfg or BASConfig()
-    rng = np.random.default_rng(seed)
-    t_start = time.perf_counter()
-    timings: dict = {}
-
-    query.oracle.set_budget(query.budget)
-    n_total = query.spec.n_tuples
-    if query.budget >= n_total:
-        return run_exact(query)
-
-    # ---- similarity + stratification -------------------------------------
-    t0 = time.perf_counter()
-    if weights is None:
-        weights = chain_weights(
-            query.spec.embeddings, cfg.weight_exponent, cfg.weight_floor
-        )
-    timings["similarity_s"] = time.perf_counter() - t0
-
+    """Alg. 4 lines 6-17 on an abstract stratified space (shared by the dense
+    and streaming BAS paths)."""
+    sizes, weight_sums = space.sizes, space.weight_sums
+    k = len(sizes) - 1
     b = query.budget
     b1 = max(int(round(cfg.pilot_fraction * b)), 8)
-    b2 = b - b1
-
-    t0 = time.perf_counter()
-    strat = stratify_dense(weights, cfg.alpha, b, cfg)
-    k = strat.num_strata
-    sizes = strat.stratum_sizes()
-    per_idx = _stratum_flat_indices(strat, weights)
-    top_sum = float(weights[strat.order].sum())
-    total_sum = float(weights.sum())
-    weight_sums = np.empty(k + 1, np.float64)
-    weight_sums[0] = max(total_sum - top_sum, 0.0)
-    for i in range(1, k + 1):
-        weight_sums[i] = float(weights[per_idx[i]].sum())
-    # D_0 sampling weights: zero out the blocking regime
-    w0 = np.array(weights, np.float64, copy=True)
-    w0[strat.order] = 0.0
-    timings["stratify_s"] = time.perf_counter() - t0
 
     # ---- stage 1: pilot ---------------------------------------------------
     t0 = time.perf_counter()
@@ -157,19 +160,8 @@ def run_bas(
 
     samples: list[Optional[StratumSample]] = [None] * (k + 1)
     for i in range(k + 1):
-        idx = per_idx[i]
-        if i == 0:
-            if sizes[0] == 0:
-                continue
-            pos, q = flat_sample(w0, int(n_pilot[0]), rng, cfg.defensive_mix)
-            tup = flat_to_tuples(pos, query.spec.sizes)
-            o = query.oracle.label(tup)
-            g = query.attr()(tup)
-            samples[0] = StratumSample(o=o, g=g, q=q, size=int(sizes[0]))
-        else:
-            if len(idx) == 0:
-                continue
-            samples[i] = _sample_stratum(weights, idx, int(n_pilot[i]), query, rng, cfg.defensive_mix)
+        if sizes[i] > 0:
+            samples[i] = space.sample_stratum(i, int(n_pilot[i]))
 
     live = [s for s in samples if s is not None]
     c_hat, _ = combined_count(live, BlockedRegime(np.zeros(0), np.zeros(0)))
@@ -181,7 +173,7 @@ def run_bas(
             sigma2[i] = _linearised_variance(samples[i], query.agg, ratio, c_hat)
     timings["pilot_s"] = time.perf_counter() - t0
 
-    # ---- allocation ---------------------------------------------------------
+    # ---- allocation -------------------------------------------------------
     t0 = time.perf_counter()
     b2_eff = query.budget - query.oracle.calls
     if query.agg in (Agg.MIN, Agg.MAX):
@@ -193,11 +185,11 @@ def run_bas(
     beta = set(int(i) for i in allocation.beta)
     timings["allocate_s"] = time.perf_counter() - t0
 
-    # ---- stage 2: blocking + sampling ---------------------------------------
+    # ---- stage 2: blocking + sampling -------------------------------------
     t0 = time.perf_counter()
     blocked_o, blocked_g = [], []
     for i in sorted(beta):
-        tup = flat_to_tuples(per_idx[i], query.spec.sizes)
+        tup = space.stratum_tuples(i)
         blocked_o.append(query.oracle.label(tup))
         blocked_g.append(query.attr()(tup))
     blocked = BlockedRegime(
@@ -220,21 +212,14 @@ def run_bas(
         for j, i in enumerate(sampled_ids):
             if n_main[j] <= 0:
                 continue
-            if i == 0:
-                pos, q = flat_sample(w0, int(n_main[j]), rng, cfg.defensive_mix)
-                tup = flat_to_tuples(pos, query.spec.sizes)
-                o = query.oracle.label(tup)
-                g = query.attr()(tup)
-                new = StratumSample(o=o, g=g, q=q, size=int(sizes[0]))
-            else:
-                new = _sample_stratum(weights, per_idx[i], int(n_main[j]), query, rng, cfg.defensive_mix)
+            new = space.sample_stratum(i, int(n_main[j]))
             samples[i] = new if samples[i] is None else samples[i].merge(new)
         rounds += 1
         if query.oracle.calls == before:  # everything cached; budget cannot move
             break
     timings["execute_s"] = time.perf_counter() - t0
 
-    # ---- estimate + CI -------------------------------------------------------
+    # ---- estimate + CI ----------------------------------------------------
     t0 = time.perf_counter()
     live = [samples[i] for i in range(k + 1) if i not in beta and samples[i] is not None]
     if query.agg in (Agg.COUNT, Agg.SUM, Agg.AVG):
@@ -263,7 +248,7 @@ def run_bas(
         ci=ci,
         oracle_calls=query.oracle.calls,
         detail={
-            "mode": "bas",
+            **detail,
             "beta": sorted(beta),
             "num_strata": k,
             "stratum_sizes": sizes.tolist(),
@@ -271,6 +256,66 @@ def run_bas(
             "est_mse": allocation.est_mse,
             "timings": timings,
         },
+    )
+
+
+def run_bas(
+    query: Query,
+    cfg: Optional[BASConfig] = None,
+    seed: int = 0,
+    weights: Optional[np.ndarray] = None,
+) -> QueryResult:
+    cfg = cfg or BASConfig()
+    rng = np.random.default_rng(seed)
+    t_start = time.perf_counter()
+    timings: dict = {}
+
+    query.oracle.set_budget(query.budget)
+    n_total = query.spec.n_tuples
+    if query.budget >= n_total:
+        return run_exact(query)
+
+    # ---- similarity + stratification -------------------------------------
+    t0 = time.perf_counter()
+    if weights is None:
+        weights = chain_weights(
+            query.spec.embeddings, cfg.weight_exponent, cfg.weight_floor
+        )
+    timings["similarity_s"] = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    strat = stratify_dense(weights, cfg.alpha, query.budget, cfg)
+    k = strat.num_strata
+    sizes = strat.stratum_sizes()
+    per_idx = _stratum_flat_indices(strat, weights)
+    top_sum = float(weights[strat.order].sum())
+    total_sum = float(weights.sum())
+    weight_sums = np.empty(k + 1, np.float64)
+    weight_sums[0] = max(total_sum - top_sum, 0.0)
+    for i in range(1, k + 1):
+        weight_sums[i] = float(weights[per_idx[i]].sum())
+    # D_0 sampling weights: zero out the blocking regime
+    w0 = np.array(weights, np.float64, copy=True)
+    w0[strat.order] = 0.0
+    timings["stratify_s"] = time.perf_counter() - t0
+
+    def sample_stratum(i: int, n: int) -> StratumSample:
+        if i == 0:
+            pos, q = flat_sample(w0, n, rng, cfg.defensive_mix)
+            tup = flat_to_tuples(pos, query.spec.sizes)
+            o = query.oracle.label(tup)
+            g = query.attr()(tup)
+            return StratumSample(o=o, g=g, q=q, size=int(sizes[0]))
+        return _sample_stratum(weights, per_idx[i], n, query, rng, cfg.defensive_mix)
+
+    space = StratifiedSpace(
+        sizes=sizes,
+        weight_sums=weight_sums,
+        sample_stratum=sample_stratum,
+        stratum_tuples=lambda i: flat_to_tuples(per_idx[i], query.spec.sizes),
+    )
+    return run_stratified_pipeline(
+        query, cfg, rng, space, {"mode": "bas"}, timings, t_start
     )
 
 

@@ -1,20 +1,32 @@
 """BAS without materialising the cross product (paper §5.3, the
-"cross product cannot fit into memory" regime).
+"cross product cannot fit into memory" regime) — k-way chain joins.
 
 Differences from the dense path (``bas.run_bas``):
 
-* stratification uses the histogram threshold (``stratify_streaming``, backed
-  by the fused ``sim_hist`` Pallas kernel) — O(bins) memory, two streaming
-  passes;
+* stratification uses the histogram threshold
+  (``stratify.stratify_streaming_chain``, backed by the fused ``sim_hist``
+  Pallas kernel with a jnp fallback) — O(bins) memory, two streaming passes
+  over prefix blocks; the chain weight factorises as prefix-weight x
+  last-edge pair weight, so the kernel's per-row ``scale`` operand carries
+  the prefix chain weight and nothing bigger than one block is materialised;
 * the minimum sampling regime D_0 is sampled by **walk + rejection**: WWJ
-  walk proposals from the full-space distribution p(i,j) = (1/N1) w_ij / r_i
+  walk proposals from the full-space distribution
+  p(t) = (1/N1) * prod_j w_j(t_j, t_{j+1}) / r_j(t_j)
   are rejected if they fall in the blocking regime; accepted tuples have
   exact probability p(s) / (1 - P(top)), where P(top) = sum of full-space
-  probabilities over the collected top set (computable from the streamed row
-  sums) — so Horvitz-Thompson stays exact;
-* per-stratum weights are recomputed by gathering only the stratum's pairs.
+  probabilities over the collected top set (computable from the streamed
+  per-edge row sums) — so Horvitz-Thompson stays exact for any chain length;
+* per-stratum weights are recomputed by gathering only the stratum's tuples
+  (``similarity.chain_tuple_weights``, O(n * k * d)).
 
-Memory: O(N1 + N2 + alpha*b + b) — never O(N1*N2).
+Estimator assembly (pilot, MSE-optimal blocking allocation, execution,
+bootstrap-t CIs, and the MIN/MAX/MEDIAN extensions) is the *same code* as the
+dense path: ``bas.run_stratified_pipeline`` over a ``StratifiedSpace`` whose
+callbacks never touch the cross product.
+
+Memory: O(sum_i N_i + alpha*b + b + bins) — never O(N1*...*Nk).  The engine
+front-end picks this path automatically when the dense flat-weight footprint
+exceeds ``BASConfig.max_dense_weight_bytes`` (see ``dispatch.run_auto``).
 """
 from __future__ import annotations
 
@@ -23,30 +35,35 @@ from typing import Optional
 
 import numpy as np
 
-from . import allocate as alloc_mod
-from .bootstrap import bootstrap_t_ci
-from .estimators import BlockedRegime, StratumSample, combined_count, combined_sum
-from .similarity import flat_to_tuples, pair_weights
-from .stratify import stratify_streaming
-from .types import Agg, BASConfig, Query, QueryResult
-from .wander import flat_sample
+from .bas import StratifiedSpace, run_exact, run_stratified_pipeline
+from .estimators import StratumSample
+from .similarity import (
+    aligned_pair_weights,
+    chain_total_weight,
+    chain_tuple_weights,
+    edge_row_sums,
+    flat_to_tuples,
+    tuples_to_flat,
+)
+from .stratify import stratify_streaming_chain
+from .types import BASConfig, Query, QueryResult
+from .wander import flat_sample, walk_sample
 
 
-def _pairwise_w(e1, e2, i, j, cfg):
-    """Elementwise weights for aligned index vectors (no cross block)."""
-    sims = np.einsum("nd,nd->n", e1[i].astype(np.float64), e2[j].astype(np.float64))
-    w = np.clip(sims, 0.0, 1.0)
-    w = np.maximum(w, cfg.weight_floor)
-    if cfg.weight_exponent != 1.0:
-        w = w**cfg.weight_exponent
-    return w
-
-
-def _walk_rejection_sample(e1, e2, row_sums, top_set, n, cfg, rng, max_rounds=50):
-    """Sample n tuples from D_0 with exact probabilities (walk + rejection)."""
-    n1, n2 = e1.shape[0], e2.shape[0]
-    total_rows = row_sums.sum()
-    out_idx = np.empty(n, np.int64)
+def _walk_rejection_sample(
+    embeddings: list,
+    sizes: tuple,
+    top_set: set,
+    n: int,
+    cfg: BASConfig,
+    rng: np.random.Generator,
+    max_rounds: int = 50,
+):
+    """Sample n tuples from D_0 with exact probabilities: k-way WWJ walk
+    proposals, rejected when they land in the blocking regime.  Returns
+    ((m, k) tuples, (m,) full-space walk probabilities), m <= n."""
+    k = len(embeddings)
+    out_idx = np.empty((n, k), np.int64)
     out_p = np.empty(n, np.float64)
     got = 0
     for _ in range(max_rounds):
@@ -54,24 +71,14 @@ def _walk_rejection_sample(e1, e2, row_sums, top_set, n, cfg, rng, max_rounds=50
         if need <= 0:
             break
         m = max(int(need * 1.3) + 16, 32)
-        i = rng.integers(0, n1, size=m)
-        # categorical over row i's weights, streamed per unique row block
-        w_rows = pair_weights(e1[i], e2, cfg.weight_exponent, cfg.weight_floor)
-        cdf = np.cumsum(w_rows, axis=1)
-        tot = cdf[:, -1]
-        u = rng.random(m) * tot
-        j = np.minimum((cdf < u[:, None]).sum(axis=1), n2 - 1)
-        flat = i.astype(np.int64) * n2 + j
-        p = (1.0 / n1) * w_rows[np.arange(m), j] / tot
-        keep = np.array([f not in top_set for f in flat])
-        k = int(keep.sum())
-        take = min(k, need)
-        out_idx[got : got + take] = flat[keep][:take]
-        out_p[got : got + take] = p[keep][:take]
+        ws = walk_sample(embeddings, m, rng, cfg.weight_exponent, cfg.weight_floor)
+        flat = tuples_to_flat(ws.idx, sizes)
+        keep = np.fromiter((f not in top_set for f in flat), bool, len(flat))
+        take = min(int(keep.sum()), need)
+        out_idx[got : got + take] = ws.idx[keep][:take]
+        out_p[got : got + take] = ws.prob[keep][:take]
         got += take
-    if got < n:
-        out_idx, out_p = out_idx[:got], out_p[:got]
-    return out_idx, out_p
+    return out_idx[:got], out_p[:got]
 
 
 def run_bas_streaming(
@@ -79,110 +86,89 @@ def run_bas_streaming(
     cfg: Optional[BASConfig] = None,
     seed: int = 0,
     n_bins: int = 4096,
-    use_kernel: bool = True,
+    use_kernel: Optional[bool] = None,
 ) -> QueryResult:
-    """Two-table streaming BAS.  Same estimator/CI machinery as the dense
-    path; supports COUNT/SUM/AVG."""
-    assert query.spec.k == 2, "streaming path covers two-table joins"
+    """k-way streaming BAS.  Same estimator/CI machinery as the dense path
+    (all aggregates); the cross product is never materialised."""
     cfg = cfg or BASConfig()
+    if use_kernel is None:
+        use_kernel = cfg.use_kernel
     rng = np.random.default_rng(seed)
+    t_start = time.perf_counter()
+    timings: dict = {}
+
     query.oracle.set_budget(query.budget)
-    e1 = np.asarray(query.spec.embeddings[0], np.float32)
-    e2 = np.asarray(query.spec.embeddings[1], np.float32)
-    n1, n2 = e1.shape[0], e2.shape[0]
+    if query.budget >= query.spec.n_tuples:
+        return run_exact(query)
+
+    embeddings = [np.asarray(e, np.float32) for e in query.spec.embeddings]
+    sizes_spec = tuple(e.shape[0] for e in embeddings)
+    exp, floor = cfg.weight_exponent, cfg.weight_floor
+
+    # ---- streaming stratification ----------------------------------------
     t0 = time.perf_counter()
-
-    b = query.budget
-    b1 = max(int(round(cfg.pilot_fraction * b)), 8)
-
-    strat = stratify_streaming(e1, e2, cfg.alpha, b, cfg, n_bins=n_bins,
-                               use_kernel=use_kernel)
+    strat = stratify_streaming_chain(
+        embeddings, cfg.alpha, query.budget, cfg, n_bins=n_bins,
+        use_kernel=use_kernel,
+    )
     k = strat.num_strata
     sizes = strat.stratum_sizes()
     top_set = set(strat.order.tolist())
+    timings["stratify_s"] = time.perf_counter() - t0
 
-    # full-space sampling distribution pieces for D_0 rejection sampling
-    row_sums = np.zeros(n1, np.float64)
-    B = 4096
-    for s in range(0, n1, B):
-        row_sums[s : s + B] = pair_weights(
-            e1[s : s + B], e2, cfg.weight_exponent, cfg.weight_floor
-        ).sum(axis=1)
-    top_i = strat.order // n2
-    top_j = strat.order % n2
-    top_w = _pairwise_w(e1, e2, top_i, top_j, cfg)
-    p_top = float(((1.0 / n1) * top_w / row_sums[top_i]).sum())
+    # ---- full-space sampling distribution pieces for D_0 rejection -------
+    t0 = time.perf_counter()
+    row_sums = edge_row_sums(embeddings, exp, floor)
+    tup_top = flat_to_tuples(strat.order, sizes_spec)
+    # one pass over the edges gives both the top-set chain weights and the
+    # full-space walk probabilities p(t) = (1/N1) prod_j w_j / r_j
+    top_w = np.ones(len(tup_top), np.float64)
+    p = np.full(len(tup_top), 1.0 / sizes_spec[0], np.float64)
+    for j in range(len(embeddings) - 1):
+        w_j = aligned_pair_weights(
+            embeddings[j], embeddings[j + 1], tup_top[:, j], tup_top[:, j + 1],
+            exp, floor,
+        )
+        top_w *= w_j
+        p *= w_j / row_sums[j][tup_top[:, j]]
+    p_top = float(p.sum())
 
-    per_idx = [None] + [strat.stratum_indices(i) for i in range(1, k + 1)]
+    per_tup = [None] + [
+        flat_to_tuples(strat.stratum_indices(i), sizes_spec)
+        for i in range(1, k + 1)
+    ]
     per_w = [None] + [
-        _pairwise_w(e1, e2, ix // n2, ix % n2, cfg) for ix in per_idx[1:]
+        chain_tuple_weights(embeddings, t, exp, floor) for t in per_tup[1:]
     ]
     weight_sums = np.zeros(k + 1, np.float64)
-    weight_sums[0] = max(row_sums.sum() - top_w.sum(), 0.0)
+    weight_sums[0] = max(
+        chain_total_weight(embeddings, exp, floor) - float(top_w.sum()), 0.0
+    )
     for i in range(1, k + 1):
-        weight_sums[i] = per_w[i].sum()
+        weight_sums[i] = float(per_w[i].sum())
+    timings["similarity_s"] = time.perf_counter() - t0
 
-    def sample_stratum(i, n):
+    def sample_stratum(i: int, n: int) -> StratumSample:
         if i == 0:
-            idx, p = _walk_rejection_sample(e1, e2, row_sums, top_set, n, cfg, rng)
-            q = p / max(1.0 - p_top, 1e-12)   # exact prob within D_0
+            tup, pw = _walk_rejection_sample(
+                embeddings, sizes_spec, top_set, n, cfg, rng
+            )
+            q = pw / max(1.0 - p_top, 1e-12)  # exact prob within D_0
         else:
             pos, q = flat_sample(per_w[i], n, rng, cfg.defensive_mix)
-            idx = per_idx[i][pos]
-        tup = flat_to_tuples(idx, (n1, n2))
+            tup = per_tup[i][pos]
         o = query.oracle.label(tup)
         g = query.attr()(tup)
         return StratumSample(o=o, g=g, q=q, size=int(sizes[i]))
 
-    # ---- pilot ---------------------------------------------------------
-    shares = weight_sums / max(weight_sums.sum(), 1e-300)
-    n_pilot = np.maximum((shares * b1).astype(np.int64), 2)
-    while n_pilot.sum() > b1 and n_pilot.max() > 2:
-        n_pilot[np.argmax(n_pilot)] -= 1
-    samples = [None] * (k + 1)
-    for i in range(k + 1):
-        if sizes[i] > 0:
-            samples[i] = sample_stratum(i, int(n_pilot[i]))
-    sigma2 = np.zeros(k + 1)
-    for i, s in enumerate(samples):
-        if s is not None and s.n > 1:
-            t = s.sum_terms() if query.agg is not Agg.COUNT else s.count_terms()
-            sigma2[i] = float(np.var(t, ddof=1))
-
-    # ---- allocate + execute --------------------------------------------
-    b2_eff = b - query.oracle.calls
-    allocation = alloc_mod.argmin_beta(sigma2, weight_sums, sizes, b2_eff,
-                                       cfg.exact_beta_max_k)
-    beta = set(int(x) for x in allocation.beta)
-    blocked_o, blocked_g = [], []
-    for i in sorted(beta):
-        tup = flat_to_tuples(per_idx[i], (n1, n2))
-        blocked_o.append(query.oracle.label(tup))
-        blocked_g.append(query.attr()(tup))
-    blocked = BlockedRegime(
-        o=np.concatenate(blocked_o) if blocked_o else np.zeros(0),
-        g=np.concatenate(blocked_g) if blocked_g else np.zeros(0),
+    space = StratifiedSpace(
+        sizes=sizes,
+        weight_sums=weight_sums,
+        sample_stratum=sample_stratum,
+        stratum_tuples=lambda i: per_tup[i],
     )
-    sampled_ids = [i for i in range(k + 1) if i not in beta and sizes[i] > 0]
-    remaining = b - query.oracle.calls
-    if remaining > 2 * max(len(sampled_ids), 1):
-        w_s = np.array([weight_sums[i] for i in sampled_ids])
-        share = w_s / max(w_s.sum(), 1e-300)
-        n_main = np.maximum((share * remaining).astype(np.int64), 1)
-        while n_main.sum() > remaining:
-            n_main[np.argmax(n_main)] -= 1
-        for j, i in enumerate(sampled_ids):
-            if n_main[j] > 0:
-                new = sample_stratum(i, int(n_main[j]))
-                samples[i] = new if samples[i] is None else samples[i].merge(new)
-
-    live = [samples[i] for i in range(k + 1)
-            if i not in beta and samples[i] is not None]
-    est, ci = bootstrap_t_ci(live, blocked, query.agg, query.confidence,
-                             cfg.n_bootstrap, rng)
-    return QueryResult(
-        estimate=float(est), ci=ci, oracle_calls=query.oracle.calls,
-        detail={"mode": "bas_streaming", "beta": sorted(beta),
-                "num_strata": k, "p_top": p_top,
-                "total_s": time.perf_counter() - t0},
+    return run_stratified_pipeline(
+        query, cfg, rng, space,
+        {"mode": "bas_streaming", "p_top": p_top, "use_kernel": use_kernel},
+        timings, t_start,
     )

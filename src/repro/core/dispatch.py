@@ -1,0 +1,71 @@
+"""Memory-aware BAS engine dispatcher.
+
+The dense path (``bas.run_bas``) materialises the flat chain-weight array —
+(N1*...*Nk,) float64 — which is the fastest route while it fits in memory but
+silently pays for the full cross product when it does not.  The streaming
+path (``bas_streaming.run_bas_streaming``) keeps O(sum N_i + alpha*b) memory
+at higher constant cost (two streamed similarity passes, walk+rejection D_0
+sampling).  ``run_auto`` estimates the dense footprint from the
+:class:`~repro.core.types.JoinSpec` alone and routes accordingly:
+
+    dense      iff  n_tuples * 8 bytes <= cfg.max_dense_weight_bytes
+    streaming  otherwise
+
+The crossover constant is data-driven: ``benchmarks/bench_latency.py`` emits
+dense-vs-streaming latency across problem sizes so the cap can be tuned per
+deployment.  Both paths share the estimator assembly
+(``bas.run_stratified_pipeline``), so estimates and CIs are statistically
+interchangeable — dispatch is purely a resource decision.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from .bas import run_bas
+from .bas_streaming import run_bas_streaming
+from .types import BASConfig, JoinSpec, Query, QueryResult
+
+_WEIGHT_BYTES = np.dtype(np.float64).itemsize
+
+
+def dense_weight_bytes(spec: JoinSpec) -> int:
+    """Bytes the dense path would allocate for the flat chain weights."""
+    return spec.n_tuples * _WEIGHT_BYTES
+
+
+def choose_path(spec: JoinSpec, cfg: Optional[BASConfig] = None) -> str:
+    """'dense' | 'streaming' for a join spec under the configured memory cap."""
+    cfg = cfg or BASConfig()
+    return (
+        "dense" if dense_weight_bytes(spec) <= cfg.max_dense_weight_bytes
+        else "streaming"
+    )
+
+
+def run_auto(
+    query: Query,
+    cfg: Optional[BASConfig] = None,
+    seed: int = 0,
+    n_bins: int = 4096,
+) -> QueryResult:
+    """Execute BAS on whichever path the memory model selects.
+
+    The decision is recorded in ``result.detail["dispatch"]`` so callers
+    (and the crossover benchmark) can audit it.
+    """
+    cfg = cfg or BASConfig()
+    footprint = dense_weight_bytes(query.spec)
+    path = choose_path(query.spec, cfg)
+    if path == "dense":
+        res = run_bas(query, cfg, seed=seed)
+    else:
+        res = run_bas_streaming(query, cfg, seed=seed, n_bins=n_bins)
+    res.detail["dispatch"] = {
+        "path": path,
+        "dense_weight_bytes": footprint,
+        "max_dense_weight_bytes": cfg.max_dense_weight_bytes,
+        "n_tuples": query.spec.n_tuples,
+    }
+    return res

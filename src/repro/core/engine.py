@@ -19,7 +19,7 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from . import baselines, bas
+from . import baselines, bas, bas_streaming, dispatch
 from .oracle import Oracle
 from .types import Agg, AttrFn, BASConfig, JoinSpec, Query, QueryResult
 
@@ -154,12 +154,20 @@ class JoinMLEngine:
             confidence=confidence or pq.confidence or 0.95,
         )
 
-    def execute(self, sql: str, method: str = "bas", seed: int = 0,
+    def execute(self, sql: str, method: str = "auto", seed: int = 0,
                 budget: Optional[int] = None,
                 confidence: Optional[float] = None) -> QueryResult:
+        """Execute a JoinML query.  ``method="auto"`` (default) routes BAS
+        through the memory-aware dispatcher: dense when the flat chain-weight
+        array fits under ``cfg.max_dense_weight_bytes``, streaming otherwise.
+        ``"bas"`` / ``"bas-streaming"`` force a path explicitly."""
         q = self.build(sql, budget, confidence)
+        if method == "auto":
+            return dispatch.run_auto(q, self.cfg, seed=seed)
         if method == "bas":
             return bas.run_bas(q, self.cfg, seed=seed)
+        if method == "bas-streaming":
+            return bas_streaming.run_bas_streaming(q, self.cfg, seed=seed)
         if method == "wwj":
             return baselines.run_wwj(q, self.cfg, seed=seed)
         if method == "uniform":

@@ -84,6 +84,88 @@ def chain_weights(
     return w
 
 
+def weight_of_score(
+    s: np.ndarray, exponent: float = 1.0, floor: float = 1e-3
+) -> np.ndarray:
+    """The score -> sampling-weight transform (single source of truth —
+    stratification thresholds and sampling probabilities must agree)."""
+    w = np.clip(s, 0.0, 1.0)
+    w = np.maximum(w, floor)
+    return w**exponent if exponent != 1.0 else w
+
+
+def aligned_pair_weights(
+    e1: np.ndarray,
+    e2: np.ndarray,
+    i: np.ndarray,
+    j: np.ndarray,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+) -> np.ndarray:
+    """Elementwise weights for aligned index vectors (no cross block)."""
+    sims = np.einsum("nd,nd->n", e1[i].astype(np.float64), e2[j].astype(np.float64))
+    return weight_of_score(sims, exponent, floor)
+
+
+def chain_tuple_weights(
+    embeddings: list,
+    idx: np.ndarray,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+) -> np.ndarray:
+    """Chain weights W(t) = prod_j w_j(t_j, t_{j+1}) for explicit (n, k)
+    tuples — O(n * k * d), never touches the cross product."""
+    idx = np.asarray(idx)
+    w = np.ones(idx.shape[0], np.float64)
+    for j in range(len(embeddings) - 1):
+        w *= aligned_pair_weights(
+            embeddings[j], embeddings[j + 1], idx[:, j], idx[:, j + 1],
+            exponent, floor,
+        )
+    return w
+
+
+def edge_row_sums(
+    embeddings: list,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+) -> list:
+    """Per-edge row sums r_j[i] = sum_t w_j(i, t), streamed in O(block * N)
+    memory.  These normalise the WWJ walk distribution p(t) =
+    (1/N1) * prod_j w_j(t_j, t_{j+1}) / r_j(t_j)."""
+    out = []
+    for j in range(len(embeddings) - 1):
+        e1, e2 = embeddings[j], embeddings[j + 1]
+        r = np.zeros(e1.shape[0], np.float64)
+        for s in range(0, e1.shape[0], block):
+            r[s : s + block] = pair_weights(
+                e1[s : s + block], e2, exponent, floor
+            ).sum(axis=1)
+        out.append(r)
+    return out
+
+
+def chain_total_weight(
+    embeddings: list,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+) -> float:
+    """sum over the full cross product of prod_j w_j — via the backward
+    matrix-vector chain v_j = W_j v_{j+1}, streamed (O(max N) memory)."""
+    v = np.ones(embeddings[-1].shape[0], np.float64)
+    for j in range(len(embeddings) - 2, -1, -1):
+        e1, e2 = embeddings[j], embeddings[j + 1]
+        nxt = np.zeros(e1.shape[0], np.float64)
+        for s in range(0, e1.shape[0], block):
+            nxt[s : s + block] = pair_weights(
+                e1[s : s + block], e2, exponent, floor
+            ) @ v
+        v = nxt
+    return float(v.sum())
+
+
 def flat_to_tuples(flat_idx: np.ndarray, sizes: tuple) -> np.ndarray:
     """(n,) flat cross-product indices -> (n, k) per-table indices."""
     return np.stack(np.unravel_index(np.asarray(flat_idx), sizes), axis=1).astype(

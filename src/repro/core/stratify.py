@@ -11,6 +11,15 @@ Two paths:
   top-m threshold is the histogram CDF quantile and a second pass collects the
   indices above it.  This replaces the paper's O(N^2 log N^2) sort with two
   O(N^2) streaming passes and never materialises the cross product.
+
+k-way chains (``stratify_streaming_chain``): the chain weight factorises as
+prefix-weight x last-edge pair weight, so both streaming passes enumerate the
+*prefix* cross product in blocks and hand the accumulated prefix weight to the
+``sim_hist`` kernel as a per-row scale.  Histogram resolution: chain weights
+are products of k-1 terms and concentrate near zero on a linear [0, 1] grid,
+so the histogram bins the geometric-mean weight W**(1/(k-1)) (a monotone
+transform — identical to the raw weight at k=2); the top-m threshold maps back
+as thr**(k-1).  The two-pass memory stays O(N + bins + block*Nk + m).
 """
 from __future__ import annotations
 
@@ -91,8 +100,43 @@ def stratify_dense(
 
 
 # ----------------------------------------------------------------------------
-# Streaming/histogram path (jnp fallback of the sim_hist Pallas kernel).
+# Streaming/histogram path (sim_hist Pallas kernel with jnp/numpy fallback).
 # ----------------------------------------------------------------------------
+
+def _kernel_hist(e1, e2, n_bins, exponent, floor, scale=None):
+    """Fused-kernel histogram, or None when Pallas is unavailable/broken —
+    the caller falls back to the blocked numpy path.  Missing Pallas
+    (ImportError) degrades silently; any other kernel failure is a real bug
+    and is surfaced as a warning so it cannot hide behind the fallback."""
+    try:
+        from repro.kernels.sim_hist import ops as sim_hist_ops
+    except ImportError:
+        return None
+    try:
+        return sim_hist_ops.sim_hist(
+            e1, e2, n_bins, exponent, floor, scale=scale
+        )
+    except Exception as e:
+        import warnings
+
+        warnings.warn(f"sim_hist kernel failed ({e!r}); using jnp fallback")
+        return None
+
+
+def _prefix_chain_weights(embeddings, start, stop, exponent, floor):
+    """Chain weights of prefix tuples [start, stop) in the row-major flat
+    order of the *prefix* cross product (all tables but the last).  Returns
+    (weights, last_prefix_table_indices)."""
+    from .similarity import chain_tuple_weights, flat_to_tuples
+
+    prefix_sizes = tuple(e.shape[0] for e in embeddings[:-1])
+    flat = np.arange(start, stop, dtype=np.int64)
+    tup = flat_to_tuples(flat, prefix_sizes)
+    if len(prefix_sizes) == 1:
+        return np.ones(len(flat), np.float64), tup[:, -1]
+    wp = chain_tuple_weights(embeddings[:-1], tup, exponent, floor)
+    return wp, tup[:, -1]
+
 
 def weight_histogram(
     e1: np.ndarray,
@@ -110,9 +154,9 @@ def weight_histogram(
     from .similarity import pair_weights  # local import to avoid cycle
 
     if use_kernel:
-        from repro.kernels.sim_hist import ops as sim_hist_ops
-
-        return sim_hist_ops.sim_hist(e1, e2, n_bins, exponent, floor)
+        out = _kernel_hist(e1, e2, n_bins, exponent, floor)
+        if out is not None:
+            return out
 
     edges = np.linspace(0.0, 1.0, n_bins + 1)
     counts = np.zeros(n_bins, np.int64)
@@ -121,6 +165,55 @@ def weight_histogram(
         w = pair_weights(e1[s : s + block], e2, exponent, floor)
         c, _ = np.histogram(w, bins=edges)
         counts += c
+    return counts, edges
+
+
+def chain_weight_histogram(
+    embeddings: list,
+    n_bins: int = 4096,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+    use_kernel: bool = False,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Histogram of the geometric-mean chain weight W(t)**(1/(k-1)) over the
+    full k-way cross product, streamed over prefix blocks (O(block * Nk)
+    peak memory).  At k=2 this is exactly ``weight_histogram``."""
+    from .similarity import pair_weights
+
+    k = len(embeddings)
+    if k == 2:
+        return weight_histogram(
+            embeddings[0], embeddings[1], n_bins, exponent, floor, block,
+            use_kernel,
+        )
+    root = 1.0 / (k - 1)
+    e_prev, e_last = embeddings[-2], embeddings[-1]
+    n_prefix = 1
+    for e in embeddings[:-1]:
+        n_prefix *= e.shape[0]
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    counts = np.zeros(n_bins, np.int64)
+    for s in range(0, n_prefix, block):
+        wp, i_last = _prefix_chain_weights(
+            embeddings, s, min(s + block, n_prefix), exponent, floor
+        )
+        done = False
+        if use_kernel:
+            # kernel computes max(clip(sim), floor)**(e*root) * scale —
+            # exactly (wp * w_last)**root when scale = wp**root
+            out = _kernel_hist(
+                e_prev[i_last], e_last, n_bins, exponent * root, floor,
+                scale=wp**root,
+            )
+            if out is not None:
+                counts += out[0]
+                done = True
+        if not done:
+            w = pair_weights(e_prev[i_last], e_last, exponent, floor)
+            v = (wp[:, None] * w) ** root
+            c, _ = np.histogram(v, bins=edges)
+            counts += c
     return counts, edges
 
 
@@ -133,6 +226,48 @@ def threshold_for_top_m(counts: np.ndarray, edges: np.ndarray, m: int) -> float:
     return float(edges[ok[-1]])
 
 
+def _collect_top_pairs_topk(e1, e2, threshold, exponent, floor):
+    """sim_topk-kernel-assisted over-threshold collection for two tables.
+
+    Per-row top-k candidates from the fused kernel; any row whose k-th
+    candidate still clears the threshold may have been truncated and is
+    rescanned exactly.  Returns (flat_idx, weights) or None when the kernel
+    is unavailable or the candidate count would not pay off."""
+    from .similarity import pair_weights, weight_of_score
+
+    n1, n2 = e1.shape[0], e2.shape[0]
+    try:
+        from repro.kernels.sim_topk.ops import sim_topk
+    except ImportError:
+        return None
+    try:
+        vals, idx, valid = sim_topk(e1, e2, k=min(64, n2))
+    except Exception as e:
+        import warnings
+
+        warnings.warn(f"sim_topk kernel failed ({e!r}); using dense scan")
+        return None
+    kk = vals.shape[1]
+    w_vals = weight_of_score(np.asarray(vals, np.float64), exponent, floor)
+    keep = (w_vals >= threshold) & valid
+    if kk < n2:  # a row's hits may have been truncated at kk candidates
+        saturated = np.nonzero(w_vals[:, -1] >= threshold)[0]
+    else:
+        saturated = np.empty(0, np.int64)
+    if len(saturated) > n1 // 4:
+        return None  # threshold too deep for k candidates; dense scan is cheaper
+    keep[saturated] = False
+    r, c = np.nonzero(keep)
+    flat = [r.astype(np.int64) * n2 + idx[r, c]]
+    wts = [w_vals[r, c]]
+    if len(saturated):
+        w = pair_weights(e1[saturated], e2, exponent, floor)
+        rr, cc = np.nonzero(w >= threshold)
+        flat.append(saturated[rr].astype(np.int64) * n2 + cc)
+        wts.append(w[rr, cc])
+    return np.concatenate(flat), np.concatenate(wts)
+
+
 def collect_top(
     e1: np.ndarray,
     e2: np.ndarray,
@@ -141,12 +276,19 @@ def collect_top(
     exponent: float = 1.0,
     floor: float = 1e-3,
     block: int = 4096,
+    use_kernel: bool = False,
 ) -> np.ndarray:
     """Second streaming pass: flat indices of pairs with weight >= threshold,
     sorted by weight descending, truncated to m_cap."""
     from .similarity import pair_weights
 
     n1, n2 = e1.shape[0], e2.shape[0]
+    if use_kernel and m_cap < 16 * n1:
+        out = _collect_top_pairs_topk(e1, e2, threshold, exponent, floor)
+        if out is not None:
+            idx, w = out
+            order = np.argsort(w)[::-1][:m_cap]
+            return idx[order]
     idx_chunks, w_chunks = [], []
     for s in range(0, n1, block):
         w = pair_weights(e1[s : s + block], e2, exponent, floor)
@@ -159,6 +301,84 @@ def collect_top(
     return idx[order]
 
 
+def collect_top_chain(
+    embeddings: list,
+    threshold_root: float,
+    m_cap: int,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+    use_kernel: bool = False,
+) -> np.ndarray:
+    """Flat indices (over the full k-way cross product, row-major) of tuples
+    whose geometric-mean chain weight clears ``threshold_root``, sorted by
+    chain weight descending, truncated to m_cap."""
+    from .similarity import pair_weights
+
+    k = len(embeddings)
+    if k == 2:
+        return collect_top(
+            embeddings[0], embeddings[1], threshold_root, m_cap, exponent,
+            floor, block, use_kernel,
+        )
+    thr_w = threshold_root ** (k - 1)  # back to raw chain-weight space
+    e_prev, e_last = embeddings[-2], embeddings[-1]
+    n_last = e_last.shape[0]
+    n_prefix = 1
+    for e in embeddings[:-1]:
+        n_prefix *= e.shape[0]
+    idx_chunks, w_chunks = [], []
+    for s in range(0, n_prefix, block):
+        wp, i_last = _prefix_chain_weights(
+            embeddings, s, min(s + block, n_prefix), exponent, floor
+        )
+        w = wp[:, None] * pair_weights(e_prev[i_last], e_last, exponent, floor)
+        r, c = np.nonzero(w >= thr_w)
+        idx_chunks.append((r + s).astype(np.int64) * n_last + c)
+        w_chunks.append(w[r, c])
+    idx = np.concatenate(idx_chunks) if idx_chunks else np.empty(0, np.int64)
+    w = np.concatenate(w_chunks) if w_chunks else np.empty(0, np.float64)
+    order = np.argsort(w)[::-1][:m_cap]
+    return idx[order]
+
+
+def stratify_streaming_chain(
+    embeddings: list,
+    alpha: float,
+    budget: int,
+    cfg: BASConfig,
+    n_bins: int = 4096,
+    use_kernel: bool = False,
+) -> Stratification:
+    """Histogram-thresholded stratification of a k-way chain; equal-size
+    strata like the dense path but the threshold (hence membership at the
+    boundary) is bin-resolution approximate.  Strata remain exactly
+    equal-sized; only *which* borderline tuples land in D_K vs D_0 can differ
+    — the estimator stays unbiased because stratum membership is
+    deterministic given the data."""
+    n = 1
+    for e in embeddings:
+        n *= e.shape[0]
+    m = min(int(round(alpha * budget)), n)
+    k = auto_num_strata(alpha, budget, cfg)
+    k = max(1, min(k, m)) if m > 0 else 0
+    if m == 0:
+        return Stratification(np.empty(0, np.int64), np.zeros(1, np.int64), n)
+    counts, edges = chain_weight_histogram(
+        embeddings, n_bins, cfg.weight_exponent, cfg.weight_floor,
+        use_kernel=use_kernel,
+    )
+    thr = threshold_for_top_m(counts, edges, m)
+    order = collect_top_chain(
+        embeddings, thr, m, cfg.weight_exponent, cfg.weight_floor,
+        use_kernel=use_kernel,
+    )
+    m_eff = len(order)
+    k = max(1, min(k, m_eff))
+    bounds = np.round(np.linspace(0, m_eff, k + 1)).astype(np.int64)
+    return Stratification(order=order, bounds=bounds, n_total=n)
+
+
 def stratify_streaming(
     e1: np.ndarray,
     e2: np.ndarray,
@@ -168,23 +388,7 @@ def stratify_streaming(
     n_bins: int = 4096,
     use_kernel: bool = False,
 ) -> Stratification:
-    """Histogram-thresholded stratification; equal-size strata like the dense
-    path but the threshold (hence membership at the boundary) is bin-resolution
-    approximate.  Strata remain exactly equal-sized; only *which* borderline
-    pairs land in D_K vs D_0 can differ — the estimator stays unbiased because
-    stratum membership is deterministic given the data."""
-    n = e1.shape[0] * e2.shape[0]
-    m = min(int(round(alpha * budget)), n)
-    k = auto_num_strata(alpha, budget, cfg)
-    k = max(1, min(k, m)) if m > 0 else 0
-    if m == 0:
-        return Stratification(np.empty(0, np.int64), np.zeros(1, np.int64), n)
-    counts, edges = weight_histogram(
-        e1, e2, n_bins, cfg.weight_exponent, cfg.weight_floor, use_kernel=use_kernel
+    """Two-table wrapper of :func:`stratify_streaming_chain`."""
+    return stratify_streaming_chain(
+        [e1, e2], alpha, budget, cfg, n_bins=n_bins, use_kernel=use_kernel
     )
-    thr = threshold_for_top_m(counts, edges, m)
-    order = collect_top(e1, e2, thr, m, cfg.weight_exponent, cfg.weight_floor)
-    m_eff = len(order)
-    k = max(1, min(k, m_eff))
-    bounds = np.round(np.linspace(0, m_eff, k + 1)).astype(np.int64)
-    return Stratification(order=order, bounds=bounds, n_total=n)

@@ -70,6 +70,15 @@ class BASConfig:
     n_bootstrap: int = 1000       # paper: 1000 resamples
     exact_beta_max_k: int = 16    # exhaustive subset search limit for beta*
     avg_bias_correction: bool = True  # Eq. (3) Taylor correction
+    max_dense_weight_bytes: int = 256 * 2**20
+                                  # engine dispatch threshold: the dense BAS
+                                  # path materialises an (N1*...*Nk,) float64
+                                  # chain-weight array; when that footprint
+                                  # exceeds this cap, run_auto routes to the
+                                  # streaming path (O(N + alpha*b) memory)
+    use_kernel: bool = True       # streaming stratification: use the fused
+                                  # sim_hist/sim_topk Pallas kernels (falls
+                                  # back to blocked jnp when unavailable)
     defensive_mix: float = 0.2    # within-stratum sampling = (1-mix)*importance
                                   # + mix*uniform (Hesterberg defensive IS):
                                   # caps HT weights at |D_i|/mix, bounding the

@@ -6,6 +6,12 @@ The paper stratifies the cross product by sorting all N1*N2 similarity scores
 is never materialised in HBM (O(n_bins) output), and the strata thresholds are
 read off the histogram CDF (see ``repro.core.stratify``).
 
+The optional per-left-row ``scale`` operand generalises the kernel to k-way
+chain joins: the streaming stratifier enumerates the chain's *prefix* space in
+blocks and passes the accumulated prefix chain weight as the scale, so the
+kernel histograms ``scale_i * w(i, j)`` — the full chain weight — while still
+never materialising anything bigger than one (bm, bn) block.
+
 Grid: (M/bm, N/bn), sequential on TPU so the histogram accumulates safely in
 the output block (same output block mapped to every program).
 """
@@ -18,7 +24,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _kernel(e1_ref, e2_ref, out_ref, *, n_bins: int, exponent: float,
+def _kernel(e1_ref, e2_ref, s_ref, out_ref, *, n_bins: int, exponent: float,
             floor: float, bin_chunk: int):
     i, j = pl.program_id(0), pl.program_id(1)
 
@@ -35,6 +41,7 @@ def _kernel(e1_ref, e2_ref, out_ref, *, n_bins: int, exponent: float,
     w = jnp.maximum(w, floor)
     if exponent != 1.0:
         w = w**exponent
+    w = w * s_ref[...].astype(jnp.float32)  # (bm, 1) prefix weights broadcast
     idx = jnp.clip((w * n_bins).astype(jnp.int32), 0, n_bins - 1)
     flat = idx.reshape(1, -1)
 
@@ -57,6 +64,7 @@ def _kernel(e1_ref, e2_ref, out_ref, *, n_bins: int, exponent: float,
 def sim_hist_pallas(
     e1: jax.Array,
     e2: jax.Array,
+    scale: jax.Array | None = None,
     n_bins: int = 4096,
     exponent: float = 1.0,
     floor: float = 1e-3,
@@ -69,6 +77,10 @@ def sim_hist_pallas(
     n, _ = e2.shape
     assert m % bm == 0 and n % bn == 0, "pad inputs to block multiples"
     assert n_bins % bin_chunk == 0
+    if scale is None:
+        scale = jnp.ones((m, 1), jnp.float32)
+    else:
+        scale = scale.reshape(m, 1).astype(jnp.float32)
     grid = (m // bm, n // bn)
     return pl.pallas_call(
         functools.partial(
@@ -79,8 +91,9 @@ def sim_hist_pallas(
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
         ],
         out_specs=pl.BlockSpec((n_bins,), lambda i, j: (0,)),
         out_shape=jax.ShapeDtypeStruct((n_bins,), jnp.int32),
         interpret=interpret,
-    )(e1, e2)
+    )(e1, e2, scale)

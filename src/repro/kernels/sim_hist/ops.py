@@ -1,6 +1,8 @@
 """Public op: fused similarity histogram with numpy in/out for the core
 stratifier.  Uses the Pallas kernel (interpret on CPU, compiled on TPU) and
-pads inputs to block multiples."""
+pads inputs to block multiples.  The optional ``scale`` vector (per-left-row
+multiplier, e.g. chain-prefix weights) turns the pair histogram into a chain
+weight histogram — see ``repro.core.stratify``."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,11 +20,13 @@ def _pad(e, mult):
 
 
 def sim_hist(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, block=256,
-             interpret=None):
-    """Returns (counts[n_bins], edges[n_bins+1]); histogram of pair weights.
+             interpret=None, scale=None):
+    """Returns (counts[n_bins], edges[n_bins+1]); histogram of (optionally
+    row-scaled) pair weights.
 
-    Padding rows produce weight exactly ``floor`` (zero similarity); their
-    counts are subtracted from the floor bin afterwards.
+    Padded left rows get scale 0 (weight 0 -> bin 0); padded right columns
+    pair with real rows at weight ``scale_i * floor**exponent``.  Both
+    contributions are computed exactly on the host and subtracted.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -33,16 +37,20 @@ def sim_hist(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, block=256,
     bn = min(block, max(8, 1 << (n2 - 1).bit_length()))
     e1p, p1 = _pad(e1, bm)
     e2p, p2 = _pad(e2, bn)
+    s = np.ones(n1, np.float32) if scale is None else np.asarray(scale, np.float32)
+    sp = np.concatenate([s, np.zeros(p1, np.float32)]) if p1 else s
     counts = np.asarray(
         sim_hist_pallas(
-            jnp.asarray(e1p), jnp.asarray(e2p), n_bins=n_bins,
+            jnp.asarray(e1p), jnp.asarray(e2p), jnp.asarray(sp), n_bins=n_bins,
             exponent=exponent, floor=floor, bm=bm, bn=bn, interpret=interpret,
         )
     ).astype(np.int64)
-    # remove padded-pair contributions (they land in the floor bin)
-    n_pad_pairs = e1p.shape[0] * e2p.shape[0] - n1 * n2
-    if n_pad_pairs:
-        fb = min(int((floor**exponent) * n_bins), n_bins - 1)
-        counts[fb] -= n_pad_pairs
+    # remove padded-pair contributions
+    if p1:  # padded left rows: scale 0 -> weight 0 -> bin 0, full padded width
+        counts[0] -= p1 * e2p.shape[0]
+    if p2:  # real rows x padded cols: weight = scale_i * floor**exponent
+        wpad = s.astype(np.float64) * (floor**exponent)
+        fb = np.clip((wpad * n_bins).astype(np.int64), 0, n_bins - 1)
+        np.subtract.at(counts, fb, p2)
     edges = np.linspace(0.0, 1.0, n_bins + 1)
     return counts, edges

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 
 
-def sim_hist_ref(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3):
+def sim_hist_ref(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, scale=None):
     scores = jnp.dot(
         e1.astype(jnp.float32), e2.astype(jnp.float32).T,
         preferred_element_type=jnp.float32,
@@ -12,5 +12,7 @@ def sim_hist_ref(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3):
     w = jnp.maximum(w, floor)
     if exponent != 1.0:
         w = w**exponent
+    if scale is not None:
+        w = w * scale.reshape(-1, 1).astype(jnp.float32)
     idx = jnp.clip((w * n_bins).astype(jnp.int32), 0, n_bins - 1)
     return jnp.zeros((n_bins,), jnp.int32).at[idx.reshape(-1)].add(1)

@@ -190,6 +190,32 @@ def _dot_flops(op: Op, symtab: dict) -> float:
     return 2.0 * out_elems * k
 
 
+def _while_scope_from_body(body: Optional[Computation]) -> str:
+    """Reconstruct a while op's scope when the op itself has no metadata
+    (newer XLA drops op_name on hoisted/cloned while ops).  The body ops still
+    carry full scope paths like ``.../jvp(layers_scan)/while/body/...``; the
+    while's own scope is their longest common prefix cut at its *last*
+    ``/while`` segment: body ops are named inside the loop's body scope
+    (``<loop scope>/while/body/...``), so with nested scans the deepest
+    common ``/while/body`` level identifies this loop — e.g. a layers-scan
+    while inside an accum-scan has body ops all prefixed
+    ``.../accum_scan/while/body/jvp(layers_scan)/while/body/`` and must
+    resolve to ``jvp(layers_scan)``, not ``accum_scan``."""
+    if body is None:
+        return ""
+    names = [op.op_name for op in body.ops if op.op_name]
+    if not names:
+        return ""
+    prefix = names[0]
+    for n in names[1:]:
+        while not n.startswith(prefix):
+            prefix = prefix[:-1]
+            if not prefix:
+                return ""
+    cut = prefix.rfind("/while")
+    return prefix[:cut] if cut >= 0 else prefix
+
+
 def _innermost_hint(op_name: str, hints: dict) -> Optional[float]:
     """Most specific matching hint.  Keys may be compound ("a&b"): every part
     must appear in the op_name; specificity = number of parts, ties broken by
@@ -243,10 +269,11 @@ def analyze(
             if oc == "while":
                 body = comps.get(called.get("body", ""))
                 cond = comps.get(called.get("condition", ""))
-                trip = _innermost_hint(op.op_name, trip_hints)
+                scope = op.op_name or _while_scope_from_body(body)
+                trip = _innermost_hint(scope, trip_hints)
                 if trip is None:
                     trip = 1.0
-                    total.unresolved_whiles.append(op.op_name or op.name)
+                    total.unresolved_whiles.append(scope or op.name)
                 inner = Cost()
                 if body:
                     inner = inner + comp_cost(body, trip)

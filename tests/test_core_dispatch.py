@@ -1,0 +1,173 @@
+"""Memory-aware dispatcher + dense/streaming statistical consistency.
+
+The acceptance contract: ``method="auto"`` must route big joins through the
+streaming path without ever allocating the flat N1*...*Nk weight array, and
+the two paths must be statistically interchangeable on the same seeded query.
+"""
+import dataclasses
+import tracemalloc
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    Agg,
+    ArrayOracle,
+    BASConfig,
+    Catalog,
+    JoinMLEngine,
+    Query,
+    Table,
+    choose_path,
+    dense_weight_bytes,
+    run_auto,
+    run_bas,
+    run_bas_streaming,
+)
+from repro.data import make_chain_dataset, make_clustered_tables
+
+
+def small_cap(cap_bytes: int) -> BASConfig:
+    return dataclasses.replace(BASConfig(), max_dense_weight_bytes=cap_bytes)
+
+
+def test_choose_path_threshold():
+    ds = make_clustered_tables(100, 100, n_entities=100, noise=0.4, seed=0)
+    spec = ds.spec()
+    assert dense_weight_bytes(spec) == 100 * 100 * 8
+    assert choose_path(spec) == "dense"  # default cap is 256 MiB
+    assert choose_path(spec, small_cap(100 * 100 * 8 - 1)) == "streaming"
+    assert choose_path(spec, small_cap(100 * 100 * 8)) == "dense"
+
+
+def test_auto_dispatch_recorded_in_detail():
+    ds = make_clustered_tables(120, 120, n_entities=150, noise=0.4, seed=3)
+    q = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=2000)
+    res = run_auto(q, seed=0)
+    assert res.detail["dispatch"]["path"] == "dense"
+    assert res.detail["mode"] == "bas"
+    q = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=2000)
+    res = run_auto(q, small_cap(1024), seed=0)
+    assert res.detail["dispatch"]["path"] == "streaming"
+    assert res.detail["mode"] == "bas_streaming"
+
+
+def test_dense_streaming_consistent_two_way():
+    ds = make_clustered_tables(250, 250, n_entities=400, noise=0.4, seed=7)
+    truth = float(ds.truth.sum())
+    errs_d, errs_s, cover_d, cover_s = [], [], 0, 0
+    n_rep = 3
+    for seed in range(n_rep):
+        qd = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=5000)
+        rd = run_bas(qd, seed=seed)
+        qs = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=5000)
+        rs = run_bas_streaming(qs, seed=seed)
+        assert rs.oracle_calls <= 5000
+        errs_d.append(abs(rd.estimate - truth) / truth)
+        errs_s.append(abs(rs.estimate - truth) / truth)
+        cover_d += rd.ci.contains(truth)
+        cover_s += rs.ci.contains(truth)
+    assert np.mean(errs_d) < 0.4
+    assert np.mean(errs_s) < max(2.5 * np.mean(errs_d), 0.4)
+    assert cover_d >= n_rep - 1 and cover_s >= n_rep - 1
+
+
+def test_dense_streaming_consistent_three_way():
+    ds = make_chain_dataset([90, 80, 70], n_entities=40, noise=0.35, seed=5)
+    truth = float(ds.truth_flat().sum())
+    assert truth > 0
+    qd = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=8000)
+    rd = run_bas(qd, seed=0)
+    qs = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(), budget=8000)
+    rs = run_bas_streaming(qs, seed=0)
+    assert rs.oracle_calls <= 8000
+    assert abs(rd.estimate - truth) / truth < 0.5
+    assert abs(rs.estimate - truth) / truth < 0.5
+    # CIs of the two paths must overlap (same design, same data)
+    assert rs.ci.lo <= rd.ci.hi and rd.ci.lo <= rs.ci.hi
+
+
+def test_streaming_three_way_never_materialises_flat_weights(monkeypatch):
+    """Acceptance: auto on a 160^3 chain (flat weights would be ~33 MB) runs
+    streaming under a 24 MB python-heap peak and never calls the dense
+    chain_weights materialiser."""
+    import repro.core.bas as bas_mod
+
+    ds = make_chain_dataset([160, 160, 160], n_entities=60, noise=0.35, seed=9)
+    spec = ds.spec()
+    dense_bytes = dense_weight_bytes(spec)
+    assert dense_bytes == 160**3 * 8  # ~33 MB
+
+    def boom(*a, **k):
+        raise AssertionError("dense chain_weights materialised on streaming path")
+
+    monkeypatch.setattr(bas_mod, "chain_weights", boom)
+    truth = float(ds.truth_flat().sum())
+    cfg = small_cap(8 * 2**20)  # 8 MiB cap << 33 MB footprint
+    q = Query(spec=spec, agg=Agg.COUNT, oracle=ds.oracle(), budget=6000)
+    tracemalloc.start()
+    res = run_auto(q, cfg, seed=0)
+    _, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    assert res.detail["dispatch"]["path"] == "streaming"
+    assert res.detail["dispatch"]["dense_weight_bytes"] == dense_bytes
+    assert peak < 24 * 2**20, f"python-heap peak {peak/2**20:.1f} MiB"
+    assert res.oracle_calls <= 6000
+    if truth > 0:
+        assert abs(res.estimate - truth) / truth < 1.0
+
+
+def test_streaming_median_min_max_supported():
+    """The shared pipeline gives the streaming path the dense extensions."""
+    ds = make_clustered_tables(150, 150, n_entities=200, noise=0.4, seed=11)
+    g_col = ds.columns1["value"]
+    g = lambda idx: g_col[idx[:, 0]]  # noqa: E731
+    vals = np.broadcast_to(g_col[:, None], ds.truth.shape)[ds.truth > 0]
+    q = Query(spec=ds.spec(), agg=Agg.MAX, oracle=ds.oracle(), budget=4000, g=g)
+    q.g_bounds = (float(g_col.min()), float(g_col.max()))
+    r = run_bas_streaming(q, seed=0)
+    assert r.estimate <= vals.max() + 1e-9
+    assert r.ci.hi >= vals.max()
+    q = Query(spec=ds.spec(), agg=Agg.MEDIAN, oracle=ds.oracle(), budget=4000, g=g)
+    r = run_bas_streaming(q, seed=0)
+    assert np.quantile(vals, 0.02) <= r.estimate <= np.quantile(vals, 0.98)
+
+
+@pytest.fixture(scope="module")
+def chain_engine():
+    ds = make_chain_dataset([80, 70, 60], n_entities=35, noise=0.35, seed=21)
+    cat = Catalog()
+    for name, emb in zip(("a", "b", "c"), ds.embeddings):
+        cat.register(Table(name, emb))
+    return JoinMLEngine(cat, lambda nl, names: ds.oracle()), ds
+
+
+def test_engine_auto_three_way(chain_engine):
+    eng, ds = chain_engine
+    truth = float(ds.truth_flat().sum())
+    res = eng.execute(
+        "SELECT COUNT(*) FROM a JOIN b JOIN c ON NL('same entity') "
+        "ORACLE BUDGET 6000 WITH PROBABILITY 0.95"
+    )
+    assert res.detail["dispatch"]["path"] == "dense"  # 336k tuples fit
+    assert np.isfinite(res.estimate)
+    eng_small = JoinMLEngine(eng.catalog, eng.oracle_factory, cfg=small_cap(2**20))
+    res = eng_small.execute(
+        "SELECT COUNT(*) FROM a JOIN b JOIN c ON NL('same entity') "
+        "ORACLE BUDGET 6000 WITH PROBABILITY 0.95"
+    )
+    assert res.detail["dispatch"]["path"] == "streaming"
+    assert res.detail["mode"] == "bas_streaming"
+    if truth > 0:
+        assert abs(res.estimate - truth) / truth < 1.0
+
+
+def test_engine_explicit_streaming_method(chain_engine):
+    eng, ds = chain_engine
+    res = eng.execute(
+        "SELECT COUNT(*) FROM a JOIN b JOIN c ON NL('same entity') "
+        "ORACLE BUDGET 5000 WITH PROBABILITY 0.9",
+        method="bas-streaming",
+    )
+    assert res.detail["mode"] == "bas_streaming"
+    assert res.oracle_calls <= 5000
