@@ -1,0 +1,100 @@
+"""Oracle execution-layer benchmark: labelling throughput and dedup ratio of
+the vectorized flat-index cache vs. the legacy per-tuple dict cache, across
+request batch sizes.
+
+The request stream models BAS traffic: many small-to-large batches drawn with
+replacement from a skewed pool (pilot resampling + top-up rounds revisit the
+same high-weight tuples), so cache hits and within-batch duplicates are
+common — exactly the regime the batched layer is built for.
+
+Rows: ``oracle_{cache}_b{batch}`` with labels/sec and the achieved dedup
+ratio.  Run in CI (``--smoke``) so regressions in the oracle hot path are
+visible.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.oracle import Oracle
+
+from .common import row
+
+
+class _LegacyDictOracle(Oracle):
+    """The pre-batching cache: tuple-keyed Python dict, per-row round trips.
+    Kept here (not in the library) purely as the benchmark baseline."""
+
+    def __init__(self, n: int):
+        super().__init__()
+        self._dict: dict = {}
+        self.n = n
+
+    def _label(self, idx: np.ndarray) -> np.ndarray:
+        return (idx.sum(axis=1) % 2).astype(np.float64)
+
+    def label(self, idx: np.ndarray) -> np.ndarray:  # legacy semantics
+        idx = np.asarray(idx)
+        if idx.ndim == 1:
+            idx = idx[:, None]
+        self.requests += idx.shape[0]
+        keys = [tuple(int(v) for v in r) for r in idx]
+        missing = [i for i, k in enumerate(keys) if k not in self._dict]
+        if missing:
+            labels = self._label(idx[missing])
+            for j, i in enumerate(missing):
+                self._dict[keys[i]] = float(labels[j])
+            self.calls += len(missing)
+        return np.array([self._dict[k] for k in keys], np.float64)
+
+
+class _VectorOracle(Oracle):
+    def _label(self, idx: np.ndarray) -> np.ndarray:
+        return (idx.sum(axis=1) % 2).astype(np.float64)
+
+
+def _request_stream(n_side: int, n_requests: int, batch: int, rng):
+    """Skewed (quadratic-tilt) tuple draws with replacement: repeated batches
+    revisit hot tuples, like pilot + main-stage BAS sampling."""
+    hot = (rng.random((n_requests, batch, 2)) ** 6 * n_side).astype(np.int64)
+    return list(hot)
+
+
+def run(fast: bool = True, smoke: bool = False):
+    rows = []
+    rng = np.random.default_rng(0)
+    if smoke:                        # CI profile: smallest signal-bearing run
+        n_side, n_requests, batches = 1000, 12, (256, 1024)
+    elif fast:
+        n_side, n_requests, batches = 2000, 24, (256, 2048)
+    else:
+        n_side, n_requests, batches = 20000, 64, (64, 512, 4096)
+    for batch in batches:
+        stream = _request_stream(n_side, n_requests, batch, rng)
+        total = n_requests * batch
+
+        legacy = _LegacyDictOracle(n_side)
+        t0 = time.perf_counter()
+        for req in stream:
+            legacy.label(req)
+        dt_legacy = time.perf_counter() - t0
+
+        vec = _VectorOracle()
+        vec.bind_sizes((n_side, n_side))
+        t0 = time.perf_counter()
+        for req in stream:
+            vec.label(req)
+        dt_vec = time.perf_counter() - t0
+
+        assert vec.calls <= legacy.calls  # vectorized dedupes within-batch too
+        rows.append(row(
+            f"oracle_dict_b{batch}", dt_legacy / total,
+            f"labels_per_s={total / max(dt_legacy, 1e-12):.0f}",
+        ))
+        rows.append(row(
+            f"oracle_vec_b{batch}", dt_vec / total,
+            f"labels_per_s={total / max(dt_vec, 1e-12):.0f};"
+            f"dedup={vec.dedup_ratio:.3f};speedup={dt_legacy / max(dt_vec, 1e-12):.1f}x",
+        ))
+    return rows

@@ -20,14 +20,20 @@ MODULES = {
     "sensitivity": "benchmarks.bench_sensitivity",  # Fig 13
     "latency": "benchmarks.bench_latency",          # Fig 14 / App A
     "kernels": "benchmarks.bench_kernels",          # Pallas vs ref
+    "oracle": "benchmarks.bench_oracle",            # batched oracle layer
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale reps")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke profile: overrides --full and passes "
+                         "smoke=True to modules that support a reduced run")
     ap.add_argument("--only", default=None, help="comma-separated module keys")
     args = ap.parse_args()
+    if args.smoke:
+        args.full = False
     keys = list(MODULES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = 0
@@ -36,8 +42,13 @@ def main() -> None:
 
         t0 = time.time()
         try:
+            import inspect
+
             mod = importlib.import_module(MODULES[key])
-            rows = mod.run(fast=not args.full)
+            kwargs = {"fast": not args.full}
+            if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            rows = mod.run(**kwargs)
             for r in rows:
                 print(r, flush=True)
             print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)

@@ -50,7 +50,26 @@ def main():
     p = scorer.score(pairs)
     dt = time.time() - t0
     print(f"pair scoring: {len(pairs)} pairs in {dt:.2f}s "
-          f"({len(pairs)/max(dt,1e-9):.1f} pairs/s), mean P(match)={p.mean():.3f}")
+          f"({len(pairs)/max(dt,1e-9):.1f} pairs/s, "
+          f"{scorer.forward_batches} device batches), mean P(match)={p.mean():.3f}")
+
+    # --- the batched Oracle layer on top of the scorer ----------------------
+    # Many call sites enqueue requests; one flush dedupes across all of them,
+    # charges the budget ledger once, and reaches the model as a single batch.
+    from repro.core import ModelOracle, OracleBatch
+
+    oracle = ModelOracle(scorer, threshold=0.5)
+    oracle.bind_sizes((32, 32))
+    batch = OracleBatch(oracle)
+    rng = np.random.default_rng(1)
+    handles = [
+        batch.submit(rng.integers(0, 32, size=(24, 2))) for _ in range(6)
+    ]
+    batch.flush()
+    labels = np.concatenate([h.labels for h in handles])
+    print(f"oracle batch: {oracle.requests} requests -> {oracle.calls} model "
+          f"pairs in {oracle.batches} flush(es), dedup={oracle.dedup_ratio:.2f}, "
+          f"match rate={labels.mean():.3f}")
 
 
 if __name__ == "__main__":

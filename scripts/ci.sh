@@ -8,3 +8,8 @@ python -m pip install -q -r requirements-dev.txt || \
   echo "WARN: dev deps install failed (offline?); property tests will skip" >&2
 
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+
+# Oracle execution-layer smoke benchmark: fails loudly if the batched
+# labelling path regresses (see benchmarks/bench_oracle.py).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m benchmarks.run \
+  --only oracle --smoke

@@ -8,7 +8,15 @@ from .types import (  # noqa: F401
     QueryResult,
     constant_attr,
 )
-from .oracle import ArrayOracle, FnOracle, ModelOracle, Oracle, PairChainOracle  # noqa: F401
+from .oracle import (  # noqa: F401
+    ArrayOracle,
+    FnOracle,
+    ModelOracle,
+    Oracle,
+    OracleBatch,
+    OracleRequest,
+    PairChainOracle,
+)
 from .bas import run_bas, run_exact, run_stratified_pipeline  # noqa: F401
 from .bas_streaming import run_bas_streaming  # noqa: F401
 from .dispatch import choose_path, dense_weight_bytes, run_auto  # noqa: F401

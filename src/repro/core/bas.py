@@ -44,29 +44,56 @@ from .estimators import (
     combined_extreme,
     combined_sum,
 )
+from .oracle import OracleBatch
 from .similarity import chain_weights, flat_to_tuples
 from .stratify import Stratification, stratify_dense
 from .types import Agg, BASConfig, ConfidenceInterval, Query, QueryResult
 from .wander import flat_sample
 
 
-def _sample_stratum(
+@dataclasses.dataclass
+class StratumDraw:
+    """A within-stratum sample *before* labelling: the pipeline coalesces all
+    draws of a stage into one :class:`~repro.core.oracle.OracleBatch` flush,
+    so sampling closures never talk to the Oracle themselves."""
+
+    tup: np.ndarray    # (n, k) tuple indices
+    q: np.ndarray      # (n,) exact within-stratum sampling probabilities
+    size: int          # |D_i|
+
+
+def _draw_stratum(
     weights: np.ndarray,
     flat_idx: np.ndarray,
     n: int,
     query: Query,
     rng: np.random.Generator,
     defensive_mix: float = 0.0,
-) -> StratumSample:
+) -> StratumDraw:
     """WWJ within-stratum sampling: prob ∝ weight (plus a defensive uniform
     component), HT prob = exact normalised q."""
     w = weights[flat_idx]
     pos, q = flat_sample(w, n, rng, defensive_mix)
     chosen = flat_idx[pos]
     tup = flat_to_tuples(chosen, query.spec.sizes)
-    o = query.oracle.label(tup)
-    g = query.attr()(tup)
-    return StratumSample(o=o, g=g, q=q, size=len(flat_idx))
+    return StratumDraw(tup=tup, q=q, size=len(flat_idx))
+
+
+def _label_draws(
+    query: Query, draws: list
+) -> list:
+    """Materialise StratumSamples from draws with ONE coalesced Oracle batch
+    (dedup across strata/stages, single ledger charge, single backend call)."""
+    batch = OracleBatch(query.oracle)
+    handles = [None if d is None else batch.submit(d.tup) for d in draws]
+    batch.flush()
+    g = query.attr()
+    return [
+        None if d is None else StratumSample(
+            o=h.labels, g=g(d.tup), q=d.q, size=d.size
+        )
+        for d, h in zip(draws, handles)
+    ]
 
 
 def _linearised_variance(s: StratumSample, agg: Agg, ratio: float, count_hat: float) -> float:
@@ -92,6 +119,7 @@ def _stratum_flat_indices(strat: Stratification, weights: np.ndarray):
 
 def run_exact(query: Query) -> QueryResult:
     """Label everything (only valid when budget >= |D|)."""
+    query.oracle.bind_sizes(query.spec.sizes)
     n = query.spec.n_tuples
     tup = flat_to_tuples(np.arange(n), query.spec.sizes)
     o = query.oracle.label(tup)
@@ -111,7 +139,7 @@ def run_exact(query: Query) -> QueryResult:
         estimate=float(est),
         ci=ConfidenceInterval(float(est), float(est), query.confidence),
         oracle_calls=query.oracle.calls,
-        detail={"mode": "exact"},
+        detail={"mode": "exact", "oracle": query.oracle.stats()},
     )
 
 
@@ -125,13 +153,14 @@ class StratifiedSpace:
     join space, independent of whether the cross product is materialised.
 
     ``sample_stratum(i, n)`` draws n tuples from stratum i with exact
-    within-stratum probabilities (labels + attributes included);
-    ``stratum_tuples(i)`` enumerates stratum i's (n_i, k) tuple indices for
-    blocking (only ever called for i >= 1 — D_0 cannot be blocked)."""
+    within-stratum probabilities and returns a :class:`StratumDraw` — no
+    labels: the pipeline batches all labelling through the Oracle's batch
+    API.  ``stratum_tuples(i)`` enumerates stratum i's (n_i, k) tuple indices
+    for blocking (only ever called for i >= 1 — D_0 cannot be blocked)."""
 
     sizes: np.ndarray          # (K+1,) |D_0..D_K|
     weight_sums: np.ndarray    # (K+1,) total sampling weight per stratum
-    sample_stratum: Callable[[int, int], StratumSample]
+    sample_stratum: Callable[[int, int], StratumDraw]
     stratum_tuples: Callable[[int], np.ndarray]
 
 
@@ -158,10 +187,11 @@ def run_stratified_pipeline(
     while n_pilot.sum() > b1 and n_pilot.max() > 2:
         n_pilot[np.argmax(n_pilot)] -= 1
 
-    samples: list[Optional[StratumSample]] = [None] * (k + 1)
+    pilot_draws: list[Optional[StratumDraw]] = [None] * (k + 1)
     for i in range(k + 1):
         if sizes[i] > 0:
-            samples[i] = space.sample_stratum(i, int(n_pilot[i]))
+            pilot_draws[i] = space.sample_stratum(i, int(n_pilot[i]))
+    samples: list[Optional[StratumSample]] = _label_draws(query, pilot_draws)
 
     live = [s for s in samples if s is not None]
     c_hat, _ = combined_count(live, BlockedRegime(np.zeros(0), np.zeros(0)))
@@ -188,10 +218,14 @@ def run_stratified_pipeline(
     # ---- stage 2: blocking + sampling -------------------------------------
     t0 = time.perf_counter()
     blocked_o, blocked_g = [], []
-    for i in sorted(beta):
-        tup = space.stratum_tuples(i)
-        blocked_o.append(query.oracle.label(tup))
-        blocked_g.append(query.attr()(tup))
+    block_batch = OracleBatch(query.oracle)
+    beta_tuples = [(i, space.stratum_tuples(i)) for i in sorted(beta)]
+    beta_handles = [block_batch.submit(tup) for _, tup in beta_tuples]
+    block_batch.flush()
+    g_fn = query.attr()
+    for (_, tup), h in zip(beta_tuples, beta_handles):
+        blocked_o.append(h.labels)
+        blocked_g.append(g_fn(tup))
     blocked = BlockedRegime(
         o=np.concatenate(blocked_o) if blocked_o else np.zeros(0),
         g=np.concatenate(blocked_g) if blocked_g else np.zeros(0),
@@ -209,11 +243,16 @@ def run_stratified_pipeline(
         while n_main.sum() > remaining:
             n_main[np.argmax(n_main)] -= 1
         before = query.oracle.calls
+        round_draws: list[Optional[StratumDraw]] = [None] * (k + 1)
         for j, i in enumerate(sampled_ids):
             if n_main[j] <= 0:
                 continue
-            new = space.sample_stratum(i, int(n_main[j]))
-            samples[i] = new if samples[i] is None else samples[i].merge(new)
+            round_draws[i] = space.sample_stratum(i, int(n_main[j]))
+        round_samples = _label_draws(query, round_draws)
+        for i in sampled_ids:
+            new = round_samples[i]
+            if new is not None:
+                samples[i] = new if samples[i] is None else samples[i].merge(new)
         rounds += 1
         if query.oracle.calls == before:  # everything cached; budget cannot move
             break
@@ -255,6 +294,7 @@ def run_stratified_pipeline(
             "pilot_n": n_pilot.tolist(),
             "est_mse": allocation.est_mse,
             "timings": timings,
+            "oracle": query.oracle.stats(),
         },
     )
 
@@ -271,6 +311,7 @@ def run_bas(
     timings: dict = {}
 
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     n_total = query.spec.n_tuples
     if query.budget >= n_total:
         return run_exact(query)
@@ -299,14 +340,12 @@ def run_bas(
     w0[strat.order] = 0.0
     timings["stratify_s"] = time.perf_counter() - t0
 
-    def sample_stratum(i: int, n: int) -> StratumSample:
+    def sample_stratum(i: int, n: int) -> StratumDraw:
         if i == 0:
             pos, q = flat_sample(w0, n, rng, cfg.defensive_mix)
             tup = flat_to_tuples(pos, query.spec.sizes)
-            o = query.oracle.label(tup)
-            g = query.attr()(tup)
-            return StratumSample(o=o, g=g, q=q, size=int(sizes[0]))
-        return _sample_stratum(weights, per_idx[i], n, query, rng, cfg.defensive_mix)
+            return StratumDraw(tup=tup, q=q, size=int(sizes[0]))
+        return _draw_stratum(weights, per_idx[i], n, query, rng, cfg.defensive_mix)
 
     space = StratifiedSpace(
         sizes=sizes,

@@ -35,8 +35,7 @@ from typing import Optional
 
 import numpy as np
 
-from .bas import StratifiedSpace, run_exact, run_stratified_pipeline
-from .estimators import StratumSample
+from .bas import StratifiedSpace, StratumDraw, run_exact, run_stratified_pipeline
 from .similarity import (
     aligned_pair_weights,
     chain_total_weight,
@@ -98,6 +97,7 @@ def run_bas_streaming(
     timings: dict = {}
 
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     if query.budget >= query.spec.n_tuples:
         return run_exact(query)
 
@@ -148,7 +148,7 @@ def run_bas_streaming(
         weight_sums[i] = float(per_w[i].sum())
     timings["similarity_s"] = time.perf_counter() - t0
 
-    def sample_stratum(i: int, n: int) -> StratumSample:
+    def sample_stratum(i: int, n: int) -> StratumDraw:
         if i == 0:
             tup, pw = _walk_rejection_sample(
                 embeddings, sizes_spec, top_set, n, cfg, rng
@@ -157,9 +157,7 @@ def run_bas_streaming(
         else:
             pos, q = flat_sample(per_w[i], n, rng, cfg.defensive_mix)
             tup = per_tup[i][pos]
-        o = query.oracle.label(tup)
-        g = query.attr()(tup)
-        return StratumSample(o=o, g=g, q=q, size=int(sizes[i]))
+        return StratumDraw(tup=tup, q=q, size=int(sizes[i]))
 
     space = StratifiedSpace(
         sizes=sizes,

@@ -17,6 +17,7 @@ from typing import Optional
 import numpy as np
 
 from .estimators import BlockedRegime, StratumSample
+from .oracle import OracleBatch
 from .similarity import chain_weights, flat_to_tuples
 from .stratify import stratify_dense
 from .types import Agg, BASConfig, ConfidenceInterval, Query, QueryResult
@@ -26,13 +27,15 @@ from .wander import clt_ci, flat_sample, ht_terms, walk_sample
 def _finalize(query: Query, total_mean: float, ci: ConfidenceInterval, n_space: int,
               detail: dict) -> QueryResult:
     return QueryResult(
-        estimate=total_mean, ci=ci, oracle_calls=query.oracle.calls, detail=detail
+        estimate=total_mean, ci=ci, oracle_calls=query.oracle.calls,
+        detail={**detail, "oracle": query.oracle.stats()},
     )
 
 
 def run_uniform(query: Query, seed: int = 0) -> QueryResult:
     rng = np.random.default_rng(seed)
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     n_space = query.spec.n_tuples
     n = min(query.budget, n_space)
     flat = rng.integers(0, n_space, size=n)
@@ -85,6 +88,7 @@ def run_wwj(query: Query, cfg: Optional[BASConfig] = None, seed: int = 0,
     cfg = cfg or BASConfig()
     rng = np.random.default_rng(seed)
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     n = query.budget
     if weights is not None:
         pos, p = flat_sample(np.asarray(weights, np.float64), n, rng)
@@ -154,6 +158,7 @@ def run_blocking(
     cfg = cfg or BASConfig()
     rng = np.random.default_rng(seed)
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     if weights is None:
         weights = chain_weights(query.spec.embeddings, cfg.weight_exponent, cfg.weight_floor)
     cand = np.nonzero(weights >= threshold)[0]
@@ -201,6 +206,7 @@ def run_abae(query: Query, cfg: Optional[BASConfig] = None, seed: int = 0,
     cfg = cfg or BASConfig()
     rng = np.random.default_rng(seed)
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     if weights is None:
         weights = chain_weights(query.spec.embeddings, cfg.weight_exponent, cfg.weight_floor)
     n_space = query.spec.n_tuples
@@ -213,14 +219,24 @@ def run_abae(query: Query, cfg: Optional[BASConfig] = None, seed: int = 0,
     sig = np.zeros(k)
     per_idx = [np.nonzero(stratum_of == i)[0] for i in range(k)]
     pilot_per = max(b1 // k, 2)
-    pilot_data = []
+    # pilot: one coalesced Oracle batch across all strata
+    pilot_batch = OracleBatch(query.oracle)
+    pilot_reqs: list = []
     for i in range(k):
         if len(per_idx[i]) == 0:
-            pilot_data.append((np.zeros(0), np.zeros(0)))
+            pilot_reqs.append(None)
             continue
         sel = rng.integers(0, len(per_idx[i]), size=min(pilot_per, b1))
         tup = flat_to_tuples(per_idx[i][sel], query.spec.sizes)
-        o = query.oracle.label(tup)
+        pilot_reqs.append((tup, pilot_batch.submit(tup)))
+    pilot_batch.flush()
+    pilot_data = []
+    for i in range(k):
+        if pilot_reqs[i] is None:
+            pilot_data.append((np.zeros(0), np.zeros(0)))
+            continue
+        tup, h = pilot_reqs[i]
+        o = h.labels
         g = query.attr()(tup)
         v = g * o if query.agg in (Agg.SUM, Agg.AVG) else o
         sig[i] = np.std(v, ddof=1) if len(v) > 1 else 0.0
@@ -228,17 +244,27 @@ def run_abae(query: Query, cfg: Optional[BASConfig] = None, seed: int = 0,
     sizes = np.array([len(ix) for ix in per_idx], np.float64)
     alloc = sizes * sig
     alloc = alloc / max(alloc.sum(), 1e-300) * b2
+    # main: one coalesced Oracle batch across all strata
+    main_batch = OracleBatch(query.oracle)
+    main_reqs: list = [None] * k
+    for i in range(k):
+        if len(per_idx[i]) == 0:
+            continue
+        n_i = int(alloc[i])
+        if n_i > 0:
+            sel = rng.integers(0, len(per_idx[i]), size=n_i)
+            tup = flat_to_tuples(per_idx[i][sel], query.spec.sizes)
+            main_reqs[i] = (tup, main_batch.submit(tup))
+    main_batch.flush()
     est, var = 0.0, 0.0
     est_c, var_c = 0.0, 0.0
     for i in range(k):
         if len(per_idx[i]) == 0:
             continue
-        n_i = int(alloc[i])
         o, g = pilot_data[i]
-        if n_i > 0:
-            sel = rng.integers(0, len(per_idx[i]), size=n_i)
-            tup = flat_to_tuples(per_idx[i][sel], query.spec.sizes)
-            o = np.concatenate([o, query.oracle.label(tup)])
+        if main_reqs[i] is not None:
+            tup, h = main_reqs[i]
+            o = np.concatenate([o, h.labels])
             g = np.concatenate([g, query.attr()(tup)])
         if len(o) == 0:
             continue
@@ -269,6 +295,7 @@ def run_blazeit(query: Query, cfg: Optional[BASConfig] = None, seed: int = 0,
     cfg = cfg or BASConfig()
     rng = np.random.default_rng(seed)
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     if weights is None:
         weights = chain_weights(query.spec.embeddings, cfg.weight_exponent, cfg.weight_floor)
     n_space = query.spec.n_tuples

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Callable, Optional
+from typing import Callable, Optional, Union
 
 import numpy as np
 
@@ -46,13 +46,16 @@ class Catalog:
         return self.tables[name]
 
 
+_NL_RE = r"NL\s*\(\s*'[^']*'\s*\)"
 _QUERY_RE = re.compile(
     r"SELECT\s+(?P<agg>AVG|SUM|COUNT|MIN|MAX|MEDIAN)\s*\(\s*(?P<expr>[^)]*)\s*\)\s+"
-    r"FROM\s+(?P<tables>.+?)\s+ON\s+NL\s*\(\s*'(?P<nl>[^']*)'\s*\)"
+    r"FROM\s+(?P<tables>.+?)\s+ON\s+"
+    rf"(?P<on>{_NL_RE}(?:\s+AND\s+{_NL_RE})*)"
     r"(?:\s+ORACLE\s+BUDGET\s+(?P<budget>\d+))?"
     r"(?:\s+WITH\s+PROBABILITY\s+(?P<prob>[\d.]+))?\s*;?\s*$",
     re.IGNORECASE | re.DOTALL,
 )
+_NL_EXTRACT_RE = re.compile(r"NL\s*\(\s*'([^']*)'\s*\)", re.IGNORECASE)
 
 
 @dataclasses.dataclass
@@ -60,23 +63,38 @@ class ParsedQuery:
     agg: Agg
     expr: str
     table_names: list[str]
-    nl_condition: str
+    nl_conditions: list[str]   # one per join edge (or a single conjoint one)
     budget: Optional[int]
     confidence: Optional[float]
 
+    @property
+    def nl_condition(self) -> str:
+        """First (or only) predicate — kept for single-predicate callers."""
+        return self.nl_conditions[0]
+
 
 def parse_query(sql: str) -> ParsedQuery:
+    """Parse ``... ON NL('...') [AND NL('...') ...]`` — a conjunction carries
+    one predicate per join edge (k tables -> k-1 edges), matching the paper's
+    multi-way chain-join syntax; a single predicate applies to every edge."""
     m = _QUERY_RE.match(" ".join(sql.split()))
     if not m:
         raise ValueError(f"cannot parse JoinML query: {sql!r}")
     names = [
         t.strip() for t in re.split(r"\s+JOIN\s+", m.group("tables"), flags=re.I)
     ]
+    conditions = _NL_EXTRACT_RE.findall(m.group("on"))
+    if len(conditions) not in (1, len(names) - 1):
+        raise ValueError(
+            f"{len(conditions)} NL predicates for {len(names)} tables: a "
+            f"conjunction must supply one predicate per join edge "
+            f"({len(names) - 1}) or a single predicate for all edges"
+        )
     return ParsedQuery(
         agg=Agg[m.group("agg").upper()],
         expr=m.group("expr").strip(),
         table_names=names,
-        nl_condition=m.group("nl"),
+        nl_conditions=conditions,
         budget=int(m.group("budget")) if m.group("budget") else None,
         confidence=float(m.group("prob")) if m.group("prob") else None,
     )
@@ -127,12 +145,14 @@ def _compile_expr(expr: str, tables: list[Table]) -> Optional[AttrFn]:
 class JoinMLEngine:
     """Executes JoinML queries.  ``oracle_factory(nl_condition, table_names)``
     supplies the Oracle for a given join predicate (e.g. a ModelOracle bound to
-    the serving stack, or an ArrayOracle in tests)."""
+    the serving stack, or an ArrayOracle in tests).  ``nl_condition`` is a
+    single string for one predicate, or the list of per-edge predicates when
+    the query conjoins ``NL('...') AND NL('...')`` (one per join edge)."""
 
     def __init__(
         self,
         catalog: Catalog,
-        oracle_factory: Callable[[str, list[str]], Oracle],
+        oracle_factory: Callable[[Union[str, list[str]], list[str]], Oracle],
         cfg: Optional[BASConfig] = None,
     ):
         self.catalog = catalog
@@ -145,10 +165,12 @@ class JoinMLEngine:
         tables = [self.catalog[n] for n in pq.table_names]
         spec = JoinSpec(embeddings=[t.embeddings for t in tables])
         g = _compile_expr(pq.expr, tables)
+        nl = (pq.nl_conditions if len(pq.nl_conditions) > 1
+              else pq.nl_conditions[0])
         return Query(
             spec=spec,
             agg=pq.agg,
-            oracle=self.oracle_factory(pq.nl_condition, pq.table_names),
+            oracle=self.oracle_factory(nl, pq.table_names),
             g=g,
             budget=budget or pq.budget or 10000,
             confidence=confidence or pq.confidence or 0.95,

@@ -1,16 +1,50 @@
-"""Oracle interfaces + budget ledger.
+"""Oracle interfaces, budget ledger, and the batched execution layer.
 
-The Oracle is the expensive pairwise (k-tuple-wise) labeller (paper §2).  Every
-implementation routes through :class:`BudgetLedger`, which (a) enforces the
-user-facing guarantee "the Oracle will not be executed on more than b tuples"
-and (b) caches results so pilot-stage labels are reused in the main stage for
-free (paper §5.3: "to avoid applying Oracle on the same data tuples twice, we
-cache the Oracle results").
+The Oracle is the expensive pairwise (k-tuple-wise) labeller (paper §2).
+Every implementation routes through the ledger semantics implemented here,
+which (a) enforce the user-facing guarantee "the Oracle will not be executed
+on more than b tuples" and (b) cache results so pilot-stage labels are reused
+in the main stage for free (paper §5.3: "to avoid applying Oracle on the same
+data tuples twice, we cache the Oracle results").
+
+Cache layout
+------------
+Results are cached under *flat* cross-product indices: a (n, k) tuple-index
+array is encoded to a (n,) int64 key vector (``tuples_to_flat`` when the
+per-table sizes are bound via :meth:`Oracle.bind_sizes`, a fixed bit-packing
+otherwise) and looked up against a **sorted** key array with
+``np.searchsorted`` — no Python dict, no per-tuple round trips.  The query
+pipelines bind sizes from ``query.spec.sizes`` before labelling anything, so
+keys are stable across all stages of a query.
+
+Batch / flush lifecycle
+-----------------------
+Callers never issue per-call-site model batches; they accumulate requests and
+flush once per pipeline stage::
+
+    batch = OracleBatch(oracle)
+    h1 = batch.submit(tuples_a)      # (n1, k) — nothing is labelled yet
+    h2 = batch.submit(tuples_b)      # (n2, k)
+    batch.flush()                    # one _label() over the deduped union
+    h1.labels, h2.labels             # per-request results, original order
+
+``flush()`` is atomic with respect to the ledger: it dedupes the pending keys
+against each other *and* against the cache, charges the budget once for the
+unique uncached tuples, and only then issues a single ``_label`` call and
+merges the results.  If the charge would exceed the budget,
+:class:`BudgetExceeded` is raised *before* any labelling or cache mutation —
+a failed flush leaves the Oracle exactly as it was.  ``Oracle.label`` is
+sugar for a one-request batch, so ad-hoc callers keep the old interface.
+
+Counters: ``requests`` counts every tuple submitted (cache hits included),
+``calls`` counts unique tuples actually labelled (what the budget meters),
+``batches`` counts backend ``_label`` invocations — a well-batched query
+keeps ``batches`` at O(pipeline stages) regardless of the number of strata.
 """
 from __future__ import annotations
 
 import abc
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -23,47 +57,211 @@ class Oracle(abc.ABC):
     """Labels k-tuples.  ``idx`` is an (n, k) int array of per-table indices."""
 
     def __init__(self):
-        self._cache: dict = {}
+        self._keys = np.empty(0, np.int64)    # sorted flat cache keys
+        self._vals = np.empty(0, np.float64)  # labels aligned with _keys
+        self._sizes: Optional[tuple] = None   # bound per-table sizes
+        self._pack: Optional[tuple] = None    # fallback encoding (k, bit width)
         self.calls = 0          # unique tuples actually labelled
         self.requests = 0       # total tuples requested (incl. cache hits)
+        self.batches = 0        # backend _label invocations
         self.budget: Optional[int] = None
 
     def set_budget(self, budget: Optional[int]) -> None:
         self.budget = budget
+
+    # ---- key encoding ------------------------------------------------------
+
+    def bind_sizes(self, sizes: Sequence[int]) -> None:
+        """Bind the per-table sizes so cache keys are exact flat indices.
+
+        Rebinding with different sizes re-keys any cached entries (decode with
+        the old encoding, encode with the new), so a long-lived Oracle can
+        serve queries over different join specs without losing its cache.
+        """
+        sizes = tuple(int(s) for s in sizes)
+        if self._sizes == sizes:
+            return
+        if len(self._keys):
+            # validate + re-encode under the old state, then commit atomically
+            # (a failed rebind must not leave keys in a mixed encoding)
+            idx = self._decode(self._keys)
+            if idx.shape[1] != len(sizes):
+                raise ValueError(
+                    f"bind_sizes: cache holds {idx.shape[1]}-tuples, "
+                    f"got {len(sizes)} sizes"
+                )
+            if any(idx[:, j].max(initial=0) >= sizes[j] for j in range(idx.shape[1])):
+                raise ValueError("bind_sizes: cached tuples exceed new sizes")
+            keys = np.ravel_multi_index(
+                tuple(idx[:, j] for j in range(idx.shape[1])), sizes
+            ).astype(np.int64)
+            order = np.argsort(keys, kind="stable")
+            self._keys, self._vals = keys[order], self._vals[order]
+        self._sizes, self._pack = sizes, None
+
+    def _encode(self, idx: np.ndarray) -> np.ndarray:
+        """(n, k) tuple indices -> (n,) int64 flat keys."""
+        k = idx.shape[1]
+        if self._sizes is not None:
+            if len(self._sizes) != k:
+                raise ValueError(
+                    f"oracle bound to {len(self._sizes)} tables, got {k}-tuples"
+                )
+            return np.ravel_multi_index(
+                tuple(idx[:, j] for j in range(k)), self._sizes
+            ).astype(np.int64)
+        # unbound fallback: fixed-width bit packing (stable across requests)
+        if self._pack is None:
+            self._pack = (k, 63 // k)
+        elif self._pack[0] != k:
+            raise ValueError(
+                f"oracle cache packs {self._pack[0]}-tuples, got {k}-tuples"
+            )
+        _, bits = self._pack
+        if idx.size and int(idx.max()) >= (1 << bits):
+            raise ValueError(
+                f"tuple index {int(idx.max())} does not fit the unbound "
+                f"{bits}-bit key packing for k={k}; call oracle.bind_sizes()"
+            )
+        keys = np.zeros(idx.shape[0], np.int64)
+        for j in range(k):
+            keys = (keys << bits) | idx[:, j].astype(np.int64)
+        return keys
+
+    def _decode(self, keys: np.ndarray) -> np.ndarray:
+        """(n,) flat keys -> (n, k) tuple indices (inverse of _encode)."""
+        if self._sizes is not None:
+            return np.stack(
+                np.unravel_index(keys, self._sizes), axis=1
+            ).astype(np.int64)
+        k, bits = self._pack
+        mask = (1 << bits) - 1
+        cols = [(keys >> (bits * (k - 1 - j))) & mask for j in range(k)]
+        return np.stack(cols, axis=1).astype(np.int64)
+
+    # ---- labelling ---------------------------------------------------------
 
     @abc.abstractmethod
     def _label(self, idx: np.ndarray) -> np.ndarray:
         """Raw labelling; returns float array in {0.0, 1.0} of shape (n,)."""
 
     def label(self, idx: np.ndarray) -> np.ndarray:
-        idx = np.asarray(idx)
-        if idx.ndim == 1:
-            idx = idx[:, None]
-        n = idx.shape[0]
-        self.requests += n
-        keys = [tuple(int(v) for v in row) for row in idx]
-        missing = [i for i, k in enumerate(keys) if k not in self._cache]
-        if missing:
-            if self.budget is not None and self.calls + len(missing) > self.budget:
-                raise BudgetExceeded(
-                    f"oracle budget {self.budget} exceeded: "
-                    f"{self.calls} used, {len(missing)} new requested"
-                )
-            new_idx = idx[missing]
-            new_labels = np.asarray(self._label(new_idx), dtype=np.float64)
-            for j, i in enumerate(missing):
-                self._cache[keys[i]] = float(new_labels[j])
-            self.calls += len(missing)
-        return np.array([self._cache[k] for k in keys], dtype=np.float64)
+        """One-request batch: submit + flush + return labels."""
+        batch = OracleBatch(self)
+        handle = batch.submit(idx)
+        batch.flush()
+        return handle.labels
+
+    def lookup(self, keys: np.ndarray) -> np.ndarray:
+        """Cached labels for already-resolved keys (keys must all be cached)."""
+        pos = np.searchsorted(self._keys, keys)
+        return self._vals[pos]
+
+    def _cached_mask(self, keys: np.ndarray) -> np.ndarray:
+        pos = np.searchsorted(self._keys, keys)
+        in_range = pos < len(self._keys)
+        hit = np.zeros(len(keys), bool)
+        hit[in_range] = self._keys[pos[in_range]] == keys[in_range]
+        return hit
+
+    def _merge(self, keys: np.ndarray, vals: np.ndarray) -> None:
+        """Insert new (key, label) pairs, keeping the cache sorted."""
+        merged_k = np.concatenate([self._keys, keys])
+        merged_v = np.concatenate([self._vals, vals])
+        order = np.argsort(merged_k, kind="stable")
+        self._keys, self._vals = merged_k[order], merged_v[order]
 
     @property
     def remaining(self) -> Optional[int]:
         return None if self.budget is None else self.budget - self.calls
 
+    @property
+    def dedup_ratio(self) -> float:
+        """Fraction of requested labels served without a backend execution."""
+        if self.requests == 0:
+            return 0.0
+        return 1.0 - self.calls / self.requests
+
+    def stats(self) -> dict:
+        return {
+            "calls": self.calls,
+            "requests": self.requests,
+            "batches": self.batches,
+            "dedup_ratio": round(self.dedup_ratio, 4),
+        }
+
     def reset(self) -> None:
-        self._cache.clear()
+        self._keys = np.empty(0, np.int64)
+        self._vals = np.empty(0, np.float64)
         self.calls = 0
         self.requests = 0
+        self.batches = 0
+
+
+class OracleRequest:
+    """Handle returned by :meth:`OracleBatch.submit`; ``labels`` is populated
+    by the owning batch's ``flush()``."""
+
+    __slots__ = ("idx", "_labels")
+
+    def __init__(self, idx: np.ndarray):
+        self.idx = idx
+        self._labels: Optional[np.ndarray] = None
+
+    @property
+    def labels(self) -> np.ndarray:
+        if self._labels is None:
+            raise RuntimeError("OracleBatch not flushed yet")
+        return self._labels
+
+
+class OracleBatch:
+    """Request accumulator: coalesces many call sites into one ledger charge
+    and one backend batch (see module docstring for the lifecycle)."""
+
+    def __init__(self, oracle: Oracle):
+        self.oracle = oracle
+        self._pending: list[OracleRequest] = []
+
+    def submit(self, idx: np.ndarray) -> OracleRequest:
+        idx = np.asarray(idx)
+        if idx.ndim == 1:
+            idx = idx[:, None]
+        req = OracleRequest(idx)
+        self._pending.append(req)
+        return req
+
+    def flush(self) -> None:
+        """Dedupe all pending requests, charge the ledger once, label once.
+
+        Atomic: if the flush fails — :class:`BudgetExceeded` or a backend
+        error from ``_label`` — nothing is mutated (no cache entries, no
+        counters) and the requests stay pending, so the same batch can be
+        retried after raising the budget or recovering the backend.  Keys
+        are encoded at flush time, so a ``bind_sizes`` rebind between submit
+        and flush is safe."""
+        if not self._pending:
+            return
+        o = self.oracle
+        keys_list = [o._encode(r.idx) for r in self._pending]
+        all_keys = np.concatenate(keys_list)
+        hit = o._cached_mask(all_keys)
+        new_keys = np.unique(all_keys[~hit])
+        if len(new_keys):
+            if o.budget is not None and o.calls + len(new_keys) > o.budget:
+                raise BudgetExceeded(
+                    f"oracle budget {o.budget} exceeded: "
+                    f"{o.calls} used, {len(new_keys)} new requested"
+                )
+            new_idx = o._decode(new_keys)
+            new_vals = np.asarray(o._label(new_idx), np.float64)
+            o.batches += 1
+            o._merge(new_keys, new_vals)
+            o.calls += len(new_keys)
+        pending, self._pending = self._pending, []
+        o.requests += len(all_keys)
+        for r, keys in zip(pending, keys_list):
+            r._labels = o.lookup(keys)
 
 
 class ArrayOracle(Oracle):
@@ -72,6 +270,7 @@ class ArrayOracle(Oracle):
     def __init__(self, truth: np.ndarray):
         super().__init__()
         self.truth = np.asarray(truth)
+        self.bind_sizes(self.truth.shape)
 
     def _label(self, idx: np.ndarray) -> np.ndarray:
         return self.truth[tuple(idx[:, j] for j in range(idx.shape[1]))].astype(
@@ -100,6 +299,10 @@ class PairChainOracle(Oracle):
     def __init__(self, edge_truth: list[np.ndarray]):
         super().__init__()
         self.edge_truth = [np.asarray(m) for m in edge_truth]
+        self.bind_sizes(
+            tuple(m.shape[0] for m in self.edge_truth)
+            + (self.edge_truth[-1].shape[1],)
+        )
 
     def _label(self, idx: np.ndarray) -> np.ndarray:
         out = np.ones(idx.shape[0], dtype=np.float64)
@@ -111,13 +314,17 @@ class PairChainOracle(Oracle):
 class ModelOracle(Oracle):
     """Oracle backed by a served model: scorer(idx) -> probability, thresholded.
 
-    ``scorer`` is expected to be the serving stack's batched pair scorer (see
-    ``repro.serve``); this class only adds the ledger semantics.
+    ``scorer`` is the serving stack's batched pair scorer — either a
+    :class:`repro.serve.serve_loop.PairScorer` instance or any vectorised
+    callable; this class only adds the ledger semantics.  Because callers
+    route through :class:`OracleBatch`, the scorer receives each pipeline
+    stage's deduped union as one large request and applies its own device
+    batching/sharding internally.
     """
 
-    def __init__(self, scorer: Callable[[np.ndarray], np.ndarray], threshold: float = 0.5):
+    def __init__(self, scorer, threshold: float = 0.5):
         super().__init__()
-        self.scorer = scorer
+        self.scorer = scorer.score if hasattr(scorer, "score") else scorer
         self.threshold = threshold
 
     def _label(self, idx: np.ndarray) -> np.ndarray:

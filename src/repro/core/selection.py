@@ -17,6 +17,7 @@ from typing import Optional
 import numpy as np
 
 from .estimators import BlockedRegime, StratumSample
+from .oracle import OracleBatch
 from .similarity import chain_weights, flat_to_tuples
 from .stratify import stratify_dense
 from .types import BASConfig, Query, QueryResult, ConfidenceInterval
@@ -57,6 +58,7 @@ def run_bas_selection(
     cfg = cfg or BASConfig()
     rng = np.random.default_rng(seed)
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     if weights is None:
         weights = chain_weights(query.spec.embeddings, cfg.weight_exponent, cfg.weight_floor)
     b = query.budget
@@ -73,6 +75,8 @@ def run_bas_selection(
     count_var = np.zeros(k + 1)
     pilot_scores, pilot_labels, pilot_q, pilot_sid = [], [], [], []
     n_pilot = max(b1 // (k + 1), 2)
+    pilot_batch = OracleBatch(query.oracle)
+    pilot_draws = []  # (i, pos, q, handle): one coalesced flush for the pilot
     for i in range(k + 1):
         if i == 0:
             if sizes[0] == 0 or w0.sum() <= 0:
@@ -84,7 +88,10 @@ def run_bas_selection(
             p_, q = flat_sample(weights[per_idx[i]], n_pilot, rng)
             pos = per_idx[i][p_]
         tup = flat_to_tuples(pos, query.spec.sizes)
-        o = query.oracle.label(tup)
+        pilot_draws.append((i, pos, q, pilot_batch.submit(tup)))
+    pilot_batch.flush()
+    for i, pos, q, h in pilot_draws:
+        o = h.labels
         t = o / q
         count_hat[i] = t.mean()
         count_var[i] = np.var(t, ddof=1) / n_pilot if n_pilot > 1 else 0.0
@@ -109,9 +116,14 @@ def run_bas_selection(
             cost += int(sizes[i])
     blocked_pos_flat = []
     count_b = 0.0
-    for i in beta:
-        tup = flat_to_tuples(per_idx[i], query.spec.sizes)
-        o = query.oracle.label(tup)
+    block_batch = OracleBatch(query.oracle)
+    block_handles = [
+        block_batch.submit(flat_to_tuples(per_idx[i], query.spec.sizes))
+        for i in beta
+    ]
+    block_batch.flush()
+    for i, h in zip(beta, block_handles):
+        o = h.labels
         count_b += float(o.sum())
         blocked_pos_flat.append(per_idx[i][o > 0])
 
@@ -126,6 +138,8 @@ def run_bas_selection(
     sids = [np.concatenate(pilot_sid)] if pilot_sid else []
     if remaining > len(sampled_ids) and sampled_ids:
         per = remaining // len(sampled_ids)
+        main_batch = OracleBatch(query.oracle)
+        main_draws = []  # (i, pos, q, handle)
         for i in sampled_ids:
             if i == 0:
                 if w0.sum() <= 0:
@@ -135,7 +149,10 @@ def run_bas_selection(
                 p_, q = flat_sample(weights[per_idx[i]], per, rng)
                 pos = per_idx[i][p_]
             tup = flat_to_tuples(pos, query.spec.sizes)
-            o = query.oracle.label(tup)
+            main_draws.append((i, pos, q, main_batch.submit(tup)))
+        main_batch.flush()
+        for i, pos, q, h in main_draws:
+            o = h.labels
             scores.append(weights[pos])
             labels.append(o)
             qs.append(q)
@@ -187,7 +204,7 @@ def run_bas_selection(
         tau_s=tau_s,
         oracle_calls=query.oracle.calls,
         detail={"beta": beta, "count_b": count_b, "gamma_s": gamma_s,
-                "count_s": count_s},
+                "count_s": count_s, "oracle": query.oracle.stats()},
     )
 
 
@@ -233,6 +250,7 @@ def run_topk_heavy_hitters(
     cfg = cfg or BASConfig()
     rng = np.random.default_rng(seed)
     query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
     if weights is None:
         weights = chain_weights(query.spec.embeddings, cfg.weight_exponent, cfg.weight_floor)
     b = query.budget
@@ -253,14 +271,19 @@ def run_topk_heavy_hitters(
     n_boot = 200
     boot = np.zeros((n_boot, n_entities))
     blocked_counts = np.zeros(n_entities)
-    for i in beta:
-        tup = flat_to_tuples(per_idx[i], query.spec.sizes)
-        o = query.oracle.label(tup)
+    block_batch = OracleBatch(query.oracle)
+    block_tups = [flat_to_tuples(per_idx[i], query.spec.sizes) for i in beta]
+    block_handles = [block_batch.submit(tup) for tup in block_tups]
+    block_batch.flush()
+    for tup, h in zip(block_tups, block_handles):
+        o = h.labels
         ent = entity_fn(tup).astype(np.int64)
         np.add.at(blocked_counts, ent[o > 0], 1.0)
     counts += blocked_counts
     remaining = b - query.oracle.calls
     sampled_ids = [i for i in range(kk + 1) if i not in beta and sizes[i] > 0]
+    main_batch = OracleBatch(query.oracle)
+    main_draws = []  # (tup, q, n_i, handle)
     for i in sampled_ids:
         n_i = remaining // max(len(sampled_ids), 1)
         if n_i < 2:
@@ -273,11 +296,16 @@ def run_topk_heavy_hitters(
             p_, q = flat_sample(weights[per_idx[i]], n_i, rng)
             pos = per_idx[i][p_]
         tup = flat_to_tuples(pos, query.spec.sizes)
-        o = query.oracle.label(tup)
+        # bootstrap indices drawn here to keep the rng stream identical to the
+        # pre-batching (label-inside-the-loop) execution order
+        ridx = rng.integers(0, n_i, size=(200, n_i))
+        main_draws.append((tup, q, n_i, ridx, main_batch.submit(tup)))
+    main_batch.flush()
+    for tup, q, n_i, ridx, h in main_draws:
+        o = h.labels
         ent = entity_fn(tup).astype(np.int64)
         ht = o / q / n_i
         np.add.at(counts, ent, ht)
-        ridx = rng.integers(0, n_i, size=(200, n_i))
         for j in range(200):
             np.add.at(boot[j], ent[ridx[j]], ht[ridx[j]])
     order = np.argsort(counts)[::-1]
@@ -294,5 +322,6 @@ def run_topk_heavy_hitters(
         "ci_lo": ci_lo,
         "ci_hi": ci_hi,
         "oracle_calls": query.oracle.calls,
+        "oracle": query.oracle.stats(),
         "beta": beta,
     }

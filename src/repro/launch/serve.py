@@ -23,6 +23,8 @@ def main():
     ap.add_argument("--pairs", type=int, default=64)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--shard", action="store_true",
+                    help="data-parallel pair scoring over all host devices")
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
@@ -58,15 +60,22 @@ def main():
             t, _ = pair_example(tok, records[pair[0]], records[pair[1]], None, 48)
             return t[t != tok.PAD]
 
+        mesh = None
+        if args.shard:
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh()
+            print(f"[serve] sharding batch over mesh {dict(mesh.shape)}")
         scorer = PairScorer(cfg, params, tok_pair, tok.YES, tok.NO, max_len=48,
-                            batch_size=16)
+                            batch_size=16, mesh=mesh)
         rng = np.random.default_rng(0)
         pairs = rng.integers(0, 64, size=(args.pairs, 2))
         t0 = time.time()
         p = scorer.score(pairs)
         dt = time.time() - t0
         print(f"[serve] scored {len(pairs)} pairs in {dt:.2f}s "
-              f"({len(pairs)/max(dt,1e-9):.1f} pairs/s), mean={p.mean():.3f}")
+              f"({len(pairs)/max(dt,1e-9):.1f} pairs/s, "
+              f"{scorer.forward_batches} device batches), mean={p.mean():.3f}")
 
 
 if __name__ == "__main__":

@@ -182,6 +182,50 @@ def shard_activation(x: jax.Array, logical: Sequence[Optional[str]]):
     return jax.lax.with_sharding_constraint(x, NamedSharding(_CTX.mesh, spec))
 
 
+def _shard_map_fn():
+    """Version-tolerant shard_map entry point (jax.shard_map when present,
+    jax.experimental.shard_map.shard_map otherwise)."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is not None:
+        return fn
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map
+
+
+def mesh_batch_axes(mesh: "Mesh", rules: Optional[Rules] = None) -> tuple:
+    """Mesh axes the batch dimension maps to under ``rules`` (no context
+    needed — used by the serving layer to size device-sharded score batches)."""
+    rules = rules or SERVE_RULES
+    return _mesh_axes_for(mesh, rules.get("batch"))
+
+
+def mesh_batch_shards(mesh: "Mesh", rules: Optional[Rules] = None) -> int:
+    """How many ways a batch dimension is sharded on ``mesh`` under ``rules``."""
+    out = 1
+    for a in mesh_batch_axes(mesh, rules):
+        out *= mesh.shape[a]
+    return out
+
+
+def data_parallel(fn, mesh: "Mesh", rules: Optional[Rules] = None):
+    """Wrap ``fn(params, batch)`` in a data-parallel ``shard_map``: params are
+    replicated, the leading (batch) dimension of every ``batch`` leaf — and of
+    the output — is sharded over the rules' batch axes.  Callers must pad the
+    batch dim to a multiple of :func:`mesh_batch_shards`.  Identity when the
+    rules give the mesh no batch axis (e.g. a model-only mesh)."""
+    axes = mesh_batch_axes(mesh, rules)
+    if not axes:
+        return fn
+    spec = P(axes if len(axes) > 1 else axes[0])
+    sm = _shard_map_fn()
+    try:
+        return sm(fn, mesh=mesh, in_specs=(P(), spec), out_specs=spec,
+                  check_rep=False)
+    except TypeError:  # newer jax renamed/removed check_rep
+        return sm(fn, mesh=mesh, in_specs=(P(), spec), out_specs=spec)
+
+
 def tree_shardings(specs_tree, shapes_tree, mesh=None, rules=None):
     """Map a tree of logical-axis tuples + shapes to NamedShardings."""
     mesh = mesh or _CTX.mesh

@@ -74,6 +74,14 @@ class ModelConfig:
         return self.family == "ssm"
 
     @property
+    def has_positional_cache(self) -> bool:
+        """Decode cache addressed by absolute position (full per-position KV
+        rows), so a serving slot can be rewound to position 0 for mid-flight
+        admission.  Recurrent state (ssm) and the hybrid ring buffer are not
+        rewindable — their batchers must gate admission instead."""
+        return self.family not in ("ssm", "hybrid")
+
+    @property
     def supports_long_context(self) -> bool:
         """Sub-quadratic sequence mixing -> can run the long_500k cell."""
         return self.family in ("ssm", "hybrid")

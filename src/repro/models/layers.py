@@ -226,23 +226,36 @@ def decode_attention(p, cfg: ModelConfig, x, cache_k, cache_v, position,
                      window: int = 0, use_rope: bool = True):
     """Single-token decode: append to the KV cache and attend over it.
 
-    x: (B, 1, d); cache_k/v: (B, T_max, nkv, hd); position: scalar int32.
+    x: (B, 1, d); cache_k/v: (B, T_max, nkv, hd); position: scalar int32 (all
+    rows at the same step) or (B,) int32 per-slot positions (continuous
+    batching with mid-flight admission: each slot writes its KV at its own
+    position and masks strictly by it, so a freshly admitted request never
+    attends to a previous occupant's stale cache entries).
     Returns (out, new_cache_k, new_cache_v).
     """
     b = x.shape[0]
     q, k, v = _qkv(p, cfg, x)
-    pos = jnp.full((b, 1), position, jnp.int32)
+    position = jnp.asarray(position, jnp.int32)
+    per_slot = position.ndim == 1
+    pos_b = position if per_slot else jnp.full((b,), position, jnp.int32)
+    pos = pos_b[:, None]
     if use_rope:
         q = apply_rope(q.swapaxes(1, 2), pos[:, None, :], cfg.rope_theta).swapaxes(1, 2)
         k = apply_rope(k.swapaxes(1, 2), pos[:, None, :], cfg.rope_theta).swapaxes(1, 2)
-    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, position, 0, 0))
-    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, position, 0, 0))
+    if per_slot:
+        cache_k = cache_k.at[jnp.arange(b), pos_b].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[jnp.arange(b), pos_b].set(v[:, 0].astype(cache_v.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, position, 0, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, position, 0, 0))
     t = cache_k.shape[1]
     kv_pos = jnp.arange(t)[None, :]
     scores = _grouped_scores(q, cache_k) * cfg.head_dim**-0.5  # (B,nkv,G,1,T)
-    mask = kv_pos[:, None, None, None, :] <= position
+    mask = kv_pos[:, None, None, None, :] <= pos_b[:, None, None, None, None]
     if window > 0:
-        mask = jnp.logical_and(mask, kv_pos[:, None, None, None, :] > position - window)
+        mask = jnp.logical_and(
+            mask, kv_pos[:, None, None, None, :] > pos_b[:, None, None, None, None] - window
+        )
     scores = jnp.where(mask, scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
     out = _grouped_out(probs, cache_v)

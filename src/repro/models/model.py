@@ -423,8 +423,12 @@ def _decode_layer_attn(cfg, p, x, k_cache, v_cache, position, window=0,
 
 def decode_step(cfg: ModelConfig, params, cache: dict, tokens, position):
     """One decode step.  tokens: (B, 1) int32; position: scalar int32 (same
-    for the whole batch — continuous batching uses per-slot position via the
-    serving layer's bucketing).  Returns (logits (B, V), cache)."""
+    for the whole batch) or, when ``cfg.has_positional_cache``, (B,) int32
+    per-slot positions — continuous batching passes the latter so slots
+    admitted mid-flight rewind to position 0 without attending to a previous
+    occupant's stale KV entries.  Families without a positional cache only
+    support the scalar form; their batcher gates admission instead.
+    Returns (logits (B, V), cache)."""
     x = params["embed"][tokens]
     b = x.shape[0]
 
