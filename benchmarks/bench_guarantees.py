@@ -3,7 +3,6 @@ percentile of |err| / CI-half-width <= 1.  BLOCKING violates this (bias with
 shrinking CI); BAS stays valid, including at tiny budgets and pilot sizes."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import (
     Agg,

@@ -7,7 +7,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core import Agg, Query, choose_path, dense_weight_bytes, run_bas
 from repro.core.bas_streaming import run_bas_streaming

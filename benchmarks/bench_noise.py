@@ -2,7 +2,6 @@
 dominate BLOCKING at high FNR and WWJ at high FPR."""
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import Agg, Query, calibrate_threshold, run_bas, run_blocking, run_wwj
 from repro.data import make_syn_scores

@@ -7,9 +7,7 @@ import numpy as np
 
 from repro.core import (
     Agg,
-    BASConfig,
     Query,
-    calibrate_threshold,
     run_abae,
     run_bas,
     run_blazeit,

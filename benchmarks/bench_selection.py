@@ -12,7 +12,7 @@ from repro.core.oracle import ArrayOracle
 from repro.core.wander import flat_sample
 from repro.data import make_clustered_tables
 
-from .common import repeat_method, row
+from .common import row
 
 
 def _supg_baseline(query, recall_target, weights, seed):

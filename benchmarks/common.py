@@ -6,8 +6,7 @@ import time
 
 import numpy as np
 
-from repro.core import Agg, Query
-from repro.core.types import QueryResult
+from repro.core import Agg
 
 
 def truth_of(ds, agg: Agg, g=None) -> float:

@@ -2,11 +2,14 @@
 
 Prints ``name,us_per_call,derived`` CSV.  Default is the fast profile (CI
 runtime); ``--full`` uses paper-scale repetition counts.  ``--only rmse``
-filters modules.
+filters modules.  ``--json PATH`` additionally writes the rows (parsed into
+objects) plus run metadata to a JSON file — the artifact CI uploads.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 
@@ -21,7 +24,25 @@ MODULES = {
     "latency": "benchmarks.bench_latency",          # Fig 14 / App A
     "kernels": "benchmarks.bench_kernels",          # Pallas vs ref
     "oracle": "benchmarks.bench_oracle",            # batched oracle layer
+    "service": "benchmarks.bench_service",          # async oracle service
 }
+
+
+def _parse_row(line: str) -> dict:
+    """``name,us_per_call,derived`` -> object; derived ``k=v;...`` pairs are
+    expanded so the JSON artifact is queryable without string parsing."""
+    name, us, derived = line.split(",", 2)
+    out: dict = {"name": name, "us_per_call": float(us)}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            try:
+                out[k] = float(v.rstrip("x"))
+            except ValueError:
+                out[k] = v
+        elif part:
+            out["derived"] = part
+    return out
 
 
 def main() -> None:
@@ -31,12 +52,20 @@ def main() -> None:
                     help="CI smoke profile: overrides --full and passes "
                          "smoke=True to modules that support a reduced run")
     ap.add_argument("--only", default=None, help="comma-separated module keys")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows + metadata to this JSON file")
     args = ap.parse_args()
     if args.smoke:
         args.full = False
     keys = list(MODULES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
-    failures = 0
+    failures = []
+    report: dict = {
+        "profile": ("smoke" if args.smoke else "full" if args.full else "fast"),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "modules": {},
+    }
     for key in keys:
         import importlib
 
@@ -51,10 +80,20 @@ def main() -> None:
             rows = mod.run(**kwargs)
             for r in rows:
                 print(r, flush=True)
+            report["modules"][key] = {
+                "seconds": round(time.time() - t0, 2),
+                "rows": [_parse_row(r) for r in rows],
+            }
             print(f"# {key} done in {time.time()-t0:.1f}s", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
-            failures += 1
+            failures.append(key)
+            report["modules"][key] = {"error": f"{type(e).__name__}: {e}"}
             print(f"# {key} FAILED: {type(e).__name__}: {e}", file=sys.stderr)
+    if args.json:
+        report["ok"] = not failures
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+        print(f"# wrote {args.json}", file=sys.stderr)
     if failures:
         raise SystemExit(1)
 

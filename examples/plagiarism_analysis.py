@@ -4,9 +4,8 @@ semantic join), with a budgeted Oracle and a valid CI.
 
     PYTHONPATH=src python examples/plagiarism_analysis.py
 """
-import numpy as np
 
-from repro.core import Agg, ArrayOracle, Query, run_bas, run_uniform
+from repro.core import Agg, Query, run_bas, run_uniform
 from repro.data import make_clustered_tables
 
 

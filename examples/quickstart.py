@@ -6,7 +6,6 @@ an Oracle budget + confidence — comparing BAS against uniform sampling.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
 
 from repro.core import ArrayOracle, Catalog, JoinMLEngine, Table
 from repro.data import make_clustered_tables

@@ -1,5 +1,6 @@
-"""Serve a small model with batched requests: continuous-batching decode demo
-plus throughput of the batched pair-scoring (Oracle) endpoint.
+"""Serve a small model with batched requests: continuous-batching decode demo,
+throughput of the batched pair-scoring (Oracle) endpoint, and the async
+OracleService running concurrent queries against one shared scorer.
 
     PYTHONPATH=src python examples/serve_oracle.py
 """
@@ -70,6 +71,39 @@ def main():
     print(f"oracle batch: {oracle.requests} requests -> {oracle.calls} model "
           f"pairs in {oracle.batches} flush(es), dedup={oracle.dedup_ratio:.2f}, "
           f"match rate={labels.mean():.3f}")
+
+    # --- the async oracle service: concurrent queries, one scorer -----------
+    # Two BAS queries run on their own threads; their pilot/blocking/top-up
+    # flushes coalesce into shared super-batches on the scorer, and each
+    # query's budget ledger is still charged exactly as if it ran alone.
+    from repro.core import Agg, BASConfig, Query, run_bas
+    from repro.data import make_clustered_tables
+    from repro.serve.oracle_service import OracleService, serve_queries
+
+    ds = make_clustered_tables(32, 32, n_entities=48, noise=0.4, seed=3)
+    oracles = [ModelOracle(scorer, threshold=0.5) for _ in range(2)]
+    queries = [
+        Query(spec=ds.spec(), agg=Agg.COUNT, oracle=o, budget=200)
+        for o in oracles
+    ]
+    t0 = time.time()
+    with OracleService(max_wait_ms=8.0) as svc:
+        svc.attach(*oracles)
+
+        def job(i):
+            try:
+                return run_bas(queries[i], BASConfig(n_bootstrap=100), seed=i)
+            finally:
+                svc.detach(oracles[i])
+
+        results = serve_queries(svc, [lambda i=i: job(i) for i in range(2)])
+        stats = svc.stats()
+    dt = time.time() - t0
+    total = sum(o.calls for o in oracles)
+    print(f"oracle service: {len(queries)} concurrent queries, {total} labels "
+          f"in {dt:.2f}s; {stats['windows']} windows at "
+          f"{stats['segments_per_window']} flushes/window; estimates "
+          + ", ".join(f"{r.estimate:.0f}" for r in results))
 
 
 if __name__ == "__main__":

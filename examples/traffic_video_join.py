@@ -3,7 +3,6 @@ cameras over a semantic join on vehicle identity (VeRi-style re-id).
 
     PYTHONPATH=src python examples/traffic_video_join.py
 """
-import numpy as np
 
 from repro.core import Agg, Query, run_bas, run_wwj
 from repro.data import make_clustered_tables

@@ -4,7 +4,6 @@ dry-run JSON records.
     PYTHONPATH=src python experiments/make_report.py [--dir experiments/dryrun]
 """
 import argparse
-import json
 import sys
 
 sys.path.insert(0, "src")

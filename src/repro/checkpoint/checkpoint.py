@@ -152,7 +152,7 @@ def restore(root: str, step: int, target_tree, shardings=None):
         entry = by_path[key]
         arr = np.load(os.path.join(ckpt, entry["file"]))
         if str(arr.dtype) != entry["dtype"]:
-            import ml_dtypes  # jax dependency; registers extension dtypes
+            import ml_dtypes  # noqa: F401 -- jax dep; registers extension dtypes
 
             arr = arr.view(np.dtype(entry["dtype"]))
         expect = tuple(getattr(leaf, "shape", arr.shape))

@@ -38,7 +38,6 @@ from .bootstrap import bootstrap_t_ci
 from .estimators import (
     BlockedRegime,
     StratumSample,
-    combined_avg,
     combined_cdf_median,
     combined_count,
     combined_extreme,
@@ -83,16 +82,23 @@ def _label_draws(
     query: Query, draws: list
 ) -> list:
     """Materialise StratumSamples from draws with ONE coalesced Oracle batch
-    (dedup across strata/stages, single ledger charge, single backend call)."""
+    (dedup across strata/stages, single ledger charge, single backend call).
+
+    Submit-then-await: the flush is submitted asynchronously and the cheap
+    g(.) evaluation overlaps the labelling; with an attached OracleService
+    the await is where concurrent queries' pilot/main rounds coalesce into
+    shared super-batches."""
     batch = OracleBatch(query.oracle)
     handles = [None if d is None else batch.submit(d.tup) for d in draws]
-    batch.flush()
+    fut = batch.flush_async()
     g = query.attr()
+    gs = [None if d is None else g(d.tup) for d in draws]
+    fut.result()
     return [
         None if d is None else StratumSample(
-            o=h.labels, g=g(d.tup), q=d.q, size=d.size
+            o=h.labels, g=gv, q=d.q, size=d.size
         )
-        for d, h in zip(draws, handles)
+        for d, h, gv in zip(draws, handles, gs)
     ]
 
 
@@ -217,15 +223,16 @@ def run_stratified_pipeline(
 
     # ---- stage 2: blocking + sampling -------------------------------------
     t0 = time.perf_counter()
-    blocked_o, blocked_g = [], []
+    # submit-then-await: the blocking-regime labelling runs on the oracle
+    # backend (or service) while g(.) is evaluated for the same tuples here
     block_batch = OracleBatch(query.oracle)
     beta_tuples = [(i, space.stratum_tuples(i)) for i in sorted(beta)]
     beta_handles = [block_batch.submit(tup) for _, tup in beta_tuples]
-    block_batch.flush()
+    block_fut = block_batch.flush_async()
     g_fn = query.attr()
-    for (_, tup), h in zip(beta_tuples, beta_handles):
-        blocked_o.append(h.labels)
-        blocked_g.append(g_fn(tup))
+    blocked_g = [g_fn(tup) for _, tup in beta_tuples]
+    block_fut.result()
+    blocked_o = [h.labels for h in beta_handles]
     blocked = BlockedRegime(
         o=np.concatenate(blocked_o) if blocked_o else np.zeros(0),
         g=np.concatenate(blocked_g) if blocked_g else np.zeros(0),

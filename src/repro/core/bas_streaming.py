@@ -22,7 +22,11 @@ Differences from the dense path (``bas.run_bas``):
 Estimator assembly (pilot, MSE-optimal blocking allocation, execution,
 bootstrap-t CIs, and the MIN/MAX/MEDIAN extensions) is the *same code* as the
 dense path: ``bas.run_stratified_pipeline`` over a ``StratifiedSpace`` whose
-callbacks never touch the cross product.
+callbacks never touch the cross product.  That shared pipeline submits each
+stage's labelling asynchronously (submit-then-await), so streaming queries
+attached to an :class:`repro.serve.oracle_service.OracleService` coalesce
+their pilot/blocking/top-up rounds with concurrent queries exactly like
+dense ones.
 
 Memory: O(sum_i N_i + alpha*b + b + bins) — never O(N1*...*Nk).  The engine
 front-end picks this path automatically when the dense flat-weight footprint

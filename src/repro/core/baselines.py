@@ -16,10 +16,8 @@ from typing import Optional
 
 import numpy as np
 
-from .estimators import BlockedRegime, StratumSample
 from .oracle import OracleBatch
 from .similarity import chain_weights, flat_to_tuples
-from .stratify import stratify_dense
 from .types import Agg, BASConfig, ConfidenceInterval, Query, QueryResult
 from .wander import clt_ci, flat_sample, ht_terms, walk_sample
 
@@ -229,7 +227,7 @@ def run_abae(query: Query, cfg: Optional[BASConfig] = None, seed: int = 0,
         sel = rng.integers(0, len(per_idx[i]), size=min(pilot_per, b1))
         tup = flat_to_tuples(per_idx[i][sel], query.spec.sizes)
         pilot_reqs.append((tup, pilot_batch.submit(tup)))
-    pilot_batch.flush()
+    pilot_batch.flush_async().result()   # await: service coalesces pilots
     pilot_data = []
     for i in range(k):
         if pilot_reqs[i] is None:
@@ -255,7 +253,7 @@ def run_abae(query: Query, cfg: Optional[BASConfig] = None, seed: int = 0,
             sel = rng.integers(0, len(per_idx[i]), size=n_i)
             tup = flat_to_tuples(per_idx[i][sel], query.spec.sizes)
             main_reqs[i] = (tup, main_batch.submit(tup))
-    main_batch.flush()
+    main_batch.flush_async().result()
     est, var = 0.0, 0.0
     est_c, var_c = 0.0, 0.0
     for i in range(k):

@@ -36,14 +36,33 @@ merges the results.  If the charge would exceed the budget,
 a failed flush leaves the Oracle exactly as it was.  ``Oracle.label`` is
 sugar for a one-request batch, so ad-hoc callers keep the old interface.
 
+Async mode
+----------
+When an :class:`repro.serve.oracle_service.OracleService` is attached to the
+Oracle (``service.attach(oracle)``), ``flush_async()`` hands the deduped
+pending set to the service and returns a ``concurrent.futures.Future``; the
+service micro-batches requests **across queries**, executes them on its
+scorer-worker pool, and resolves the request handles with exactly the
+semantics of a local flush (same dedup, same atomic ledger charge, same
+retryability on failure).  Without a service, ``flush_async()`` degrades to
+an already-completed future around a local flush, so pipeline stages can
+uniformly submit-then-await.  ``flush()`` stays the synchronous entry point
+and routes through the service when one is attached — callers never need to
+know which mode they are in.
+
 Counters: ``requests`` counts every tuple submitted (cache hits included),
 ``calls`` counts unique tuples actually labelled (what the budget meters),
-``batches`` counts backend ``_label`` invocations — a well-batched query
-keeps ``batches`` at O(pipeline stages) regardless of the number of strata.
+``batches`` counts flushes that labelled at least one new tuple — a
+well-batched query keeps ``batches`` at O(pipeline stages) regardless of the
+number of strata.  For a local flush that is exactly the number of backend
+``_label`` invocations; under an attached service, cross-query fusion and
+worker sharding make the true backend-call count differ (see
+``OracleService.stats()["backend_calls"]``).
 """
 from __future__ import annotations
 
 import abc
+from concurrent.futures import Future
 from typing import Callable, Optional, Sequence
 
 import numpy as np
@@ -65,6 +84,7 @@ class Oracle(abc.ABC):
         self.requests = 0       # total tuples requested (incl. cache hits)
         self.batches = 0        # backend _label invocations
         self.budget: Optional[int] = None
+        self.service = None     # attached OracleService (None = local flushes)
 
     def set_budget(self, budget: Optional[int]) -> None:
         self.budget = budget
@@ -152,6 +172,16 @@ class Oracle(abc.ABC):
         batch.flush()
         return handle.labels
 
+    def service_group(self):
+        """Coalescing key: flushes from oracles with *equal* keys may be fused
+        into one backend execution by an attached service.  Two oracles share
+        a key only when ``_label`` is the same pure function of the tuple
+        indices for both (same backend model, same table bindings).  The
+        default is per-instance (no cross-oracle fusion, but requests still
+        micro-batch into the same service window and shard over its worker
+        pool); :class:`ModelOracle` keys on its shared scorer."""
+        return ("oracle", id(self))
+
     def lookup(self, keys: np.ndarray) -> np.ndarray:
         """Cached labels for already-resolved keys (keys must all be cached)."""
         pos = np.searchsorted(self._keys, keys)
@@ -198,6 +228,62 @@ class Oracle(abc.ABC):
         self.batches = 0
 
 
+def plan_requests(
+    oracle: Oracle,
+    requests: Sequence["OracleRequest"],
+    extra_planned: Optional[np.ndarray] = None,
+) -> tuple:
+    """Plan a flush without mutating anything: encode every request, dedupe
+    against the cache (and against ``extra_planned`` — keys another flush in
+    the same service window has already claimed for this oracle), and check
+    the budget.  Returns ``(keys_list, n_requested, new_keys)``; raises
+    :class:`BudgetExceeded` if labelling ``new_keys`` would overrun.
+
+    This is THE flush-planning algorithm: ``OracleBatch._flush_local`` and
+    ``OracleService`` both call it, so local and served execution cannot
+    drift apart semantically."""
+    keys_list = [oracle._encode(r.idx) for r in requests]
+    all_keys = (np.concatenate(keys_list) if keys_list
+                else np.empty(0, np.int64))
+    hit = oracle._cached_mask(all_keys)
+    new_keys = np.unique(all_keys[~hit])
+    already = 0
+    if extra_planned is not None and len(extra_planned):
+        new_keys = np.setdiff1d(new_keys, extra_planned, assume_unique=False)
+        already = len(extra_planned)
+    if len(new_keys) and oracle.budget is not None and (
+            oracle.calls + already + len(new_keys) > oracle.budget):
+        used = f"{oracle.calls} used"
+        if already:
+            used += f" (+{already} planned this window)"
+        raise BudgetExceeded(
+            f"oracle budget {oracle.budget} exceeded: {used}, "
+            f"{len(new_keys)} new requested"
+        )
+    return keys_list, len(all_keys), new_keys
+
+
+def commit_requests(
+    oracle: Oracle,
+    requests: Sequence["OracleRequest"],
+    keys_list: list,
+    n_requested: int,
+    new_keys: np.ndarray,
+    new_vals: Optional[np.ndarray],
+) -> None:
+    """Commit an executed flush: merge the fresh labels into the cache,
+    charge the ledger atomically, and resolve every request handle.  The
+    counterpart of :func:`plan_requests`, shared by local and served flushes;
+    callers invoke it only after the backend execution succeeded."""
+    if len(new_keys):
+        oracle._merge(new_keys, new_vals)
+        oracle.calls += len(new_keys)
+        oracle.batches += 1
+    oracle.requests += n_requested
+    for r, keys in zip(requests, keys_list):
+        r._labels = oracle.lookup(keys)
+
+
 class OracleRequest:
     """Handle returned by :meth:`OracleBatch.submit`; ``labels`` is populated
     by the owning batch's ``flush()``."""
@@ -239,29 +325,49 @@ class OracleBatch:
         counters) and the requests stay pending, so the same batch can be
         retried after raising the budget or recovering the backend.  Keys
         are encoded at flush time, so a ``bind_sizes`` rebind between submit
-        and flush is safe."""
+        and flush is safe.
+
+        An **empty** pending set is a guaranteed no-op: no backend call, no
+        budget charge (even when the budget is already exhausted), and no
+        counter movement.  With a service attached, routes through
+        :meth:`flush_async` so concurrent queries coalesce."""
+        self.flush_async().result()
+
+    def flush_async(self) -> Future:
+        """Submit-then-await entry point: returns a future that resolves
+        (to ``None``) once every pending request's ``labels`` is populated.
+
+        With a service attached to the oracle, the deduped pending set is
+        enqueued into the service's micro-batching window and labelled on its
+        worker pool alongside other queries' flushes; otherwise the flush
+        runs locally (synchronously) and the returned future is already
+        done.  Failures (:class:`BudgetExceeded`, backend errors) surface at
+        ``.result()``; the requests stay pending in either mode, so the same
+        batch can be retried."""
+        if self.oracle.service is not None and self._pending:
+            return self.oracle.service.submit(self)
+        fut: Future = Future()
+        try:
+            self._flush_local()
+        except BaseException as e:  # surfaced at .result(), like the service
+            fut.set_exception(e)
+        else:
+            fut.set_result(None)
+        return fut
+
+    def _flush_local(self) -> None:
+        """The synchronous flush: plan against the cache, execute, commit.
+        Any failure before the commit leaves the oracle and the pending set
+        exactly as they were."""
         if not self._pending:
             return
         o = self.oracle
-        keys_list = [o._encode(r.idx) for r in self._pending]
-        all_keys = np.concatenate(keys_list)
-        hit = o._cached_mask(all_keys)
-        new_keys = np.unique(all_keys[~hit])
+        keys_list, n_requested, new_keys = plan_requests(o, self._pending)
+        new_vals = None
         if len(new_keys):
-            if o.budget is not None and o.calls + len(new_keys) > o.budget:
-                raise BudgetExceeded(
-                    f"oracle budget {o.budget} exceeded: "
-                    f"{o.calls} used, {len(new_keys)} new requested"
-                )
-            new_idx = o._decode(new_keys)
-            new_vals = np.asarray(o._label(new_idx), np.float64)
-            o.batches += 1
-            o._merge(new_keys, new_vals)
-            o.calls += len(new_keys)
+            new_vals = np.asarray(o._label(o._decode(new_keys)), np.float64)
         pending, self._pending = self._pending, []
-        o.requests += len(all_keys)
-        for r, keys in zip(pending, keys_list):
-            r._labels = o.lookup(keys)
+        commit_requests(o, pending, keys_list, n_requested, new_keys, new_vals)
 
 
 class ArrayOracle(Oracle):
@@ -330,3 +436,13 @@ class ModelOracle(Oracle):
     def _label(self, idx: np.ndarray) -> np.ndarray:
         probs = np.asarray(self.scorer(idx), dtype=np.float64)
         return (probs >= self.threshold).astype(np.float64)
+
+    def service_group(self):
+        """Fuse with every oracle scoring through the same served model at the
+        same threshold: concurrent queries against one scorer become one
+        super-batch per service window.  Keyed on the scorer *object* — for a
+        bound ``scorer.score`` the owning instance, via ``__self__`` — since
+        each attribute access creates a fresh bound-method object whose id
+        would never match across oracles."""
+        backend = getattr(self.scorer, "__self__", self.scorer)
+        return ("scorer", id(backend), float(self.threshold))

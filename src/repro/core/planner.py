@@ -10,10 +10,8 @@ budget, UNIFORM COUNT, WWJ COUNT, or the ground truth (for regret reporting).
 from __future__ import annotations
 
 import dataclasses
-import itertools
 from typing import Callable, Optional
 
-import numpy as np
 
 from .types import Agg, BASConfig, JoinSpec, Query
 from .oracle import Oracle

@@ -16,11 +16,10 @@ from typing import Optional
 
 import numpy as np
 
-from .estimators import BlockedRegime, StratumSample
 from .oracle import OracleBatch
 from .similarity import chain_weights, flat_to_tuples
 from .stratify import stratify_dense
-from .types import BASConfig, Query, QueryResult, ConfidenceInterval
+from .types import BASConfig, Query
 from .wander import flat_sample
 
 
@@ -89,7 +88,7 @@ def run_bas_selection(
             pos = per_idx[i][p_]
         tup = flat_to_tuples(pos, query.spec.sizes)
         pilot_draws.append((i, pos, q, pilot_batch.submit(tup)))
-    pilot_batch.flush()
+    pilot_batch.flush_async().result()   # await: service coalesces pilots
     for i, pos, q, h in pilot_draws:
         o = h.labels
         t = o / q
@@ -121,7 +120,7 @@ def run_bas_selection(
         block_batch.submit(flat_to_tuples(per_idx[i], query.spec.sizes))
         for i in beta
     ]
-    block_batch.flush()
+    block_batch.flush_async().result()
     for i, h in zip(beta, block_handles):
         o = h.labels
         count_b += float(o.sum())
@@ -150,7 +149,7 @@ def run_bas_selection(
                 pos = per_idx[i][p_]
             tup = flat_to_tuples(pos, query.spec.sizes)
             main_draws.append((i, pos, q, main_batch.submit(tup)))
-        main_batch.flush()
+        main_batch.flush_async().result()
         for i, pos, q, h in main_draws:
             o = h.labels
             scores.append(weights[pos])
@@ -244,8 +243,6 @@ def run_topk_heavy_hitters(
     """Top-K heavy hitters (paper §5.4): per-entity COUNT via the combined
     estimator; return K entities with largest estimates + simultaneous
     bootstrap CIs (Bonferroni over candidates near the boundary)."""
-    from .bas import run_bas
-    from .types import Agg
 
     cfg = cfg or BASConfig()
     rng = np.random.default_rng(seed)
@@ -274,10 +271,11 @@ def run_topk_heavy_hitters(
     block_batch = OracleBatch(query.oracle)
     block_tups = [flat_to_tuples(per_idx[i], query.spec.sizes) for i in beta]
     block_handles = [block_batch.submit(tup) for tup in block_tups]
-    block_batch.flush()
-    for tup, h in zip(block_tups, block_handles):
+    block_fut = block_batch.flush_async()
+    ents = [entity_fn(tup).astype(np.int64) for tup in block_tups]
+    block_fut.result()                   # entity ids computed during labelling
+    for ent, h in zip(ents, block_handles):
         o = h.labels
-        ent = entity_fn(tup).astype(np.int64)
         np.add.at(blocked_counts, ent[o > 0], 1.0)
     counts += blocked_counts
     remaining = b - query.oracle.calls
@@ -300,7 +298,7 @@ def run_topk_heavy_hitters(
         # pre-batching (label-inside-the-loop) execution order
         ridx = rng.integers(0, n_i, size=(200, n_i))
         main_draws.append((tup, q, n_i, ridx, main_batch.submit(tup)))
-    main_batch.flush()
+    main_batch.flush_async().result()
     for tup, q, n_i, ridx, h in main_draws:
         o = h.labels
         ent = entity_fn(tup).astype(np.int64)

@@ -1,5 +1,4 @@
 """Pure-jnp oracle for the sim_hist kernel."""
-import jax
 import jax.numpy as jnp
 
 

@@ -15,7 +15,6 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ARCHS, get_config
 from repro.models import init_cache, init_params, forward, decode_step
@@ -27,7 +26,6 @@ from repro.launch.sharding import (
     TRAIN_RULES,
     sharding_for,
     sharding_context,
-    spec_for,
 )
 from repro.train import OptimizerConfig, init_opt_state, make_train_step
 

@@ -1,10 +1,19 @@
-"""Serving launcher: continuous-batching decode or batched pair scoring
-(the Oracle endpoint) for a given --arch on the host devices.
+"""Serving launcher: continuous-batching decode, batched pair scoring (the
+Oracle endpoint), or the full multi-query oracle service for a given --arch
+on the host devices.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --mode decode --requests 8
     PYTHONPATH=src python -m repro.launch.serve --arch joinml-oracle \
         --mode score --pairs 64
+    PYTHONPATH=src python -m repro.launch.serve --arch joinml-oracle \
+        --mode service --queries 4 --budget 300
+
+``--mode service`` runs concurrent BAS queries against ONE served scorer
+through an :class:`repro.serve.oracle_service.OracleService`: each query's
+pilot/blocking/top-up flushes coalesce across queries into super-batches,
+and with ``--shard`` every super-batch additionally shards its batch
+dimension over the host mesh (``launch.sharding.data_parallel``).
 """
 from __future__ import annotations
 
@@ -15,22 +24,49 @@ import jax
 import numpy as np
 
 
+def _make_scorer(args, cfg, params, tok, records, batch_size: int):
+    """Shared scorer construction for the score/service modes: record-pair
+    tokenizer + optional data-parallel mesh sharding (--shard)."""
+    from repro.data.pipeline import pair_example
+    from repro.serve.serve_loop import PairScorer
+
+    def tok_pair(pair):
+        t, _ = pair_example(tok, records[pair[0]], records[pair[1]], None, 48)
+        return t[t != tok.PAD]
+
+    mesh = None
+    if args.shard:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh()
+        print(f"[serve] sharding score batches over mesh {dict(mesh.shape)}")
+    return PairScorer(cfg, params, tok_pair, tok.YES, tok.NO, max_len=48,
+                      batch_size=batch_size, mesh=mesh)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--mode", choices=("decode", "score"), default="decode")
+    ap.add_argument("--mode", choices=("decode", "score", "service"),
+                    default="decode")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--pairs", type=int, default=64)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=4,
+                    help="service mode: number of concurrent BAS queries")
+    ap.add_argument("--budget", type=int, default=300,
+                    help="service mode: oracle budget per query")
+    ap.add_argument("--workers", type=int, default=1,
+                    help="service mode: scorer worker threads")
     ap.add_argument("--shard", action="store_true",
                     help="data-parallel pair scoring over all host devices")
     args = ap.parse_args()
 
     from repro.configs import get_smoke_config
-    from repro.data.pipeline import ByteTokenizer, pair_example
+    from repro.data.pipeline import ByteTokenizer
     from repro.models import init_params
-    from repro.serve.serve_loop import ContinuousBatcher, PairScorer, Request
+    from repro.serve.serve_loop import ContinuousBatcher, Request
 
     tok = ByteTokenizer()
     cfg = get_smoke_config(args.arch, vocab_size=tok.vocab_size)
@@ -53,21 +89,56 @@ def main():
         toks = sum(len(r.out_tokens) for r in done)
         print(f"[serve] {len(done)} requests, {toks} tokens, {dt:.2f}s "
               f"({toks/max(dt,1e-9):.1f} tok/s)")
+    elif args.mode == "service":
+        from repro.core import Agg, BASConfig, ModelOracle, Query, run_bas
+        from repro.data import make_clustered_tables
+        from repro.serve.oracle_service import OracleService, serve_queries
+
+        n_side = 48
+        ds = make_clustered_tables(n_side, n_side, n_entities=64, noise=0.4,
+                                   seed=0)
+        records = [f"entity record {i:03d}" for i in range(n_side)]
+        scorer = _make_scorer(args, cfg, params, tok, records, batch_size=32)
+        cfg_bas = BASConfig(n_bootstrap=100)
+        oracles = [ModelOracle(scorer, threshold=0.5)
+                   for _ in range(args.queries)]
+        queries = [
+            Query(spec=ds.spec(), agg=Agg.COUNT, oracle=o, budget=args.budget)
+            for o in oracles
+        ]
+        lat = np.zeros(args.queries)
+        with OracleService(workers=args.workers, max_wait_ms=8.0) as svc:
+            svc.attach(*oracles)
+
+            def job(i: int):
+                t0 = time.time()
+                try:
+                    return run_bas(queries[i], cfg_bas, seed=i)
+                finally:
+                    lat[i] = time.time() - t0
+                    svc.detach(oracles[i])
+
+            t0 = time.time()
+            results = serve_queries(
+                svc, [lambda i=i: job(i) for i in range(args.queries)]
+            )
+            dt = time.time() - t0
+            stats = svc.stats()
+        labels = sum(o.calls for o in oracles)
+        print(f"[serve] {args.queries} concurrent queries, {labels} oracle "
+              f"labels in {dt:.2f}s ({labels/max(dt,1e-9):.1f} labels/s, "
+              f"{scorer.forward_batches} device batches)")
+        print(f"[serve] p50={np.quantile(lat, 0.5)*1e3:.0f}ms "
+              f"p99={np.quantile(lat, 0.99)*1e3:.0f}ms per query; "
+              f"service: {stats['windows']} windows, "
+              f"{stats['segments_per_window']} flushes/window")
+        for i, r in enumerate(results):
+            print(f"[serve]   q{i}: estimate={r.estimate:.1f} "
+                  f"ci=[{r.ci.lo:.1f}, {r.ci.hi:.1f}] "
+                  f"calls={oracles[i].calls}")
     else:
         records = [f"entity {i % 16} record {i}" for i in range(64)]
-
-        def tok_pair(pair):
-            t, _ = pair_example(tok, records[pair[0]], records[pair[1]], None, 48)
-            return t[t != tok.PAD]
-
-        mesh = None
-        if args.shard:
-            from repro.launch.mesh import make_host_mesh
-
-            mesh = make_host_mesh()
-            print(f"[serve] sharding batch over mesh {dict(mesh.shape)}")
-        scorer = PairScorer(cfg, params, tok_pair, tok.YES, tok.NO, max_len=48,
-                            batch_size=16, mesh=mesh)
+        scorer = _make_scorer(args, cfg, params, tok, records, batch_size=16)
         rng = np.random.default_rng(0)
         pairs = rng.integers(0, 64, size=(args.pairs, 2))
         t0 = time.time()

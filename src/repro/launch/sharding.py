@@ -18,7 +18,6 @@ import threading
 from typing import Optional, Sequence, Union
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical axis -> mesh axis (or tuple of mesh axes, or list of candidate

@@ -6,7 +6,7 @@ drive the CPU smoke tests, full configs are exercised only via the dry-run.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

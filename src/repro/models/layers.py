@@ -12,7 +12,6 @@ Scans that the roofline analyzer must expand are wrapped in
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional
 

@@ -14,7 +14,6 @@ the HLO is O(1) in depth, with a uniform interface:
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

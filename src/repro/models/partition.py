@@ -11,7 +11,6 @@ Logical names used on params:
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 # (key name) -> base logical axes (without any stacked-layer leading dims)
 _RULES = {

@@ -9,7 +9,6 @@ references and the decode path.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,396 @@
+"""Async oracle serving substrate: cross-query coalescing between
+``OracleBatch.flush()`` and the scorer-worker pool.
+
+Why
+---
+The paper's cost model makes the ML Oracle the dominant expense, so the
+serving layer must keep the scorer saturated.  The batched execution layer
+(``repro.core.oracle``) already coalesces each *query's* labelling into a
+handful of flushes — but concurrent queries still serialize on one scorer,
+and every flush blocks its query until the backend returns.  This module
+turns the oracle layer from a per-query library into a shared serving
+subsystem: one :class:`OracleService` feeds any number of concurrent queries.
+
+Architecture
+------------
+::
+
+    query 1 ── OracleBatch.flush_async() ──┐          (request queue)
+    query 2 ── OracleBatch.flush_async() ──┼──►  ┌────────────────────┐
+      ...                                  │     │  dispatcher thread  │
+    query N ── OracleBatch.flush_async() ──┘     │  window assembly:   │
+                                                 │  size- & deadline-  │
+                 future.result() ◄── per-client  │  triggered flush    │
+                 (labels resolved,   routing     └─────────┬──────────┘
+                  ledger charged                           │ super-batch
+                  atomically)                              ▼ (grouped by
+                                                 ┌────────────────────┐
+                                                 │  scorer worker pool │
+                                                 │  shard 0 … shard W  │
+                                                 │  (threads; each     │
+                                                 │  scorer may itself  │
+                                                 │  be mesh-sharded    │
+                                                 │  via data_parallel) │
+                                                 └────────────────────┘
+
+* **Clients** are ordinary :class:`~repro.core.oracle.OracleBatch` objects.
+  ``service.attach(oracle)`` routes that oracle's flushes here;
+  ``flush_async()`` enqueues the pending request set and returns a future.
+  Each query keeps its own Oracle (cache + budget ledger) — the service
+  never mixes ledgers.
+* The **dispatcher** assembles micro-batch *windows*: a window opens when the
+  first flush arrives and closes when (a) the accumulated rows reach
+  ``max_batch``, (b) ``max_wait_ms`` elapses, or (c) every attached client
+  already has a flush in the window (nobody left to wait for).  A single
+  attached client dispatches immediately — solo queries pay no windowing
+  latency.
+* Each window's segments are **planned sequentially in arrival order** with
+  exactly the local-flush semantics: encode at flush time, dedup against the
+  client's cache (and against earlier same-oracle segments in the window),
+  check the budget.  Planning failures (:class:`BudgetExceeded`, encode
+  errors) complete only that client's future; its requests return to the
+  batch so the flush can be retried — one query's exhaustion never poisons
+  another's batch.
+* Planned rows are grouped by :meth:`Oracle.service_group` — oracles scoring
+  through the same served model fuse into one **super-batch** per window —
+  and each group is sharded over the worker pool.  Workers are threads (the
+  backends release the GIL in numpy/XLA); each worker executes shards via
+  the group's own ``_label``, and a :class:`~repro.serve.serve_loop.PairScorer`
+  backend constructed with ``mesh=`` additionally shards every shard's batch
+  dimension over the device mesh via ``launch.sharding.data_parallel`` —
+  thread workers scale across hosts' independent scorers, the mesh path
+  scales across one host's devices.  A backend error fails exactly the
+  segments of that group (retryable), leaving other groups' results intact.
+* **Commit** happens after execution, per segment in arrival order: merge the
+  new labels into the client's cache, charge its ledger atomically, resolve
+  the request handles, complete the future.
+
+Remaining for multi-host dispatch (see ROADMAP "Serving architecture"): a
+network transport in front of ``submit`` and a worker pool spanning hosts;
+the window/plan/commit machinery here is transport-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+import weakref
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.oracle import (
+    Oracle,
+    OracleBatch,
+    commit_requests,
+    plan_requests,
+)
+
+
+@dataclasses.dataclass
+class _Segment:
+    """One enqueued flush: a client batch's pending set plus its future."""
+
+    batch: OracleBatch
+    oracle: Oracle
+    requests: list
+    future: Future
+    rows: int
+
+    def fail(self, exc: BaseException) -> None:
+        """Complete exceptionally and hand the requests back to the batch so
+        the same flush can be retried (mirrors local-flush atomicity)."""
+        self.batch._pending = self.requests + self.batch._pending
+        self.future.set_exception(exc)
+
+
+@dataclasses.dataclass
+class _Plan:
+    """A successfully planned segment, ready for group execution."""
+
+    seg: _Segment
+    keys_list: list            # per-request encoded keys
+    n_requested: int           # total rows incl. cache hits
+    new_keys: np.ndarray       # unique uncached keys this segment labels
+    new_idx: np.ndarray        # decoded (n_new, k) tuple indices
+    vals: Optional[np.ndarray] = None   # labels for new_keys (set by execute)
+
+
+class OracleService:
+    """Micro-batching request broker between OracleBatch clients and a pool
+    of scorer workers (module docstring has the full architecture).
+
+    Parameters
+    ----------
+    workers:
+        Worker threads sharding each super-batch.  Shards run the group's
+        vectorised ``_label`` concurrently; backends must be pure per row
+        (true for every Oracle here — labels are per-tuple).
+    max_batch:
+        Row-count window trigger: a window dispatches as soon as its
+        accumulated request rows reach this.
+    max_wait_ms:
+        Deadline window trigger: maximum time the dispatcher waits after the
+        first flush of a window for more clients to arrive.
+    min_shard:
+        Smallest shard worth its own worker; groups below ``2 * min_shard``
+        rows execute unsharded (sharding a padded scorer batch too finely
+        wastes pad rows).
+    """
+
+    def __init__(self, workers: int = 1, max_batch: int = 8192,
+                 max_wait_ms: float = 4.0, min_shard: int = 256):
+        self.workers = max(int(workers), 1)
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_ms) / 1e3
+        self.min_shard = max(int(min_shard), 1)
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._queue: list[_Segment] = []
+        # weak: an attached oracle that is dropped without detach must not
+        # stall window assembly (or alias a recycled address) forever
+        self._clients: "weakref.WeakSet[Oracle]" = weakref.WeakSet()
+        self._closed = False
+        self._pool: Optional[ThreadPoolExecutor] = (
+            ThreadPoolExecutor(max_workers=self.workers,
+                               thread_name_prefix="oracle-worker")
+            if self.workers > 1 else None
+        )
+        # observability (read via stats(); written only by the dispatcher)
+        self.windows = 0
+        self.segments = 0
+        self.backend_calls = 0
+        self.rows_requested = 0
+        self.rows_labelled = 0
+        self._dispatcher = threading.Thread(
+            target=self._run, name="oracle-service", daemon=True
+        )
+        self._dispatcher.start()
+
+    # ---- client lifecycle --------------------------------------------------
+
+    def attach(self, *oracles: Oracle) -> "OracleService":
+        """Route the oracles' flushes through this service.  The attached set
+        also drives window assembly: a window closes early once every
+        attached client has a flush in it."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("OracleService is closed")
+            for o in oracles:
+                o.service = self
+                self._clients.add(o)
+        return self
+
+    def detach(self, *oracles: Oracle) -> None:
+        """Return the oracles to local (synchronous) flushing.  Detaching
+        finished queries keeps windows from waiting on clients that will
+        never flush again."""
+        with self._cv:
+            for o in oracles:
+                if o.service is self:
+                    o.service = None
+                self._clients.discard(o)
+            self._cv.notify_all()
+
+    def submit(self, batch: OracleBatch) -> Future:
+        """Enqueue a batch's pending set; called by ``flush_async``.  The
+        caller must not touch the batch again until the future resolves
+        (one outstanding flush per batch — the submit-then-await protocol
+        every pipeline stage follows)."""
+        requests, batch._pending = batch._pending, []
+        seg = _Segment(
+            batch=batch, oracle=batch.oracle, requests=requests,
+            future=Future(), rows=sum(len(r.idx) for r in requests),
+        )
+        with self._cv:
+            if self._closed:
+                batch._pending = requests
+                raise RuntimeError("OracleService is closed")
+            self._queue.append(seg)
+            self._cv.notify_all()
+        return seg.future
+
+    def close(self) -> None:
+        """Drain the queue, stop the dispatcher, shut the worker pool."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._dispatcher.join()
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "OracleService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> dict:
+        return {
+            "windows": self.windows,
+            "segments": self.segments,
+            "backend_calls": self.backend_calls,
+            "rows_requested": self.rows_requested,
+            "rows_labelled": self.rows_labelled,
+            "segments_per_window": round(
+                self.segments / max(self.windows, 1), 2
+            ),
+        }
+
+    # ---- dispatcher --------------------------------------------------------
+
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if not self._queue:
+                    return                       # closed and drained
+                window = [self._queue.pop(0)]
+                rows = window[0].rows
+                deadline = time.monotonic() + self.max_wait_s
+                while rows < self.max_batch:
+                    if self._queue:
+                        seg = self._queue.pop(0)
+                        window.append(seg)
+                        rows += seg.rows
+                        continue
+                    present = {id(s.oracle) for s in window}
+                    waiting = any(
+                        id(o) not in present for o in self._clients
+                    )
+                    remain = deadline - time.monotonic()
+                    if self._closed or remain <= 0 or not waiting:
+                        break                    # nobody left to wait for
+                    self._cv.wait(remain)
+            try:
+                self._process(window)
+            except BaseException as e:  # noqa: BLE001 — dispatcher must survive
+                for seg in window:
+                    if not seg.future.done():
+                        seg.fail(e)
+
+    # ---- window processing -------------------------------------------------
+
+    def _process(self, window: list[_Segment]) -> None:
+        self.windows += 1
+        self.segments += len(window)
+        plans = self._plan(window)
+        groups: dict = {}
+        for plan in plans:
+            groups.setdefault(plan.seg.oracle.service_group(), []).append(plan)
+        for group in groups.values():
+            self._execute_group(group)
+        for plan in plans:                       # commit in arrival order
+            if plan.seg.future.done():           # its group failed
+                continue
+            self._commit(plan)
+
+    def _plan(self, window: list[_Segment]) -> list[_Plan]:
+        """Per-segment dedup + budget check via the shared
+        :func:`repro.core.oracle.plan_requests` (exactly local-flush
+        semantics).  Earlier same-oracle segments in the window count as
+        cached-to-be (same-oracle segments always share a service group, so
+        they execute — and later commit — together or fail together)."""
+        plans: list[_Plan] = []
+        planned: dict[int, list[np.ndarray]] = {}   # id(oracle) -> key arrays
+        for seg in window:
+            o = seg.oracle
+            try:
+                prior = planned.get(id(o))
+                keys_list, n_requested, new_keys = plan_requests(
+                    o, seg.requests,
+                    extra_planned=np.concatenate(prior) if prior else None,
+                )
+                plans.append(_Plan(
+                    seg=seg, keys_list=keys_list, n_requested=n_requested,
+                    new_keys=new_keys, new_idx=o._decode(new_keys),
+                ))
+                if len(new_keys):
+                    planned.setdefault(id(o), []).append(new_keys)
+            except BaseException as e:  # noqa: BLE001 — isolate per client
+                seg.fail(e)
+        return plans
+
+    def _execute_group(self, group: list[_Plan]) -> None:
+        """Concatenate a group's new rows into one super-batch, shard it over
+        the worker pool, and scatter labels back per plan.  A backend error
+        fails every segment of this group and only this group."""
+        lens = [len(p.new_idx) for p in group]
+        total = sum(lens)
+        if total == 0:
+            return
+        idx = np.concatenate([p.new_idx for p in group if len(p.new_idx)])
+        fn = group[0].seg.oracle._label     # same group => same pure backend
+        try:
+            vals = self._execute(fn, idx)
+            if vals.shape != (total,):
+                raise RuntimeError(
+                    f"backend returned shape {vals.shape} for {total} rows"
+                )
+        except BaseException as e:  # noqa: BLE001 — isolate per group
+            for p in group:
+                p.seg.fail(e)
+            return
+        self.rows_labelled += total
+        off = 0
+        for p, n in zip(group, lens):
+            p.vals = vals[off:off + n]
+            off += n
+
+    def _execute(self, fn: Callable, idx: np.ndarray) -> np.ndarray:
+        n_shards = min(self.workers, len(idx) // self.min_shard)
+        if self._pool is None or n_shards < 2:
+            self.backend_calls += 1
+            return np.asarray(fn(idx), np.float64)
+        shards = np.array_split(idx, n_shards)
+        self.backend_calls += n_shards
+        futs = [self._pool.submit(fn, s) for s in shards]
+        return np.concatenate(
+            [np.asarray(f.result(), np.float64) for f in futs]
+        )
+
+    def _commit(self, plan: _Plan) -> None:
+        """Atomic ledger charge + cache merge + per-client result routing via
+        the shared :func:`repro.core.oracle.commit_requests`.  Runs only
+        after the group's backend execution succeeded, so a failure anywhere
+        earlier leaves this client's oracle untouched."""
+        commit_requests(
+            plan.seg.oracle, plan.seg.requests, plan.keys_list,
+            plan.n_requested, plan.new_keys, plan.vals,
+        )
+        self.rows_requested += plan.n_requested
+        plan.seg.future.set_result(None)
+
+
+def serve_queries(service: OracleService, jobs: list) -> list:
+    """Run ``jobs`` — callables ``job() -> result`` each owning one attached
+    oracle — concurrently against one service.  Convenience for entry points
+    and benchmarks: threads map 1:1 to queries (each blocks in
+    ``future.result()`` while the service batches), results keep job order,
+    and the first job exception propagates after all threads join.
+    """
+    results: list = [None] * len(jobs)
+    errors: list = []
+
+    def runner(i: int, job) -> None:
+        try:
+            results[i] = job()
+        except BaseException as e:  # noqa: BLE001 — re-raised after join
+            errors.append(e)
+
+    threads = [
+        threading.Thread(target=runner, args=(i, job), daemon=True)
+        for i, job in enumerate(jobs)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if errors:
+        raise errors[0]
+    return results
+
+
+__all__ = ["OracleService", "serve_queries"]

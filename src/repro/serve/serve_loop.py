@@ -18,7 +18,7 @@ standard serving pattern for mixed-length batches.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

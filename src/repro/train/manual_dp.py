@@ -15,7 +15,6 @@ here, with tests on a host mesh).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

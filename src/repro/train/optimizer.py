@@ -5,7 +5,6 @@ standard memory/precision trade at scale (10 bytes/param optimizer state).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -4,7 +4,6 @@ one jittable function for the launcher and the dry-run.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -12,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.models import loss_fn
 from repro.models.config import ModelConfig
-from .optimizer import OptimizerConfig, adamw_update, compress_grads, init_opt_state
+from .optimizer import OptimizerConfig, adamw_update, compress_grads
 
 
 def _split_microbatches(batch: dict, n: int):

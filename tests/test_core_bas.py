@@ -3,12 +3,9 @@ import pytest
 
 from repro.core import (
     Agg,
-    ArrayOracle,
-    BASConfig,
     Query,
     run_bas,
     run_uniform,
-    run_wwj,
 )
 from repro.core.oracle import BudgetExceeded
 from repro.data import make_clustered_tables, make_syn_scores

@@ -12,7 +12,6 @@ import pytest
 
 from repro.core import (
     Agg,
-    ArrayOracle,
     BASConfig,
     Catalog,
     JoinMLEngine,
@@ -87,6 +86,7 @@ def test_dense_streaming_consistent_three_way():
     assert rs.ci.lo <= rd.ci.hi and rd.ci.lo <= rs.ci.hi
 
 
+@pytest.mark.slow
 def test_streaming_three_way_never_materialises_flat_weights(monkeypatch):
     """Acceptance: auto on a 160^3 chain (flat weights would be ~33 MB) runs
     streaming under a 24 MB python-heap peak and never calls the dense

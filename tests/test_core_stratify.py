@@ -1,7 +1,6 @@
 import numpy as np
 
 from repro.core.stratify import (
-    Stratification,
     auto_num_strata,
     collect_top,
     stratify_dense,

@@ -12,8 +12,9 @@ import os
 import subprocess
 import sys
 
-import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -1,11 +1,12 @@
 """Per-kernel allclose sweeps: Pallas (interpret=True on CPU) vs pure-jnp
 ref.py oracles across shape/dtype grids."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core.similarity import normalize
+
+pytestmark = pytest.mark.pallas
 
 
 def rand_emb(rng, n, d, dtype):

@@ -8,6 +8,8 @@ import pytest
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import decode_step, forward, init_cache, init_params, loss_fn
 
+pytestmark = pytest.mark.slow
+
 
 def make_batch(cfg, b=2, s=24, seed=0):
     rng = np.random.default_rng(seed)

@@ -50,6 +50,27 @@ def test_dedup_across_requests_charges_once():
     assert oracle.dedup_ratio == pytest.approx(1 - 4 / 11)
 
 
+def test_empty_flush_is_guaranteed_noop():
+    """flush() / flush_async() on an empty pending set must be a no-op: no
+    backend call, no budget charge, counters untouched — even when the
+    budget is already fully spent."""
+    oracle, log = _counting_oracle()
+    oracle.set_budget(2)
+    oracle.label(np.array([[0, 0], [1, 1]]))         # budget fully spent
+    before = (oracle.calls, oracle.requests, oracle.batches)
+
+    batch = OracleBatch(oracle)
+    batch.flush()                                    # nothing pending: no-op
+    fut = batch.flush_async()
+    assert fut.done() and fut.exception() is None
+    # zero-row submissions are equally free
+    h = batch.submit(np.zeros((0, 2), np.int64))
+    batch.flush()
+    assert len(h.labels) == 0
+    assert (oracle.calls, oracle.requests, oracle.batches) == before
+    assert len(log) == 1                             # no new backend call
+
+
 def test_budget_exceeded_is_atomic():
     oracle, log = _counting_oracle()
     oracle.set_budget(5)

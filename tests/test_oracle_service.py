@@ -1,0 +1,288 @@
+"""OracleService: cross-query coalescing semantics.
+
+The contract under test: routing any number of concurrent queries through one
+service changes *where* labelling executes (shared micro-batched windows on a
+worker pool) but nothing about *what* each query computes — estimates are
+bit-identical to serial execution, ledgers stay per-query, and one query's
+budget exhaustion or backend failure never touches another query's batch.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Agg, FnOracle, ModelOracle, OracleBatch, Query, run_bas
+from repro.core.oracle import BudgetExceeded
+from repro.data import make_clustered_tables
+from repro.serve.oracle_service import OracleService, serve_queries
+
+
+def _mk_query(seed, budget=1500, n=100):
+    ds = make_clustered_tables(n, n, n_entities=150, noise=0.4, seed=seed)
+    return Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(),
+                 budget=budget)
+
+
+# ----------------------------------------------------------------------------
+# bit-identical estimates + untouched ledgers
+# ----------------------------------------------------------------------------
+
+def test_concurrent_queries_bit_identical_to_serial():
+    """Two (and more) queries sharing one OracleService must produce exactly
+    the estimates, CIs, and ledger counts of running them serially."""
+    seeds = (1, 2, 3, 4)
+    serial = []
+    for s in seeds:
+        q = _mk_query(s)
+        res = run_bas(q, seed=s)
+        serial.append((res, q.oracle.calls, q.oracle.requests))
+
+    with OracleService(workers=2, max_wait_ms=20.0) as svc:
+        queries = [_mk_query(s) for s in seeds]
+        svc.attach(*[q.oracle for q in queries])
+
+        def job(q, s):
+            try:
+                return run_bas(q, seed=s)
+            finally:
+                svc.detach(q.oracle)
+
+        results = serve_queries(
+            svc, [lambda q=q, s=s: job(q, s) for q, s in zip(queries, seeds)]
+        )
+        stats = svc.stats()
+
+    for (ref, calls, requests), got, q in zip(serial, results, queries):
+        assert got.estimate == ref.estimate          # bit-identical
+        assert got.ci.lo == ref.ci.lo and got.ci.hi == ref.ci.hi
+        assert q.oracle.calls == calls               # same ledger charge
+        assert q.oracle.requests == requests
+    # and the flushes actually coalesced across queries
+    assert stats["segments"] >= 4 * len(seeds)
+    assert stats["windows"] < stats["segments"]
+
+
+def test_budget_exhausted_query_leaves_others_untouched():
+    """A query that blows its budget mid-pipeline fails alone; a concurrent
+    query in the same service windows is bit-identical to running solo."""
+    ok_ref = _mk_query(7)
+    ref = run_bas(ok_ref, seed=7)
+
+    with OracleService(max_wait_ms=20.0) as svc:
+        # budget 6 < the pilot-stage minimum draw -> BudgetExceeded mid-pipeline
+        poor = _mk_query(5, budget=6)
+        ok = _mk_query(7)
+        svc.attach(poor.oracle, ok.oracle)
+        errs = []
+
+        def run_poor():
+            try:
+                run_bas(poor, seed=5)
+            except BudgetExceeded as e:
+                errs.append(e)
+            finally:
+                svc.detach(poor.oracle)
+
+        def run_ok():
+            try:
+                return run_bas(ok, seed=7)
+            finally:
+                svc.detach(ok.oracle)
+
+        t = threading.Thread(target=run_poor)
+        t.start()
+        res = run_ok()
+        t.join()
+
+    assert len(errs) == 1                            # poor query failed...
+    assert poor.oracle.calls == 0                    # ...charging nothing
+    assert res.estimate == ref.estimate              # other query untouched
+    assert res.ci.lo == ref.ci.lo and res.ci.hi == ref.ci.hi
+    assert ok.oracle.calls == ok_ref.oracle.calls
+
+
+# ----------------------------------------------------------------------------
+# window-level failure isolation + retry
+# ----------------------------------------------------------------------------
+
+def _flush_concurrently(batches):
+    """Flush all batches from separate threads so they land in one service
+    window; returns the futures' exceptions (None for success)."""
+    outcomes = [None] * len(batches)
+    barrier = threading.Barrier(len(batches))
+
+    def go(i):
+        barrier.wait()
+        try:
+            batches[i].flush_async().result()
+        except BaseException as e:  # noqa: BLE001
+            outcomes[i] = e
+
+    threads = [threading.Thread(target=go, args=(i,)) for i in range(len(batches))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return outcomes
+
+
+def _parity_oracle(n=64):
+    o = FnOracle(lambda idx: (idx.sum(axis=1) % 2).astype(np.float64))
+    o.bind_sizes((n, n))
+    return o
+
+def test_budget_failure_isolated_and_retryable_in_one_window():
+    a, b = _parity_oracle(), _parity_oracle()
+    a.set_budget(2)
+    idx_a = np.array([[0, 1], [2, 3], [4, 5]])      # 3 new > budget 2
+    idx_b = np.array([[1, 2], [3, 4]])
+    with OracleService(max_wait_ms=500.0) as svc:
+        svc.attach(a, b)
+        ba, bb = OracleBatch(a), OracleBatch(b)
+        ha, hb = ba.submit(idx_a), bb.submit(idx_b)
+        out = _flush_concurrently([ba, bb])
+        assert isinstance(out[0], BudgetExceeded)
+        assert out[1] is None
+        # b's window-mate failure never reached b
+        np.testing.assert_array_equal(hb.labels, idx_b.sum(1) % 2)
+        assert b.calls == 2 and b.requests == 2
+        # a is untouched and retryable: raise the budget, same batch succeeds
+        assert a.calls == 0 and a.requests == 0 and a.batches == 0
+        a.set_budget(5)
+        ba.flush_async().result()
+        np.testing.assert_array_equal(ha.labels, idx_a.sum(1) % 2)
+        assert a.calls == 3
+
+
+def test_backend_error_isolated_and_retryable_in_one_window():
+    state = {"fail": True}
+
+    def flaky(idx):
+        if state["fail"]:
+            raise RuntimeError("transient backend error")
+        return (idx.sum(axis=1) % 2).astype(np.float64)
+
+    a = FnOracle(flaky)
+    a.bind_sizes((64, 64))
+    b = _parity_oracle()
+    idx = np.array([[1, 2], [3, 4], [5, 6]])
+    with OracleService(max_wait_ms=500.0) as svc:
+        svc.attach(a, b)
+        ba, bb = OracleBatch(a), OracleBatch(b)
+        ha, hb = ba.submit(idx), bb.submit(idx)
+        out = _flush_concurrently([ba, bb])
+        assert isinstance(out[0], RuntimeError)
+        assert out[1] is None
+        np.testing.assert_array_equal(hb.labels, idx.sum(1) % 2)
+        assert a.calls == 0 and a.batches == 0       # atomic failure
+        state["fail"] = False
+        ba.flush_async().result()                    # retryable
+        np.testing.assert_array_equal(ha.labels, idx.sum(1) % 2)
+        assert a.calls == 3
+
+
+# ----------------------------------------------------------------------------
+# cross-query super-batch fusion + worker sharding
+# ----------------------------------------------------------------------------
+
+def test_shared_scorer_queries_fuse_into_one_backend_call():
+    """ModelOracles scoring through one shared scorer share a service group:
+    concurrent flushes fuse into a single backend execution."""
+    calls = []
+
+    def scorer(idx):
+        calls.append(np.array(idx))
+        return (idx.sum(axis=1) % 2).astype(np.float64)
+
+    a = ModelOracle(scorer, threshold=0.5)
+    b = ModelOracle(scorer, threshold=0.5)
+    for o in (a, b):
+        o.bind_sizes((64, 64))
+    assert a.service_group() == b.service_group()
+    # a scorer *object* with a .score method (the PairScorer shape) must fuse
+    # too: ModelOracle stores the bound method, whose id is per-access
+    class _Scorer:
+        def score(self, idx):
+            return np.zeros(len(idx))
+
+    shared = _Scorer()
+    assert (ModelOracle(shared).service_group()
+            == ModelOracle(shared).service_group())
+    assert (ModelOracle(shared).service_group()
+            != ModelOracle(_Scorer()).service_group())
+    idx_a = np.array([[0, 1], [2, 3]])
+    idx_b = np.array([[2, 3], [4, 5]])              # overlaps a; NOT deduped
+    with OracleService(max_wait_ms=500.0) as svc:
+        svc.attach(a, b)
+        ba, bb = OracleBatch(a), OracleBatch(b)
+        ha, hb = ba.submit(idx_a), bb.submit(idx_b)
+        out = _flush_concurrently([ba, bb])
+    assert out == [None, None]
+    assert len(calls) == 1                           # one fused super-batch
+    assert len(calls[0]) == 4                        # ledgers stay per-query:
+    assert a.calls == 2 and b.calls == 2             # no cross-oracle dedup
+    np.testing.assert_array_equal(ha.labels, idx_a.sum(1) % 2)
+    np.testing.assert_array_equal(hb.labels, idx_b.sum(1) % 2)
+
+
+def test_worker_pool_shards_large_flushes():
+    sizes = []
+    lock = threading.Lock()
+
+    def fn(idx):
+        with lock:
+            sizes.append(len(idx))
+        return (idx.sum(axis=1) % 2).astype(np.float64)
+
+    o = FnOracle(fn)
+    o.bind_sizes((1000, 1000))
+    rng = np.random.default_rng(0)
+    idx = np.unique(rng.integers(0, 1000, size=(4096, 2)), axis=0)
+    with OracleService(workers=4, min_shard=256, max_wait_ms=1.0) as svc:
+        svc.attach(o)
+        got = o.label(idx)
+    assert len(sizes) == 4                           # sharded over the pool
+    assert sum(sizes) == len(idx)
+    np.testing.assert_array_equal(got, idx.sum(1) % 2)
+
+
+def test_solo_client_dispatches_without_deadline_wait():
+    """With every attached client already in the window there is nobody to
+    wait for: a solo query must not pay the windowing deadline."""
+    import time
+
+    o = _parity_oracle()
+    with OracleService(max_wait_ms=5000.0) as svc:
+        svc.attach(o)
+        t0 = time.perf_counter()
+        o.label(np.array([[1, 2], [3, 4]]))
+        dt = time.perf_counter() - t0
+    assert dt < 2.0                                  # far below the deadline
+
+
+def test_detached_oracle_flushes_locally_again():
+    o = _parity_oracle()
+    svc = OracleService(max_wait_ms=1.0)
+    svc.attach(o)
+    assert o.service is svc
+    svc.detach(o)
+    assert o.service is None
+    np.testing.assert_array_equal(
+        o.label(np.array([[1, 2]])), [1.0]
+    )
+    svc.close()
+
+
+def test_submit_after_close_raises_and_restores_pending():
+    o = _parity_oracle()
+    svc = OracleService(max_wait_ms=1.0)
+    svc.attach(o)
+    svc.close()
+    batch = OracleBatch(o)
+    batch.submit(np.array([[1, 2]]))
+    with pytest.raises(RuntimeError):
+        batch.flush_async()
+    assert len(batch._pending) == 1                  # retryable after detach
+    o.service = None
+    batch.flush()
+    assert o.calls == 1

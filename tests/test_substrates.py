@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, train loop, checkpointing (atomic/async/
 reshard), fault tolerance, data pipeline, serving."""
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_smoke_config
-from repro.models import init_params, loss_fn
+from repro.models import init_params
 from repro.train import (
     OptimizerConfig,
     adamw_update,
@@ -49,6 +48,7 @@ def test_grad_compression_roundtrip():
         )
 
 
+@pytest.mark.slow
 def test_train_step_microbatch_equivalence():
     """Gradient accumulation must match the single-batch gradient."""
     cfg = get_smoke_config("llama3.2-1b", remat=False)
@@ -65,6 +65,7 @@ def test_train_step_microbatch_equivalence():
     assert float(m1["grad_norm"]) == pytest.approx(float(m4["grad_norm"]), rel=3e-2)
 
 
+@pytest.mark.slow
 def test_train_loop_loss_decreases():
     """A few hundred optimizer steps on a tiny oracle model fit a small
     synthetic pair dataset (e2e learnability of the substrate)."""
