@@ -1,6 +1,9 @@
 """Fig. 10: adaptive allocation vs fixed blocking ratios.  Reported as
 relative RMSE *improvement over WWJ* for: adaptive BAS, the best fixed ratio
-(approx optimal), and the worst fixed ratio."""
+(approx optimal), and the worst fixed ratio.
+
+Run via ``python -m benchmarks.run --only allocation`` (``--full`` for
+paper-scale repetition counts).  Reporting only — no CI gate."""
 from __future__ import annotations
 
 import numpy as np

@@ -1,6 +1,10 @@
 """Fig. 2/5/6: statistical guarantees.  A valid 95% CI requires the 95th
 percentile of |err| / CI-half-width <= 1.  BLOCKING violates this (bias with
-shrinking CI); BAS stays valid, including at tiny budgets and pilot sizes."""
+shrinking CI); BAS stays valid, including at tiny budgets and pilot sizes.
+
+Run via ``python -m benchmarks.run --only guarantees`` (``--full`` for
+paper-scale repetition counts).  Reporting only — no CI gate (CI *validity*
+itself is asserted by the statistical tests in ``tests/``)."""
 from __future__ import annotations
 
 

@@ -1,6 +1,9 @@
 """Kernel micro-benchmarks: Pallas (interpret on CPU — structural check) vs
 pure-jnp reference, wall time + agreement.  On TPU the same entry points run
-compiled."""
+compiled.
+
+Run via ``python -m benchmarks.run --only kernels``.  Reporting only — no CI
+gate (kernel/reference agreement is asserted by ``tests/test_kernels.py``)."""
 from __future__ import annotations
 
 import time

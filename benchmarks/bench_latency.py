@@ -2,7 +2,10 @@
 stratification, pilot, allocation, execution, resampling CI) — the speedup of
 the fused sim_hist kernel path vs the paper's sort-based stratification — and
 the dense-vs-streaming crossover sweep that calibrates the memory-aware
-dispatcher (``repro.core.dispatch``)."""
+dispatcher (``repro.core.dispatch``).
+
+Run via ``python -m benchmarks.run --only latency`` (``--full`` for
+paper-scale table sizes).  Reporting only — no CI gate."""
 from __future__ import annotations
 
 import time

@@ -1,5 +1,8 @@
 """Fig. 12: sensitivity to embedding quality — Syn(FNR, FPR) grid.  BAS must
-dominate BLOCKING at high FNR and WWJ at high FPR."""
+dominate BLOCKING at high FNR and WWJ at high FPR.
+
+Run via ``python -m benchmarks.run --only noise`` (``--full`` for paper-scale
+repetition counts).  Reporting only — no CI gate."""
 from __future__ import annotations
 
 

@@ -8,7 +8,13 @@ same high-weight tuples), so cache hits and within-batch duplicates are
 common — exactly the regime the batched layer is built for.
 
 Rows: ``oracle_{cache}_b{batch}`` with labels/sec and the achieved dedup
-ratio.  Run in CI (``--smoke``) so regressions in the oracle hot path are
+ratio.  Run via ``python -m benchmarks.run --only oracle`` (``--smoke`` for
+the reduced CI profile).
+
+CI gate: every test-matrix leg runs this module through ``scripts/ci.sh``
+(and the smoke-bench job uploads its JSON rows); the in-module assertion —
+the vectorized cache must never label more tuples than the legacy dict cache
+— plus any runtime error fails CI, so regressions in the oracle hot path are
 visible.
 """
 from __future__ import annotations

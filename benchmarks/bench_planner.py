@@ -1,6 +1,9 @@
 """Fig. 9: join-order optimisation — plan costs (true-cardinality execution
 cost) for plans chosen with BAS vs UNIFORM vs WWJ cardinality estimates, and
-the worst plan as the regret reference."""
+the worst plan as the regret reference.
+
+Run via ``python -m benchmarks.run --only planner`` (``--full`` for
+paper-scale repetition counts).  Reporting only — no CI gate."""
 from __future__ import annotations
 
 import time

@@ -1,6 +1,9 @@
 """Fig. 7: end-to-end relative RMSE of BAS vs UNIFORM / BLOCKING / WWJ /
 ABAE / BLAZEIT across the dataset suite (paper-workload analogs, a Syn
-stress case, and a multi-way chain join)."""
+stress case, and a multi-way chain join).
+
+Run via ``python -m benchmarks.run --only rmse`` (``--full`` for paper-scale
+repetition counts).  Reporting only — no CI gate."""
 from __future__ import annotations
 
 import numpy as np

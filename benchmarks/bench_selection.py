@@ -1,6 +1,9 @@
 """Fig. 8: selection queries with recall guarantees — precision of BAS
 selection vs a SUPG-style importance-sampling threshold baseline; Top-K heavy
-hitters precision."""
+hitters precision.
+
+Run via ``python -m benchmarks.run --only selection`` (``--full`` for
+paper-scale repetition counts).  Reporting only — no CI gate."""
 from __future__ import annotations
 
 import numpy as np

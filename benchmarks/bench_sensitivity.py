@@ -1,6 +1,9 @@
 """Fig. 13: sensitivity of BAS to the maximum blocking ratio alpha (13a) and
 the weight exponent (13b).  BAS should fluctuate mildly and consistently beat
-UNIFORM/WWJ."""
+UNIFORM/WWJ.
+
+Run via ``python -m benchmarks.run --only sensitivity`` (``--full`` for
+paper-scale repetition counts).  Reporting only — no CI gate."""
 from __future__ import annotations
 
 from repro.core import Agg, BASConfig, Query, run_bas, run_uniform, run_wwj

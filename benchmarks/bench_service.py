@@ -1,6 +1,7 @@
 """Oracle serving-substrate benchmark: cross-query coalescing throughput and
 query latency of :class:`repro.serve.oracle_service.OracleService` vs. the
-serial PR 2 path (each query sync-flushing straight into the scorer).
+serial PR 2 path (each query sync-flushing straight into the scorer), plus
+the loopback-TCP transport path (:mod:`repro.serve.transport`) vs. both.
 
 Workload: C identical-shape BAS COUNT queries (C in {1, 4, 16}) over one
 clustered-pair join, every query labelling through ONE shared scorer —
@@ -14,13 +15,24 @@ flushes; the service path attaches all C oracles to one ``OracleService``
 and runs them on C threads, so pilot/blocking/top-up rounds from different
 queries fuse into shared super-batches.
 
-Rows: ``service_{serial|async}_q{C}`` with labels/sec plus p50/p99 per-query
-latency; async rows add the speedup and the window/backend-call counts.
-``--smoke`` (CI) runs a reduced profile and asserts the headline acceptance
-number: >= 2x labels/sec at 16 concurrent queries.  The speedup is
-structural — coalescing divides the padded-row and launch counts — so it is
-machine-independent as long as scorer compute dominates, which this profile
-is sized for.
+The TCP rows run the same fleet as client threads that each hold a
+:class:`~repro.serve.transport.RemoteOracle` over a loopback connection to an
+in-process :class:`~repro.serve.transport.OracleServiceServer` — measuring
+exactly what multi-host dispatch adds on top of the in-process service:
+framing, one round trip per flush, and per-connection handler threads.
+
+Rows: ``service_{serial|async|tcp}_q{C}`` with labels/sec plus p50/p99
+per-query latency; async/tcp rows add the speedup over serial and the
+window/backend-call counts.  Run via ``python -m benchmarks.run --only
+service`` (``--json`` for the artifact CI uploads).
+
+CI gates (asserted here, exercised by the workflow's smoke-bench job with
+``--smoke``): (a) the in-process service reaches >= 2x serial labels/sec at
+16 concurrent queries; (b) loopback TCP stays within 1.5x of the in-process
+service's labels/sec at 16 queries while still >= 2x serial, with estimates
+bit-identical to the serial path.  The speedups are structural — coalescing
+divides the padded-row and launch counts — so they are machine-independent
+as long as scorer compute dominates, which this profile is sized for.
 """
 from __future__ import annotations
 
@@ -31,6 +43,8 @@ import numpy as np
 from repro.core import Agg, BASConfig, ModelOracle, Query, run_bas
 from repro.data import make_clustered_tables
 from repro.serve.oracle_service import OracleService, serve_queries
+from repro.serve.transport import (OracleServiceServer, RemoteOracle,
+                                   scorer_group)
 
 from .common import row
 
@@ -124,6 +138,41 @@ def _run_fleet(ds, scorer, weights, n_queries: int, budget: int,
     return queries, results, lat, wall, stats
 
 
+def _run_fleet_tcp(ds, scorer, weights, n_queries: int, budget: int,
+                   cfg: BASConfig, max_wait_ms: float):
+    """The multi-host path on loopback: every query is a client thread with
+    its own :class:`RemoteOracle` connection into one in-process TCP server;
+    the server's service coalesces EXEC segments across connections exactly
+    as the in-process path coalesces flushes across attached oracles."""
+    spec = ds.spec()
+    with OracleServiceServer({"bench": scorer_group(scorer, threshold=0.5)},
+                             workers=1, max_wait_ms=max_wait_ms,
+                             min_shard=4096) as server:
+        oracles = [RemoteOracle(server.address, "bench")
+                   for _ in range(n_queries)]
+        queries = [
+            Query(spec=spec, agg=Agg.COUNT, oracle=o, budget=budget)
+            for o in oracles
+        ]
+        lat = np.zeros(n_queries)
+
+        def job(i: int):
+            t0 = time.perf_counter()
+            try:
+                return run_bas(queries[i], cfg, seed=100 + i, weights=weights)
+            finally:
+                lat[i] = time.perf_counter() - t0
+                oracles[i].close()   # don't make windows wait on done clients
+
+        t0 = time.perf_counter()
+        results = serve_queries(
+            server.service, [lambda i=i: job(i) for i in range(n_queries)]
+        )
+        wall = time.perf_counter() - t0
+        stats = server.service.stats()
+    return queries, results, lat, wall, stats
+
+
 def run(fast: bool = True, smoke: bool = False):
     rows = []
     if smoke:
@@ -142,11 +191,13 @@ def run(fast: bool = True, smoke: bool = False):
     weights = chain_weights(ds.spec().embeddings, cfg.weight_exponent,
                             cfg.weight_floor)
     speedups = {}
+    tcp_ratios = {}
     for c in levels:
         qs, results, lat_s, wall_serial, _ = _run_fleet(
             ds, scorer, weights, c, budget, cfg, service=False, workers=0,
             max_wait_ms=0,
         )
+        serial_estimates = [r.estimate for r in results]
         labels = sum(q.oracle.calls for q in qs)
         assert all(np.isfinite(r.estimate) for r in results)
         rows.append(row(
@@ -175,11 +226,52 @@ def run(fast: bool = True, smoke: bool = False):
             f"segments_per_window={stats['segments_per_window']};"
             f"backend_calls={stats['backend_calls']}",
         ))
+        # windows get extra grace over the in-process 8ms: each client's next
+        # flush arrives a round trip + client-side commit later, so the same
+        # deadline would fragment windows the in-process path keeps whole
+        qs, results, lat_t, wall_tcp, stats = _run_fleet_tcp(
+            ds, scorer, weights, c, budget, cfg, max_wait_ms=16.0,
+        )
+        labels_t = sum(q.oracle.calls for q in qs)
+        # multi-host dispatch changes where labelling runs, not what a query
+        # computes: loopback TCP must reproduce the serial estimates exactly
+        assert [r.estimate for r in results] == serial_estimates, (
+            "TCP-path estimates diverged from serial execution"
+        )
+        tcp_speedup = (labels_t / max(wall_tcp, 1e-9)) / max(
+            labels / max(wall_serial, 1e-9), 1e-9
+        )
+        tcp_ratios[c] = (labels_a / max(wall_async, 1e-9)) / max(
+            labels_t / max(wall_tcp, 1e-9), 1e-9
+        )
+        speedups[(c, "tcp")] = tcp_speedup
+        rows.append(row(
+            f"service_tcp_q{c}", wall_tcp / max(labels_t, 1),
+            f"labels_per_s={labels_t / max(wall_tcp, 1e-9):.0f};"
+            f"speedup={tcp_speedup:.2f}x;"
+            f"vs_inproc={tcp_ratios[c]:.2f}x;"
+            f"p50_ms={np.quantile(lat_t, 0.5) * 1e3:.0f};"
+            f"p99_ms={np.quantile(lat_t, 0.99) * 1e3:.0f};"
+            f"windows={stats['windows']};"
+            f"segments_per_window={stats['segments_per_window']};"
+            f"backend_calls={stats['backend_calls']}",
+        ))
     if 16 in speedups:
         # acceptance headline: cross-query coalescing must at least halve the
         # serial path's cost at 16 concurrent queries
         assert speedups[16] >= 2.0, (
             f"service speedup at 16 concurrent queries is {speedups[16]:.2f}x "
             f"(< 2x): cross-query coalescing regressed"
+        )
+        # and the transport must not eat the win: loopback TCP within 1.5x of
+        # the in-process service, still >= 2x over serial
+        assert tcp_ratios[16] <= 1.5, (
+            f"loopback TCP is {tcp_ratios[16]:.2f}x slower than the "
+            f"in-process service at 16 queries (> 1.5x): transport overhead "
+            f"regressed"
+        )
+        assert speedups[(16, "tcp")] >= 2.0, (
+            f"TCP service speedup at 16 concurrent queries is "
+            f"{speedups[(16, 'tcp')]:.2f}x (< 2x)"
         )
     return rows

@@ -1,9 +1,12 @@
 """Benchmark harness entry: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  Default is the fast profile (CI
-runtime); ``--full`` uses paper-scale repetition counts.  ``--only rmse``
-filters modules.  ``--json PATH`` additionally writes the rows (parsed into
-objects) plus run metadata to a JSON file — the artifact CI uploads.
+runtime); ``--full`` uses paper-scale repetition counts; ``--smoke`` is the
+reduced CI profile.  ``--only rmse`` filters modules.  ``--json PATH``
+additionally writes the rows (parsed into objects) plus run metadata to a
+JSON file — the artifact CI uploads.  ``--list`` prints each module's key
+and one-line summary (the first line of its docstring) without running
+anything.
 """
 from __future__ import annotations
 
@@ -54,7 +57,19 @@ def main() -> None:
     ap.add_argument("--only", default=None, help="comma-separated module keys")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows + metadata to this JSON file")
+    ap.add_argument("--list", action="store_true",
+                    help="print each module's key and one-line summary, "
+                         "then exit")
     args = ap.parse_args()
+    if args.list:
+        import importlib
+
+        width = max(len(k) for k in MODULES)
+        for key, modname in MODULES.items():
+            doc = importlib.import_module(modname).__doc__ or ""
+            first = doc.strip().splitlines()[0] if doc.strip() else "(no doc)"
+            print(f"{key:<{width}}  {first}")
+        return
     if args.smoke:
         args.full = False
     keys = list(MODULES) if not args.only else args.only.split(",")

@@ -3,6 +3,8 @@ estimates feed DPccp (interval DP on chain joins) and pick a cheaper execution
 order than uniform-sampling estimates.
 
     PYTHONPATH=src python examples/multiway_join_optimizer.py
+
+Flags: none.  Demonstration only — not run in CI.
 """
 import numpy as np
 

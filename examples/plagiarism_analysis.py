@@ -3,6 +3,8 @@ article sentence paraphrases the reference collection (self-join-style
 semantic join), with a budgeted Oracle and a valid CI.
 
     PYTHONPATH=src python examples/plagiarism_analysis.py
+
+Flags: none.  Demonstration only — not run in CI.
 """
 
 from repro.core import Agg, Query, run_bas, run_uniform

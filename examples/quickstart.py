@@ -5,6 +5,10 @@ tables with the JoinML engine, and runs the paper's Fig. 1 query syntax with
 an Oracle budget + confidence — comparing BAS against uniform sampling.
 
     PYTHONPATH=src python examples/quickstart.py
+
+Flags: none.  Demonstration only — the README quickstart snippet (smoke-run
+by the CI docs job via ``scripts/check_docs.py``) is a condensed version of
+this script.
 """
 
 from repro.core import ArrayOracle, Catalog, JoinMLEngine, Table

@@ -1,10 +1,20 @@
 """Serve a small model with batched requests: continuous-batching decode demo,
-throughput of the batched pair-scoring (Oracle) endpoint, and the async
-OracleService running concurrent queries against one shared scorer.
+throughput of the batched pair-scoring (Oracle) endpoint, the async
+OracleService running concurrent queries against one shared scorer, and a
+loopback multi-process fleet — a TCP server (plus a registered worker host)
+labelling for client processes that each run their own BAS query.
 
     PYTHONPATH=src python examples/serve_oracle.py
+
+Flags: none.  Demonstration only (the CI-gated serving numbers live in
+``benchmarks/bench_service.py``); the multi-process section spawns
+``repro.launch.serve --mode client`` subprocesses against 127.0.0.1.
 """
+import os
+import subprocess
+import sys
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
@@ -104,6 +114,41 @@ def main():
           f"in {dt:.2f}s; {stats['windows']} windows at "
           f"{stats['segments_per_window']} flushes/window; estimates "
           + ", ".join(f"{r.estimate:.0f}" for r in results))
+
+    # --- multi-host dispatch on loopback: server + worker + client procs ----
+    # The same scorer now serves OTHER PROCESSES: an OracleServiceServer
+    # exposes it over TCP, a second server registers as a worker host (so
+    # super-batches shard across "hosts" — both on loopback here), and two
+    # client processes each run a BAS query through a RemoteOracle.  Plan and
+    # commit never leave the clients; only label work crosses the wire.
+    from repro.serve.transport import OracleServiceServer, scorer_group
+
+    group = {"default": scorer_group(scorer, threshold=0.5)}
+    with OracleServiceServer(group, max_wait_ms=8.0) as worker:
+        with OracleServiceServer(group, max_wait_ms=8.0,
+                                 min_shard=64) as front:
+            front.register_worker(worker.address)
+            host, port = front.address
+            env = dict(os.environ)
+            src = str(Path(__file__).resolve().parents[1] / "src")
+            env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+            env.setdefault("JAX_PLATFORMS", "cpu")
+            cmd = [sys.executable, "-m", "repro.launch.serve",
+                   "--mode", "client", "--connect", f"{host}:{port}",
+                   "--queries", "1", "--budget", "150", "--n-side", "32"]
+            t0 = time.time()
+            procs = [subprocess.Popen(cmd, env=env, stdout=subprocess.PIPE,
+                                      text=True) for _ in range(2)]
+            outs = [p.communicate()[0] for p in procs]
+            dt = time.time() - t0
+            stats = front.service.stats()
+        assert all(p.returncode == 0 for p in procs), outs
+        for i, out in enumerate(outs):
+            for line in out.strip().splitlines():
+                print(f"  proc{i} {line}")
+        print(f"multi-process fleet: 2 client processes in {dt:.1f}s; front "
+              f"served {stats['rows_labelled']} rows in {stats['windows']} "
+              f"windows, {stats['remote_shards']} shards on the worker host")
 
 
 if __name__ == "__main__":

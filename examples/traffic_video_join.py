@@ -2,6 +2,8 @@
 cameras over a semantic join on vehicle identity (VeRi-style re-id).
 
     PYTHONPATH=src python examples/traffic_video_join.py
+
+Flags: none.  Demonstration only — not run in CI.
 """
 
 from repro.core import Agg, Query, run_bas, run_wwj

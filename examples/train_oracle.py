@@ -10,6 +10,11 @@
    with a *learned* Oracle instead of a ground-truth array.
 
     PYTHONPATH=src python examples/train_oracle.py [--steps 300] [--full]
+
+Flags: ``--steps N`` (train steps, default 300), ``--batch N`` (default 16),
+``--max-len N`` (sequence length, default 64), ``--full`` (~100M oracle
+config), ``--ckpt PATH`` (checkpoint directory).  Demonstration only — not
+run in CI.
 """
 import argparse
 import time

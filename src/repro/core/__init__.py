@@ -11,6 +11,8 @@ from .types import (  # noqa: F401
 from .oracle import (  # noqa: F401
     ArrayOracle,
     FnOracle,
+    LabelRequest,
+    LabelResult,
     ModelOracle,
     Oracle,
     OracleBatch,

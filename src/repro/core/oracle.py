@@ -62,6 +62,8 @@ worker sharding make the true backend-call count differ (see
 from __future__ import annotations
 
 import abc
+import dataclasses
+import struct
 from concurrent.futures import Future
 from typing import Callable, Optional, Sequence
 
@@ -70,6 +72,98 @@ import numpy as np
 
 class BudgetExceeded(RuntimeError):
     pass
+
+
+# ---- wire payloads ----------------------------------------------------------
+#
+# The multi-host transport (repro.serve.transport) ships pre-planned label
+# work between processes: a client plans a flush against its *own* cache and
+# ledger, sends only the unique uncached tuple indices, and commits locally
+# when the labels come back.  These two dataclasses are the payloads — pure
+# numpy/struct encodings with a fixed little-endian layout, so the framing
+# layer stays a dumb byte pipe and core/ carries the schema.  docs/serving.md
+# documents the byte layout as part of the protocol spec.
+
+_REQ_HDR = struct.Struct("<QIHH")   # request_id, n_rows, n_cols, group_len
+_RES_HDR = struct.Struct("<QII")    # request_id, n_rows, error_len
+
+
+@dataclasses.dataclass
+class LabelRequest:
+    """One pre-planned labelling segment: ``idx`` is the (n, k) int64 tuple
+    indices to label through the server-side group ``group``.  The sender has
+    already deduped against its cache and checked its budget — the server
+    only executes."""
+
+    group: str
+    idx: np.ndarray
+    request_id: int = 0
+
+    def to_bytes(self) -> bytes:
+        idx = np.ascontiguousarray(np.asarray(self.idx, dtype="<i8"))
+        if idx.ndim != 2:
+            raise ValueError(f"LabelRequest.idx must be (n, k), got {idx.shape}")
+        group = self.group.encode("utf-8")
+        hdr = _REQ_HDR.pack(self.request_id, idx.shape[0], idx.shape[1],
+                            len(group))
+        return hdr + group + idx.tobytes()
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "LabelRequest":
+        request_id, n, k, glen = _REQ_HDR.unpack_from(buf, 0)
+        off = _REQ_HDR.size
+        group = buf[off:off + glen].decode("utf-8")
+        off += glen
+        want = n * k * 8
+        raw = buf[off:off + want]
+        if len(raw) != want:
+            raise ValueError(
+                f"LabelRequest payload truncated: {len(raw)} != {want} bytes"
+            )
+        idx = np.frombuffer(raw, dtype="<i8").reshape(n, k).astype(np.int64)
+        return cls(group=group, idx=idx, request_id=request_id)
+
+
+@dataclasses.dataclass
+class LabelResult:
+    """The server's reply to one :class:`LabelRequest`: either ``labels``
+    (float64, aligned with the request's rows) or a non-empty ``error``
+    string (``"ErrorType: message"``).  An errored result carries no rows."""
+
+    request_id: int = 0
+    labels: Optional[np.ndarray] = None
+    error: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return not self.error
+
+    def to_bytes(self) -> bytes:
+        err = self.error.encode("utf-8")
+        if err:
+            return _RES_HDR.pack(self.request_id, 0, len(err)) + err
+        labels = np.ascontiguousarray(np.asarray(self.labels, dtype="<f8"))
+        if labels.ndim != 1:
+            raise ValueError(
+                f"LabelResult.labels must be (n,), got {labels.shape}"
+            )
+        hdr = _RES_HDR.pack(self.request_id, len(labels), 0)
+        return hdr + labels.tobytes()
+
+    @classmethod
+    def from_bytes(cls, buf: bytes) -> "LabelResult":
+        request_id, n, elen = _RES_HDR.unpack_from(buf, 0)
+        off = _RES_HDR.size
+        if elen:
+            return cls(request_id=request_id,
+                       error=buf[off:off + elen].decode("utf-8"))
+        raw = buf[off:off + n * 8]
+        if len(raw) != n * 8:
+            raise ValueError(
+                f"LabelResult payload truncated: {len(raw)} != {n * 8} bytes"
+            )
+        labels = np.frombuffer(raw, dtype="<f8").astype(np.float64)
+        return cls(request_id=request_id, labels=labels)
 
 
 class Oracle(abc.ABC):

@@ -1,6 +1,8 @@
 """Serving launcher: continuous-batching decode, batched pair scoring (the
-Oracle endpoint), or the full multi-query oracle service for a given --arch
-on the host devices.
+Oracle endpoint), the in-process multi-query oracle service, or one role of
+a multi-host serving fleet, for a given --arch on the host devices.
+
+In-process modes::
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
         --mode decode --requests 8
@@ -9,18 +11,30 @@ on the host devices.
     PYTHONPATH=src python -m repro.launch.serve --arch joinml-oracle \
         --mode service --queries 4 --budget 300
 
+Multi-host modes (see docs/serving.md for the topology)::
+
+    # host A: a worker (serves its scorer over TCP, no downstream)
+    ... serve --mode worker --port 7432
+    # host B: the front server; shards super-batches over itself + host A
+    ... serve --mode server --port 7431 --worker-hosts hostA:7432
+    # any host: a client process running BAS queries against the fleet
+    ... serve --mode client --connect hostB:7431 --queries 4 --budget 300
+
 ``--mode service`` runs concurrent BAS queries against ONE served scorer
 through an :class:`repro.serve.oracle_service.OracleService`: each query's
 pilot/blocking/top-up flushes coalesce across queries into super-batches,
 and with ``--shard`` every super-batch additionally shards its batch
 dimension over the host mesh (``launch.sharding.data_parallel``).
+``--mode server|worker`` expose exactly that machinery over TCP
+(:class:`repro.serve.transport.OracleServiceServer`); ``--mode client``
+runs the same BAS queries through :class:`repro.serve.transport.RemoteOracle`
+— plan/commit stay client-side, only labelling crosses the network.
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-import jax
 import numpy as np
 
 
@@ -44,24 +58,124 @@ def _make_scorer(args, cfg, params, tok, records, batch_size: int):
                       batch_size=batch_size, mesh=mesh)
 
 
+def _run_client(args) -> None:
+    """``--mode client``: BAS queries against a remote serving fleet.  Builds
+    the same synthetic join the demo server scores (seeded, so every process
+    agrees on table sizes), runs ``--queries`` concurrent queries through
+    per-query :class:`RemoteOracle`\\ s, and prints estimates + latency."""
+    from repro.core import Agg, BASConfig, Query, run_bas
+    from repro.data import make_clustered_tables
+    from repro.serve.oracle_service import serve_queries
+    from repro.serve.transport import RemoteOracle, parse_address
+
+    address = parse_address(args.connect)
+    n = args.n_side
+    ds = make_clustered_tables(n, n, n_entities=max(2 * n // 3, 4),
+                               noise=0.4, seed=0)
+    oracles = [RemoteOracle(address, args.group) for _ in range(args.queries)]
+    queries = [Query(spec=ds.spec(), agg=Agg.COUNT, oracle=o,
+                     budget=args.budget) for o in oracles]
+    lat = np.zeros(args.queries)
+
+    def job(i: int):
+        t0 = time.time()
+        try:
+            return run_bas(queries[i], BASConfig(n_bootstrap=100), seed=i)
+        finally:
+            lat[i] = time.time() - t0
+            oracles[i].close()       # free the server's window bookkeeping
+
+    t0 = time.time()
+    results = serve_queries(None, [lambda i=i: job(i)
+                                   for i in range(args.queries)])
+    dt = time.time() - t0
+    labels = sum(o.calls for o in oracles)
+    reconnects = sum(o.conn.reconnects for o in oracles)
+    print(f"[client] {args.queries} queries against "
+          f"{address[0]}:{address[1]}, {labels} labels in {dt:.2f}s "
+          f"({labels/max(dt,1e-9):.1f} labels/s, {reconnects} reconnects); "
+          f"p50={np.quantile(lat, 0.5)*1e3:.0f}ms "
+          f"p99={np.quantile(lat, 0.99)*1e3:.0f}ms")
+    for i, r in enumerate(results):
+        print(f"[client]   q{i}: estimate={r.estimate:.1f} "
+              f"ci=[{r.ci.lo:.1f}, {r.ci.hi:.1f}] calls={oracles[i].calls}")
+
+
+def _run_fleet_role(args, scorer) -> None:
+    """``--mode server|worker``: expose the scorer over TCP.  A worker is a
+    server with no downstream hosts; ``--worker-hosts`` turns a server into
+    the fleet front that shards super-batches across hosts."""
+    from repro.serve.transport import (OracleServiceServer, parse_address,
+                                       scorer_group)
+
+    role = args.mode
+    server = OracleServiceServer(
+        {args.group: scorer_group(scorer, threshold=0.5)},
+        host=args.host, port=args.port,
+        workers=args.workers, max_wait_ms=8.0,
+    )
+    host, port = server.address
+    print(f"[{role}] group {args.group!r} listening on {host}:{port}")
+    for spec in (args.worker_hosts.split(",") if args.worker_hosts else []):
+        w = server.register_worker(parse_address(spec))
+        print(f"[{role}] registered worker {w.address[0]}:{w.address[1]} "
+              f"groups={sorted(w.groups)}")
+    try:
+        deadline = time.time() + args.duration if args.duration else None
+        while deadline is None or time.time() < deadline:
+            time.sleep(0.2)
+    except KeyboardInterrupt:
+        pass
+    finally:
+        stats = server.service.stats()
+        server.close()
+        print(f"[{role}] shut down; {stats['windows']} windows, "
+              f"{stats['rows_labelled']} rows labelled, "
+              f"{stats['remote_shards']} remote shards")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b")
-    ap.add_argument("--mode", choices=("decode", "score", "service"),
+    ap.add_argument("--mode",
+                    choices=("decode", "score", "service",
+                             "server", "client", "worker"),
                     default="decode")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--pairs", type=int, default=64)
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--queries", type=int, default=4,
-                    help="service mode: number of concurrent BAS queries")
+                    help="service/client mode: concurrent BAS queries")
     ap.add_argument("--budget", type=int, default=300,
-                    help="service mode: oracle budget per query")
+                    help="service/client mode: oracle budget per query")
     ap.add_argument("--workers", type=int, default=1,
-                    help="service mode: scorer worker threads")
+                    help="service/server/worker mode: scorer worker threads")
     ap.add_argument("--shard", action="store_true",
                     help="data-parallel pair scoring over all host devices")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="server/worker mode: bind address")
+    ap.add_argument("--port", type=int, default=0,
+                    help="server/worker mode: bind port (0 = ephemeral)")
+    ap.add_argument("--connect", default="127.0.0.1:7431",
+                    help="client mode: front server host:port")
+    ap.add_argument("--worker-hosts", default="",
+                    help="server mode: comma-separated worker host:port list")
+    ap.add_argument("--group", default="default",
+                    help="server/worker/client mode: wire group name")
+    ap.add_argument("--n-side", type=int, default=48,
+                    help="server/client mode: synthetic table side length")
+    ap.add_argument("--duration", type=float, default=0.0,
+                    help="server/worker mode: seconds to serve (0 = forever)")
     args = ap.parse_args()
+
+    if args.mode == "client":
+        # the client holds no model — plan/commit are local, labelling is
+        # remote — so skip scorer construction entirely
+        _run_client(args)
+        return
+
+    import jax
 
     from repro.configs import get_smoke_config
     from repro.data.pipeline import ByteTokenizer
@@ -89,6 +203,11 @@ def main():
         toks = sum(len(r.out_tokens) for r in done)
         print(f"[serve] {len(done)} requests, {toks} tokens, {dt:.2f}s "
               f"({toks/max(dt,1e-9):.1f} tok/s)")
+    elif args.mode in ("server", "worker"):
+        n_side = args.n_side
+        records = [f"entity record {i:03d}" for i in range(n_side)]
+        scorer = _make_scorer(args, cfg, params, tok, records, batch_size=32)
+        _run_fleet_role(args, scorer)
     elif args.mode == "service":
         from repro.core import Agg, BASConfig, ModelOracle, Query, run_bas
         from repro.data import make_clustered_tables

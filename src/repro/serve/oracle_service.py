@@ -65,9 +65,16 @@ Architecture
   new labels into the client's cache, charge its ledger atomically, resolve
   the request handles, complete the future.
 
-Remaining for multi-host dispatch (see ROADMAP "Serving architecture"): a
-network transport in front of ``submit`` and a worker pool spanning hosts;
-the window/plan/commit machinery here is transport-agnostic.
+The window/plan/commit machinery here is transport-agnostic, and
+``repro.serve.transport`` puts a network in front of it: remote client
+processes submit pre-planned segments via :meth:`OracleService.submit_raw`
+(they plan and commit against their own cache/ledger, so the service only
+executes), window assembly counts connected transport clients exactly like
+attached in-process oracles, and :meth:`OracleService.register_remote_worker`
+extends the worker pool across hosts — super-batches for named wire groups
+shard over worker hosts as well as local threads/devices.  The architecture
+narrative, wire protocol spec, and deployment topology live in
+docs/serving.md.
 """
 from __future__ import annotations
 
@@ -90,18 +97,40 @@ from repro.core.oracle import (
 
 @dataclasses.dataclass
 class _Segment:
-    """One enqueued flush: a client batch's pending set plus its future."""
+    """One enqueued flush: a client batch's pending set plus its future.
 
-    batch: OracleBatch
-    oracle: Oracle
+    Two flavours share the queue: **oracle segments** (an in-process
+    ``OracleBatch`` flush — plan against the client's cache, commit to its
+    ledger) and **raw segments** (pre-planned work from a transport client
+    via :meth:`OracleService.submit_raw` — the remote client already planned
+    against its own cache, so the service only executes and the future
+    resolves to the label array)."""
+
+    batch: Optional[OracleBatch]
+    oracle: Optional[Oracle]
     requests: list
     future: Future
     rows: int
+    # raw-segment fields (transport path)
+    raw: bool = False
+    key: object = None          # service-group key; raw: ("wire", name)
+    fn: Optional[Callable] = None
+    idx: Optional[np.ndarray] = None
+    client_id: Optional[int] = None
+
+    def group_key(self):
+        return self.key if self.raw else self.oracle.service_group()
+
+    def label_fn(self) -> Callable:
+        return self.fn if self.raw else self.oracle._label
 
     def fail(self, exc: BaseException) -> None:
-        """Complete exceptionally and hand the requests back to the batch so
-        the same flush can be retried (mirrors local-flush atomicity)."""
-        self.batch._pending = self.requests + self.batch._pending
+        """Complete exceptionally; for oracle segments additionally hand the
+        requests back to the batch so the same flush can be retried (mirrors
+        local-flush atomicity).  Raw segments hold no client state — the
+        remote client's own batch keeps its pending set."""
+        if not self.raw:
+            self.batch._pending = self.requests + self.batch._pending
         self.future.set_exception(exc)
 
 
@@ -151,18 +180,32 @@ class OracleService:
         # weak: an attached oracle that is dropped without detach must not
         # stall window assembly (or alias a recycled address) forever
         self._clients: "weakref.WeakSet[Oracle]" = weakref.WeakSet()
+        # transport clients (repro.serve.transport): counted, not attached —
+        # the server tells us how many connections could still contribute to
+        # the open window (window assembly's remote analogue of _clients)
+        self._remote_clients: set[int] = set()
+        self._client_seq = 0
+        # worker hosts (RemoteWorkerClient-shaped: .groups + .execute);
+        # super-batches for wire groups they advertise shard across them
+        self._remote_workers: list = []
         self._closed = False
         self._pool: Optional[ThreadPoolExecutor] = (
             ThreadPoolExecutor(max_workers=self.workers,
                                thread_name_prefix="oracle-worker")
             if self.workers > 1 else None
         )
-        # observability (read via stats(); written only by the dispatcher)
+        self._retired_pools: list[ThreadPoolExecutor] = []
+        # observability (read via stats(); written by the dispatcher, except
+        # remote_shards/remote_failures — worker-pool threads update those
+        # under _stats_lock)
+        self._stats_lock = threading.Lock()
         self.windows = 0
         self.segments = 0
         self.backend_calls = 0
         self.rows_requested = 0
         self.rows_labelled = 0
+        self.remote_shards = 0
+        self.remote_failures = 0
         self._dispatcher = threading.Thread(
             target=self._run, name="oracle-service", daemon=True
         )
@@ -211,14 +254,81 @@ class OracleService:
             self._cv.notify_all()
         return seg.future
 
+    # ---- transport integration (repro.serve.transport) ---------------------
+
+    def client_connected(self) -> int:
+        """Register one announced transport connection for window assembly;
+        returns its client id.  Windows wait (up to the deadline) for every
+        registered transport client that is not yet present, exactly like
+        attached in-process oracles.  The transport server calls this only
+        for connections that declared themselves query clients (HELLO or a
+        first EXEC), never for control-plane or silent connections."""
+        with self._cv:
+            self._client_seq += 1
+            cid = self._client_seq
+            self._remote_clients.add(cid)
+            return cid
+
+    def client_disconnected(self, client_id: int) -> None:
+        """Forget a transport connection so windows stop waiting for it."""
+        with self._cv:
+            self._remote_clients.discard(client_id)
+            self._cv.notify_all()
+
+    def submit_raw(self, name: str, fn: Callable, idx: np.ndarray,
+                   client_id: Optional[int] = None) -> Future:
+        """Enqueue pre-planned label work: ``idx`` rows to execute through
+        ``fn`` under wire group ``name``.  The returned future resolves to
+        the (n,) float64 label array.  Used by the transport server — the
+        remote client already planned (dedup + budget) against its own
+        oracle, so these segments skip planning and commit and still get
+        window coalescing, super-batch fusion, and worker sharding."""
+        idx = np.asarray(idx)
+        seg = _Segment(
+            batch=None, oracle=None, requests=[], future=Future(),
+            rows=int(len(idx)), raw=True, key=("wire", str(name)), fn=fn,
+            idx=idx, client_id=client_id,
+        )
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("OracleService is closed")
+            self._queue.append(seg)
+            self._cv.notify_all()
+        return seg.future
+
+    def register_remote_worker(self, worker) -> None:
+        """Add a worker host to the execution pool.  ``worker`` needs
+        ``.groups`` (wire group names it serves) and
+        ``.execute(name, idx) -> labels`` (see
+        :class:`repro.serve.transport.RemoteWorkerClient`).  Super-batches
+        for those groups then shard across hosts as well as local threads;
+        a worker failure mid-batch falls back to local execution for its
+        shard."""
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("OracleService is closed")
+            self._remote_workers.append(worker)
+            # remote round trips block a thread each: size the pool so every
+            # worker host can run concurrently with the local shards.  The
+            # old pool is retired, not shut down — the dispatcher may hold a
+            # reference mid-window, and submitting to a shut-down pool would
+            # fail that window's flushes; retired pools are drained at close()
+            pool_size = self.workers + len(self._remote_workers)
+            if self._pool is not None:
+                self._retired_pools.append(self._pool)
+            self._pool = ThreadPoolExecutor(
+                max_workers=pool_size, thread_name_prefix="oracle-worker"
+            )
+
     def close(self) -> None:
         """Drain the queue, stop the dispatcher, shut the worker pool."""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
         self._dispatcher.join()
-        if self._pool is not None:
-            self._pool.shutdown(wait=True)
+        for pool in [self._pool] + self._retired_pools:
+            if pool is not None:
+                pool.shutdown(wait=True)
 
     def __enter__(self) -> "OracleService":
         return self
@@ -233,6 +343,8 @@ class OracleService:
             "backend_calls": self.backend_calls,
             "rows_requested": self.rows_requested,
             "rows_labelled": self.rows_labelled,
+            "remote_shards": self.remote_shards,
+            "remote_failures": self.remote_failures,
             "segments_per_window": round(
                 self.segments / max(self.windows, 1), 2
             ),
@@ -256,10 +368,17 @@ class OracleService:
                         window.append(seg)
                         rows += seg.rows
                         continue
-                    present = {id(s.oracle) for s in window}
+                    present = {id(s.oracle) for s in window if not s.raw}
                     waiting = any(
                         id(o) not in present for o in self._clients
                     )
+                    if not waiting and self._remote_clients:
+                        remote_present = {
+                            s.client_id for s in window
+                            if s.client_id is not None
+                        }
+                        waiting = any(c not in remote_present
+                                      for c in self._remote_clients)
                     remain = deadline - time.monotonic()
                     if self._closed or remain <= 0 or not waiting:
                         break                    # nobody left to wait for
@@ -270,6 +389,14 @@ class OracleService:
                 for seg in window:
                     if not seg.future.done():
                         seg.fail(e)
+            # pools retired by register_remote_worker are quiescent once the
+            # window completes (this thread is their only submitter and
+            # _execute awaits every shard), so their threads are reaped here
+            # instead of leaking until close()
+            with self._lock:
+                retired, self._retired_pools = self._retired_pools, []
+            for pool in retired:
+                pool.shutdown(wait=True)
 
     # ---- window processing -------------------------------------------------
 
@@ -279,9 +406,9 @@ class OracleService:
         plans = self._plan(window)
         groups: dict = {}
         for plan in plans:
-            groups.setdefault(plan.seg.oracle.service_group(), []).append(plan)
-        for group in groups.values():
-            self._execute_group(group)
+            groups.setdefault(plan.seg.group_key(), []).append(plan)
+        for key, group in groups.items():
+            self._execute_group(key, group)
         for plan in plans:                       # commit in arrival order
             if plan.seg.future.done():           # its group failed
                 continue
@@ -296,6 +423,14 @@ class OracleService:
         plans: list[_Plan] = []
         planned: dict[int, list[np.ndarray]] = {}   # id(oracle) -> key arrays
         for seg in window:
+            if seg.raw:
+                # pre-planned by the remote client against its own cache and
+                # ledger: nothing to dedup or budget-check here
+                plans.append(_Plan(
+                    seg=seg, keys_list=[], n_requested=seg.rows,
+                    new_keys=np.empty(0, np.int64), new_idx=seg.idx,
+                ))
+                continue
             o = seg.oracle
             try:
                 prior = planned.get(id(o))
@@ -313,18 +448,19 @@ class OracleService:
                 seg.fail(e)
         return plans
 
-    def _execute_group(self, group: list[_Plan]) -> None:
+    def _execute_group(self, key, group: list[_Plan]) -> None:
         """Concatenate a group's new rows into one super-batch, shard it over
-        the worker pool, and scatter labels back per plan.  A backend error
-        fails every segment of this group and only this group."""
+        the worker pool (and worker hosts serving this group), and scatter
+        labels back per plan.  A backend error fails every segment of this
+        group and only this group."""
         lens = [len(p.new_idx) for p in group]
         total = sum(lens)
         if total == 0:
             return
         idx = np.concatenate([p.new_idx for p in group if len(p.new_idx)])
-        fn = group[0].seg.oracle._label     # same group => same pure backend
+        fn = group[0].seg.label_fn()        # same group => same pure backend
         try:
-            vals = self._execute(fn, idx)
+            vals = self._execute(fn, idx, key)
             if vals.shape != (total,):
                 raise RuntimeError(
                     f"backend returned shape {vals.shape} for {total} rows"
@@ -339,28 +475,72 @@ class OracleService:
             p.vals = vals[off:off + n]
             off += n
 
-    def _execute(self, fn: Callable, idx: np.ndarray) -> np.ndarray:
-        n_shards = min(self.workers, len(idx) // self.min_shard)
+    def _eligible_workers(self, key) -> list:
+        """Worker hosts that can execute this group.  Only wire groups are
+        routable across hosts — a worker host can't run an arbitrary
+        in-process ``_label`` closure, it advertises named scorers."""
+        if not (isinstance(key, tuple) and len(key) == 2 and key[0] == "wire"):
+            return []
+        return [w for w in self._remote_workers if key[1] in w.groups]
+
+    def _execute(self, fn: Callable, idx: np.ndarray, key=None) -> np.ndarray:
+        """Shard a super-batch across the local thread pool and any worker
+        hosts serving the group; shard order is preserved, so results are
+        bit-identical regardless of where each shard ran."""
+        remotes = self._eligible_workers(key)
+        n_shards = min(self.workers + len(remotes),
+                       len(idx) // self.min_shard)
         if self._pool is None or n_shards < 2:
             self.backend_calls += 1
             return np.asarray(fn(idx), np.float64)
         shards = np.array_split(idx, n_shards)
         self.backend_calls += n_shards
-        futs = [self._pool.submit(fn, s) for s in shards]
+        n_remote = min(len(remotes), n_shards - 1)  # keep >=1 shard local
+        futs = [
+            self._pool.submit(self._execute_remote, w, key[1], fn, s)
+            for w, s in zip(remotes, shards[:n_remote])
+        ]
+        futs += [self._pool.submit(fn, s) for s in shards[n_remote:]]
         return np.concatenate(
             [np.asarray(f.result(), np.float64) for f in futs]
         )
+
+    def _execute_remote(self, worker, name: str, fn: Callable,
+                        shard: np.ndarray) -> np.ndarray:
+        """One shard on one worker host; falls back to local execution when
+        the host fails mid-batch (labelling is pure, so re-execution is
+        always safe) — a dead worker degrades throughput, never a query."""
+        try:
+            vals = np.asarray(worker.execute(name, shard), np.float64)
+            if vals.shape != (len(shard),):
+                raise RuntimeError(
+                    f"worker returned shape {vals.shape} for "
+                    f"{len(shard)} rows"
+                )
+            with self._stats_lock:
+                self.remote_shards += 1
+            return vals
+        except BaseException:  # noqa: BLE001 — degrade to local execution
+            with self._stats_lock:
+                self.remote_failures += 1
+            return np.asarray(fn(shard), np.float64)
 
     def _commit(self, plan: _Plan) -> None:
         """Atomic ledger charge + cache merge + per-client result routing via
         the shared :func:`repro.core.oracle.commit_requests`.  Runs only
         after the group's backend execution succeeded, so a failure anywhere
-        earlier leaves this client's oracle untouched."""
+        earlier leaves this client's oracle untouched.  Raw segments have no
+        local oracle to commit to — their future resolves to the labels and
+        the remote client commits on its own side."""
+        self.rows_requested += plan.n_requested
+        if plan.seg.raw:
+            vals = plan.vals if plan.vals is not None else np.empty(0)
+            plan.seg.future.set_result(np.asarray(vals, np.float64))
+            return
         commit_requests(
             plan.seg.oracle, plan.seg.requests, plan.keys_list,
             plan.n_requested, plan.new_keys, plan.vals,
         )
-        self.rows_requested += plan.n_requested
         plan.seg.future.set_result(None)
 
 

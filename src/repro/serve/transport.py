@@ -1,0 +1,553 @@
+"""Multi-host oracle dispatch: a TCP transport in front of the oracle service.
+
+This module is the network layer the ROADMAP's "Serving architecture" section
+left open after PR 3: :class:`~repro.serve.oracle_service.OracleService`
+already window-batches flushes across any number of in-process queries; here
+the same window/plan/commit machinery is exposed over TCP so one serving
+fleet feeds many *client processes*, and a server can additionally shard its
+super-batches over *remote worker hosts* (each running its own — possibly
+mesh-sharded — scorer).  Everything is stdlib ``socket``/``socketserver``;
+no new dependencies.  docs/serving.md carries the full protocol spec and
+deployment topology.
+
+Wire protocol (v1)
+------------------
+Every message is one length-prefixed binary frame::
+
+    +----------------+----------+---------------------------+
+    | length: u32 BE | type: u8 | payload (length - 1 bytes)|
+    +----------------+----------+---------------------------+
+
+Message types:
+
+====  ==========  =======================================================
+code  name        payload
+====  ==========  =======================================================
+0x01  EXEC        :class:`repro.core.oracle.LabelRequest` bytes
+0x02  RESULT      :class:`repro.core.oracle.LabelResult` bytes (labels)
+0x03  ERROR       :class:`LabelResult` bytes (``error`` set, no rows)
+0x04  PING        empty
+0x05  PONG        empty
+0x06  GROUPS      empty (request the server's registered group names)
+0x07  GROUPS_OK   ``\\n``-joined utf-8 group names
+0x08  HELLO       empty (one-way: announce a query client; no reply)
+====  ==========  =======================================================
+
+HELLO is how window assembly knows who to wait for: a query client
+(:class:`RemoteOracle`) announces itself on every (re)connect and the
+server's service then counts the connection toward window close, exactly
+like an attached in-process oracle.  Un-announced connections — monitors,
+registration handshakes, or sockets that never send a frame — are never
+waited for (a connection's first EXEC also counts as an announcement).
+
+A client keeps one connection and at most one in-flight EXEC (the batch
+flush protocol is submit-then-await, so this is the natural discipline); the
+server answers every EXEC with exactly one RESULT or ERROR on the same
+connection.  There is no request pipelining in v1 — ``request_id`` exists so
+a future pipelined revision stays wire-compatible.
+
+Semantics and failure model
+---------------------------
+* **Planning and commit never leave the client.**  A :class:`RemoteOracle`
+  is an ordinary :class:`~repro.core.oracle.Oracle` whose ``_label`` executes
+  on the server, so ``OracleBatch.flush_async()`` gives a remote query
+  exactly the local-flush semantics for free: dedup against its *own* cache,
+  atomic budget charge on its *own* ledger, retryable atomic failure.  The
+  server is a pure labelling fleet — it holds scorers, not ledgers.
+* **Reconnect + retry.**  Labelling is pure, and the ledger is charged only
+  after a successful round trip, so re-sending an EXEC after a transport
+  drop is always safe (no double charge, bit-identical labels).
+  :class:`ServiceConnection` retries transport failures (connection refused /
+  reset / truncated frame) with backoff; application ERRORs raise
+  :class:`RemoteExecutionError` immediately — they are the server telling the
+  client something retries won't fix (e.g. an unregistered group).
+* **Per-client isolation.**  Each connection gets its own handler thread and
+  its own segments in the service queue; one client's failure or disconnect
+  completes only that client's futures.
+* **Remote workers.**  A worker host runs the same :class:`OracleServiceServer`
+  (a server with no downstream is a worker); the front server registers it via
+  :meth:`OracleServiceServer.register_worker`, and the service then shards
+  each super-batch across local worker threads *and* worker hosts, falling
+  back to local execution for any shard whose worker host fails mid-batch.
+"""
+from __future__ import annotations
+
+import socket
+import socketserver
+import struct
+import threading
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.oracle import LabelRequest, LabelResult, ModelOracle, Oracle
+
+MSG_EXEC = 0x01
+MSG_RESULT = 0x02
+MSG_ERROR = 0x03
+MSG_PING = 0x04
+MSG_PONG = 0x05
+MSG_GROUPS = 0x06
+MSG_GROUPS_OK = 0x07
+MSG_HELLO = 0x08
+
+_LEN = struct.Struct("!I")
+# One EXEC of n pairs is ~16n bytes; 256 MiB of frame is ~16M rows — far
+# beyond any sane super-batch, so anything larger is a corrupt length prefix.
+MAX_FRAME = 1 << 28
+
+
+class TransportError(ConnectionError):
+    """A transport-level failure (drop, truncation, corrupt frame) — the
+    retryable class of failure."""
+
+
+class RemoteExecutionError(RuntimeError):
+    """The server executed the request and reports an application error
+    (unknown group, backend failure).  Not retried by the transport: the
+    flush fails atomically client-side and the *flush* can be retried once
+    the cause is fixed, exactly like a local backend error."""
+
+
+def send_frame(sock: socket.socket, mtype: int, payload: bytes = b"") -> None:
+    sock.sendall(_LEN.pack(1 + len(payload)) + bytes([mtype]) + payload)
+
+
+def recv_frame(sock: socket.socket) -> tuple[int, bytes]:
+    """Read one frame; raises :class:`TransportError` on EOF/truncation."""
+    hdr = _recv_exact(sock, _LEN.size)
+    (length,) = _LEN.unpack(hdr)
+    if not 1 <= length <= MAX_FRAME:
+        raise TransportError(f"corrupt frame length {length}")
+    body = _recv_exact(sock, length)
+    return body[0], body[1:]
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    chunks = []
+    while n:
+        chunk = sock.recv(min(n, 1 << 20))
+        if not chunk:
+            raise TransportError("connection closed mid-frame")
+        chunks.append(chunk)
+        n -= len(chunk)
+    return b"".join(chunks)
+
+
+# ---- client side -----------------------------------------------------------
+
+
+class ServiceConnection:
+    """One client connection with reconnect-and-retry.
+
+    ``execute`` is the workhorse: frame an EXEC, await the matching RESULT,
+    and on any transport failure reconnect (with exponential backoff) and
+    re-send — safe because the server's labelling is pure and commit happens
+    on the caller's side only after success.  Thread-safe via a round-trip
+    lock: concurrent callers (e.g. service worker threads sharding one
+    super-batch over several hosts) serialize on the single connection.
+    """
+
+    def __init__(self, address: tuple[str, int], retries: int = 5,
+                 backoff_s: float = 0.05, timeout_s: float = 120.0,
+                 announce: bool = False):
+        self.address = (str(address[0]), int(address[1]))
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+        self.timeout_s = float(timeout_s)
+        # announce=True sends HELLO on every (re)connect: query clients do,
+        # so the server's windows wait for them from the moment they connect;
+        # control-plane connections (worker registration, monitors) don't
+        self.announce = bool(announce)
+        self.reconnects = 0           # observability: transport drops survived
+        self._sock: Optional[socket.socket] = None
+        self._lock = threading.Lock()
+        self._seq = 0
+
+    # -- lifecycle --
+
+    def connect(self) -> bool:
+        """Open the connection now instead of at the first round trip, so the
+        server counts this client toward window assembly immediately (a
+        late-connecting client fragments the windows its peers are already
+        filling).  Returns False if the server is not reachable yet — the
+        next round trip will retry."""
+        try:
+            with self._lock:
+                self._ensure()
+            return True
+        except OSError:
+            return False
+
+    def _ensure(self) -> socket.socket:
+        if self._sock is None:
+            sock = socket.create_connection(self.address,
+                                            timeout=self.timeout_s)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            if self.announce:
+                send_frame(sock, MSG_HELLO)     # one-way, no reply expected
+            self._sock = sock
+        return self._sock
+
+    def _drop(self) -> None:
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+            self._sock = None
+
+    def close(self) -> None:
+        with self._lock:
+            self._drop()
+
+    def __enter__(self) -> "ServiceConnection":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- round trips --
+
+    def _roundtrip(self, mtype: int, payload: bytes) -> tuple[int, bytes]:
+        """Send one frame and read the reply, reconnecting and re-sending on
+        transport failures.  The first attempt may ride a connection that
+        died while idle (server restart between flushes) — that costs one
+        retry, not a failed flush."""
+        last: Exception = TransportError("no attempt made")
+        for attempt in range(self.retries + 1):
+            try:
+                with self._lock:
+                    fresh = self._sock is None
+                    sock = self._ensure()
+                    if fresh and attempt:
+                        self.reconnects += 1
+                    try:
+                        send_frame(sock, mtype, payload)
+                        return recv_frame(sock)
+                    except (TransportError, OSError):
+                        self._drop()
+                        raise
+            except (TransportError, OSError) as e:
+                last = e
+                if attempt < self.retries:
+                    time.sleep(self.backoff_s * (2 ** attempt))
+        raise TransportError(
+            f"{self.address[0]}:{self.address[1]} unreachable after "
+            f"{self.retries + 1} attempts: {last}"
+        ) from last
+
+    def execute(self, group: str, idx: np.ndarray) -> np.ndarray:
+        """Label ``idx`` through the server-side ``group``; returns (n,)
+        float64 labels.  Raises :class:`RemoteExecutionError` on application
+        errors, :class:`TransportError` when the server stays unreachable."""
+        idx = np.asarray(idx)
+        if idx.ndim == 1:
+            idx = idx[:, None]
+        self._seq += 1
+        req = LabelRequest(group=group, idx=idx, request_id=self._seq)
+        mtype, payload = self._roundtrip(MSG_EXEC, req.to_bytes())
+        if mtype not in (MSG_RESULT, MSG_ERROR):
+            raise TransportError(f"unexpected reply type 0x{mtype:02x}")
+        res = LabelResult.from_bytes(payload)
+        # error replies surface before the id check: the server may not have
+        # decoded our request far enough to know its id (one in-flight EXEC
+        # per connection makes the attribution unambiguous anyway)
+        if not res.ok:
+            raise RemoteExecutionError(res.error)
+        if res.request_id != req.request_id:
+            raise TransportError(
+                f"reply id {res.request_id} != request id {req.request_id}"
+            )
+        if len(res.labels) != len(idx):
+            raise TransportError(
+                f"reply carries {len(res.labels)} labels for {len(idx)} rows"
+            )
+        return res.labels
+
+    def groups(self) -> tuple[str, ...]:
+        """The server's registered group names (the worker handshake)."""
+        mtype, payload = self._roundtrip(MSG_GROUPS, b"")
+        if mtype != MSG_GROUPS_OK:
+            raise TransportError(f"unexpected reply type 0x{mtype:02x}")
+        text = payload.decode("utf-8")
+        return tuple(g for g in text.split("\n") if g)
+
+    def ping(self) -> bool:
+        try:
+            mtype, _ = self._roundtrip(MSG_PING, b"")
+            return mtype == MSG_PONG
+        except TransportError:
+            return False
+
+
+class RemoteOracle(Oracle):
+    """An Oracle whose ``_label`` executes on a remote
+    :class:`OracleServiceServer` — the client half of multi-host dispatch.
+
+    Because this is an ordinary :class:`~repro.core.oracle.Oracle`, the whole
+    batching stack composes unchanged: ``OracleBatch`` plans/commits against
+    the local cache and ledger, ``flush_async()`` keeps the submit-then-await
+    protocol, and attaching a *local* ``OracleService`` on the client side
+    additionally overlaps the network round trip with the query's cheap work
+    and coalesces multiple local queries before they ever hit the wire
+    (RemoteOracles sharing a server address + group share a service group).
+    """
+
+    def __init__(self, address: tuple[str, int], group: str = "default",
+                 retries: int = 5, backoff_s: float = 0.05,
+                 timeout_s: float = 120.0):
+        super().__init__()
+        self.group = str(group)
+        self.conn = ServiceConnection(address, retries=retries,
+                                      backoff_s=backoff_s,
+                                      timeout_s=timeout_s, announce=True)
+        self.conn.connect()     # best-effort: count toward windows early
+
+    def _label(self, idx: np.ndarray) -> np.ndarray:
+        return self.conn.execute(self.group, idx)
+
+    def service_group(self):
+        return ("remote", self.conn.address, self.group)
+
+    def close(self) -> None:
+        """Drop the connection (the server sees a disconnect and stops
+        counting this client toward window assembly)."""
+        self.conn.close()
+
+    def __enter__(self) -> "RemoteOracle":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class RemoteWorkerClient:
+    """The front server's handle on one worker host: a
+    :class:`ServiceConnection` plus the group names the worker advertised at
+    registration.  ``OracleService._execute`` routes super-batch shards here.
+    """
+
+    def __init__(self, address: tuple[str, int], retries: int = 2,
+                 backoff_s: float = 0.05, timeout_s: float = 120.0):
+        self.conn = ServiceConnection(address, retries=retries,
+                                      backoff_s=backoff_s,
+                                      timeout_s=timeout_s)
+        self.groups: frozenset = frozenset(self.conn.groups())
+
+    @property
+    def address(self) -> tuple[str, int]:
+        return self.conn.address
+
+    def execute(self, group: str, idx: np.ndarray) -> np.ndarray:
+        return self.conn.execute(group, idx)
+
+    def close(self) -> None:
+        self.conn.close()
+
+
+# ---- server side -----------------------------------------------------------
+
+
+class _Server(socketserver.ThreadingTCPServer):
+    allow_reuse_address = True      # restart-in-place (tests, rolling deploys)
+    daemon_threads = True
+    owner: "OracleServiceServer"
+
+
+class _Handler(socketserver.BaseRequestHandler):
+    """One connected client: count it toward window assembly, answer frames
+    until EOF.  One thread per connection (ThreadingTCPServer), so blocking
+    on the service future is the per-client await, not a server stall."""
+
+    def handle(self) -> None:
+        owner = self.server.owner
+        self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        owner._track(self.request, add=True)
+        # window assembly waits only for ANNOUNCED connections: a query
+        # client HELLOs at connect (and its first EXEC counts as an implicit
+        # announcement), while control-plane traffic — PING health checks,
+        # the GROUPS handshake of a front registering this host as a worker,
+        # or a socket that never sends a frame at all — is never waited for.
+        # An announced client that then only sends control frames is demoted
+        # again, so a stray HELLO can't make every window run to the deadline.
+        client_id = None
+        counted, seen_exec = False, False
+        try:
+            while True:
+                try:
+                    mtype, payload = recv_frame(self.request)
+                except (TransportError, OSError):
+                    return                      # client went away
+                if mtype == MSG_HELLO:
+                    if not counted:
+                        client_id = owner.service.client_connected()
+                        counted = True
+                    continue
+                if mtype == MSG_EXEC:
+                    if not counted:
+                        client_id = owner.service.client_connected()
+                        counted = True
+                    seen_exec = True
+                    self._exec(owner, client_id, payload)
+                    continue
+                if not seen_exec and counted:   # control-plane connection
+                    owner.service.client_disconnected(client_id)
+                    counted = False
+                if mtype == MSG_PING:
+                    send_frame(self.request, MSG_PONG)
+                elif mtype == MSG_GROUPS:
+                    names = "\n".join(sorted(owner.groups))
+                    send_frame(self.request, MSG_GROUPS_OK,
+                               names.encode("utf-8"))
+                else:
+                    res = LabelResult(error=f"ProtocolError: unknown message "
+                                            f"type 0x{mtype:02x}")
+                    send_frame(self.request, MSG_ERROR, res.to_bytes())
+        finally:
+            if counted:
+                owner.service.client_disconnected(client_id)
+            owner._track(self.request, add=False)
+
+    def _exec(self, owner: "OracleServiceServer", client_id: int,
+              payload: bytes) -> None:
+        try:
+            req = LabelRequest.from_bytes(payload)
+        except Exception as e:
+            # a deterministic protocol error (version skew, corrupt segment)
+            # must be an ERROR reply, not a dropped connection the client
+            # would misread as "server unreachable" and retry-loop against
+            res = LabelResult(error=f"ProtocolError: undecodable EXEC "
+                                    f"payload ({type(e).__name__}: {e})")
+            send_frame(self.request, MSG_ERROR, res.to_bytes())
+            return
+        fn = owner.groups.get(req.group)
+        if fn is None:
+            res = LabelResult(request_id=req.request_id,
+                              error=f"RemoteExecutionError: unknown group "
+                                    f"{req.group!r} (registered: "
+                                    f"{sorted(owner.groups)})")
+            send_frame(self.request, MSG_ERROR, res.to_bytes())
+            return
+        try:
+            fut = owner.service.submit_raw(req.group, fn, req.idx,
+                                           client_id=client_id)
+            labels = fut.result()
+            mtype, res = MSG_RESULT, LabelResult(request_id=req.request_id,
+                                                 labels=labels)
+        except BaseException as e:  # noqa: BLE001 — isolate per client
+            # ANY execution failure — including a backend raising OSError —
+            # is an application error the client must see as ERROR (no
+            # transport retry); only a failing send below drops the client
+            mtype, res = MSG_ERROR, LabelResult(
+                request_id=req.request_id, error=f"{type(e).__name__}: {e}"
+            )
+        send_frame(self.request, mtype, res.to_bytes())
+
+
+class OracleServiceServer:
+    """TCP front-end over an :class:`~repro.serve.oracle_service.OracleService`.
+
+    ``groups`` maps wire group names to vectorised label functions
+    ``fn(idx: (n, k) int array) -> (n,) float labels`` — e.g. a thresholded
+    :class:`~repro.serve.serve_loop.PairScorer` (see :func:`scorer_group`).
+    Segments arriving on different connections coalesce into the service's
+    windows exactly like in-process flushes, fuse into per-group super-batches,
+    and shard over the service's worker threads and any registered worker
+    hosts.
+
+    A server with no registered downstream workers *is* a worker host: run the
+    same class on each host and point the front server at the others via
+    :meth:`register_worker`.
+    """
+
+    def __init__(self, groups: dict[str, Callable], host: str = "127.0.0.1",
+                 port: int = 0, service=None, **service_kwargs):
+        from repro.serve.oracle_service import OracleService
+
+        self.groups = dict(groups)
+        self.service = service if service is not None else OracleService(
+            **service_kwargs
+        )
+        self._owns_service = service is None
+        self._workers: list[RemoteWorkerClient] = []
+        self._conns: set = set()
+        self._conns_lock = threading.Lock()
+        self._tcp = _Server((host, int(port)), _Handler)
+        self._tcp.owner = self
+        self._thread = threading.Thread(
+            target=self._tcp.serve_forever, name="oracle-server", daemon=True
+        )
+        self._thread.start()
+
+    @property
+    def address(self) -> tuple[str, int]:
+        """The bound (host, port) — resolves ``port=0`` to the real port."""
+        return self._tcp.server_address[:2]
+
+    def register_worker(self, address: tuple[str, int]) -> RemoteWorkerClient:
+        """Connect a worker host and hand it to the service: super-batches
+        for any group the worker advertises now shard across hosts."""
+        worker = RemoteWorkerClient(address)
+        self._workers.append(worker)
+        self.service.register_remote_worker(worker)
+        return worker
+
+    def _track(self, sock: socket.socket, add: bool) -> None:
+        with self._conns_lock:
+            (self._conns.add if add else self._conns.discard)(sock)
+
+    def close(self) -> None:
+        """Stop accepting, drop live connections (clients observe a transport
+        drop and reconnect-retry elsewhere — or to a restarted server on the
+        same port), close worker handles, and shut the service if owned."""
+        self._tcp.shutdown()
+        self._tcp.server_close()
+        self._thread.join()
+        with self._conns_lock:
+            conns = list(self._conns)
+        for sock in conns:
+            try:
+                sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
+            try:
+                sock.close()
+            except OSError:
+                pass
+        for w in self._workers:
+            w.close()
+        if self._owns_service:
+            self.service.close()
+
+    def __enter__(self) -> "OracleServiceServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def scorer_group(scorer, threshold: float = 0.5) -> Callable:
+    """Adapt a pair scorer (``PairScorer`` instance or any vectorised
+    probability callable) into a wire group's label function.  Literally
+    :class:`~repro.core.oracle.ModelOracle`'s own ``_label`` (the throwaway
+    oracle's cache/ledger are never touched), so remote and in-process
+    execution are bit-identical by construction."""
+    return ModelOracle(scorer, threshold=threshold)._label
+
+
+def parse_address(spec: str, default_port: int = 7431) -> tuple[str, int]:
+    """``"host[:port]"`` -> (host, port) for CLI flags."""
+    host, _, port = spec.partition(":")
+    return (host or "127.0.0.1", int(port) if port else default_port)
+
+
+__all__ = [
+    "MSG_EXEC", "MSG_RESULT", "MSG_ERROR", "MSG_PING", "MSG_PONG",
+    "MSG_GROUPS", "MSG_GROUPS_OK", "MSG_HELLO",
+    "TransportError", "RemoteExecutionError",
+    "send_frame", "recv_frame",
+    "ServiceConnection", "RemoteOracle", "RemoteWorkerClient",
+    "OracleServiceServer", "scorer_group", "parse_address",
+]

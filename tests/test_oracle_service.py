@@ -1,10 +1,12 @@
-"""OracleService: cross-query coalescing semantics.
+"""OracleService: cross-query coalescing semantics, in-process and over TCP.
 
 The contract under test: routing any number of concurrent queries through one
 service changes *where* labelling executes (shared micro-batched windows on a
-worker pool) but nothing about *what* each query computes — estimates are
+worker pool — possibly behind a network transport, possibly sharded across
+worker hosts) but nothing about *what* each query computes — estimates are
 bit-identical to serial execution, ledgers stay per-query, and one query's
-budget exhaustion or backend failure never touches another query's batch.
+budget exhaustion, backend failure, or transport drop never touches another
+query's batch.
 """
 import threading
 
@@ -12,9 +14,14 @@ import numpy as np
 import pytest
 
 from repro.core import Agg, FnOracle, ModelOracle, OracleBatch, Query, run_bas
-from repro.core.oracle import BudgetExceeded
+from repro.core.oracle import BudgetExceeded, LabelRequest, LabelResult
 from repro.data import make_clustered_tables
 from repro.serve.oracle_service import OracleService, serve_queries
+from repro.serve.transport import (
+    OracleServiceServer,
+    RemoteExecutionError,
+    RemoteOracle,
+)
 
 
 def _mk_query(seed, budget=1500, n=100):
@@ -286,3 +293,273 @@ def test_submit_after_close_raises_and_restores_pending():
     o.service = None
     batch.flush()
     assert o.calls == 1
+
+
+# ----------------------------------------------------------------------------
+# multi-host dispatch: the TCP transport (repro.serve.transport)
+# ----------------------------------------------------------------------------
+
+def _parity_fn(idx):
+    return (idx.sum(axis=1) % 2).astype(np.float64)
+
+
+def test_wire_payload_roundtrip():
+    """LabelRequest/LabelResult survive encode->decode exactly, including
+    empty segments and error results (the transport's unit contract)."""
+    req = LabelRequest("pairs", np.array([[1, 2], [3, 4], [5, 6]]),
+                       request_id=42)
+    got = LabelRequest.from_bytes(req.to_bytes())
+    assert got.group == "pairs" and got.request_id == 42
+    assert got.idx.dtype == np.int64
+    np.testing.assert_array_equal(got.idx, req.idx)
+
+    empty = LabelRequest.from_bytes(
+        LabelRequest("g", np.empty((0, 3), np.int64)).to_bytes()
+    )
+    assert empty.idx.shape == (0, 3)
+
+    res = LabelResult.from_bytes(
+        LabelResult(request_id=42, labels=np.array([1.0, 0.0, 1.0])).to_bytes()
+    )
+    assert res.ok and res.request_id == 42
+    np.testing.assert_array_equal(res.labels, [1.0, 0.0, 1.0])
+
+    err = LabelResult.from_bytes(
+        LabelResult(request_id=7, error="RuntimeError: boom").to_bytes()
+    )
+    assert not err.ok and err.error == "RuntimeError: boom"
+
+
+def test_remote_execution_bit_identical_to_in_process():
+    """A BAS query labelling through a loopback TCP server must produce
+    exactly the estimate, CI, and ledger counts of the same query labelling
+    in-process — the transport changes where labels execute, nothing else."""
+    ds = make_clustered_tables(80, 80, n_entities=120, noise=0.4, seed=11)
+    local = ds.oracle()
+    q_local = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=local, budget=1200)
+    ref = run_bas(q_local, seed=11)
+
+    with OracleServiceServer({"truth": local._label},
+                             max_wait_ms=5.0) as server:
+        with RemoteOracle(server.address, "truth") as remote:
+            q_remote = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=remote,
+                             budget=1200)
+            got = run_bas(q_remote, seed=11)
+            assert got.estimate == ref.estimate
+            assert got.ci.lo == ref.ci.lo and got.ci.hi == ref.ci.hi
+            assert remote.calls == local.calls
+            assert remote.requests == local.requests
+        stats = server.service.stats()
+    assert stats["rows_labelled"] == local.calls     # server executed it all
+
+
+def test_remote_flushes_coalesce_across_connections():
+    """EXEC segments arriving on different client connections land in shared
+    service windows, exactly like attached in-process oracles."""
+    with OracleServiceServer({"parity": _parity_fn},
+                             max_wait_ms=500.0) as server:
+        a = RemoteOracle(server.address, "parity")
+        b = RemoteOracle(server.address, "parity")
+        for o in (a, b):
+            o.bind_sizes((64, 64))
+        ba, bb = OracleBatch(a), OracleBatch(b)
+        ha = ba.submit(np.array([[0, 1], [2, 3]]))
+        hb = bb.submit(np.array([[4, 5], [6, 7], [8, 9]]))
+        out = _flush_concurrently([ba, bb])
+        assert out == [None, None]
+        np.testing.assert_array_equal(ha.labels, [1, 1])
+        np.testing.assert_array_equal(hb.labels, [1, 1, 1])
+        stats = server.service.stats()
+        a.close()
+        b.close()
+    assert stats["windows"] == 1 and stats["segments"] == 2
+
+
+def test_server_restart_mid_query_reconnects_without_double_charge():
+    """The acceptance scenario: the server dies and is replaced between two
+    flushes of one query.  The client's next flush rides the dead connection,
+    observes the drop, reconnects, retries — and because the ledger is
+    charged client-side only after a successful round trip, the charge is
+    exact (no double charge, dedup intact across the restart)."""
+    server = OracleServiceServer({"parity": _parity_fn}, max_wait_ms=2.0)
+    host, port = server.address
+    o = RemoteOracle((host, port), "parity", backoff_s=0.01)
+    o.bind_sizes((64, 64))
+    o.set_budget(5)
+    batch = OracleBatch(o)
+    h1 = batch.submit(np.array([[1, 2], [3, 4]]))
+    batch.flush()
+    np.testing.assert_array_equal(h1.labels, [1, 1])
+    assert (o.calls, o.requests) == (2, 2)
+
+    server.close()                                   # the fleet host dies...
+    server = OracleServiceServer({"parity": _parity_fn}, host=host,
+                                 port=port, max_wait_ms=2.0)  # ...and returns
+    try:
+        # one duplicate of flush 1 (served from the local cache, never sent)
+        # and two new tuples (sent after reconnect)
+        h2 = batch.submit(np.array([[3, 4], [5, 6], [7, 8]]))
+        batch.flush()
+        np.testing.assert_array_equal(h2.labels, [1, 1, 1])
+        assert o.conn.reconnects >= 1                # the drop was observed
+        assert (o.calls, o.requests) == (4, 5)       # exact charge, no double
+        assert o.remaining == 1
+    finally:
+        o.close()
+        server.close()
+
+
+def test_remote_transport_failure_is_atomic_and_retryable():
+    """With no server listening at all, the flush fails with a transport
+    error, the batch keeps its pending set, and the oracle is untouched —
+    bringing the server up makes the SAME batch succeed."""
+    o = RemoteOracle(("127.0.0.1", 1), "parity", retries=1, backoff_s=0.01)
+    o.bind_sizes((64, 64))
+    batch = OracleBatch(o)
+    h = batch.submit(np.array([[1, 2], [3, 4]]))
+    with pytest.raises(ConnectionError):
+        batch.flush()
+    assert len(batch._pending) == 1                  # atomic failure
+    assert o.calls == 0 and o.requests == 0
+
+    with OracleServiceServer({"parity": _parity_fn},
+                             max_wait_ms=2.0) as server:
+        o.conn.address = server.address              # point at the live server
+        batch.flush()                                # same batch, now succeeds
+        np.testing.assert_array_equal(h.labels, [1, 1])
+        assert o.calls == 2
+        o.close()
+
+
+def test_undecodable_exec_payload_gets_error_reply_not_a_drop():
+    """A corrupt EXEC payload is a deterministic protocol error: the server
+    must answer with an ERROR frame (-> RemoteExecutionError on attempt 1),
+    not drop the connection and send the client into a reconnect loop."""
+    import socket
+
+    from repro.serve.transport import MSG_ERROR, MSG_EXEC, recv_frame, send_frame
+
+    with OracleServiceServer({"parity": _parity_fn},
+                             max_wait_ms=2.0) as server:
+        with socket.create_connection(server.address) as sock:
+            send_frame(sock, MSG_EXEC, b"\x01\x02garbage")
+            mtype, payload = recv_frame(sock)
+    assert mtype == MSG_ERROR
+    assert "ProtocolError" in LabelResult.from_bytes(payload).error
+
+
+def test_control_plane_connections_do_not_stall_windows():
+    """Connections that never announce query work — PING/GROUPS control
+    traffic, or a socket that sends no frame at all — must not count toward
+    window assembly: a solo query next to them still dispatches without
+    paying the deadline."""
+    import socket
+    import time
+
+    from repro.serve.transport import ServiceConnection
+
+    with OracleServiceServer({"parity": _parity_fn},
+                             max_wait_ms=5000.0) as server:
+        mon = ServiceConnection(server.address)
+        assert mon.ping()
+        assert mon.groups() == ("parity",)
+        silent = socket.create_connection(server.address)  # never speaks
+        with RemoteOracle(server.address, "parity") as o:
+            o.bind_sizes((64, 64))
+            t0 = time.perf_counter()
+            np.testing.assert_array_equal(
+                o.label(np.array([[1, 2], [3, 4]])), [1, 1]
+            )
+            dt = time.perf_counter() - t0
+        mon.close()
+        silent.close()
+    assert dt < 2.0                                  # far below the deadline
+
+
+def test_remote_unknown_group_raises_application_error():
+    with OracleServiceServer({"parity": _parity_fn},
+                             max_wait_ms=2.0) as server:
+        o = RemoteOracle(server.address, "no-such-group")
+        o.bind_sizes((64, 64))
+        batch = OracleBatch(o)
+        batch.submit(np.array([[1, 2]]))
+        with pytest.raises(RemoteExecutionError, match="unknown group"):
+            batch.flush()
+        assert len(batch._pending) == 1 and o.calls == 0
+        o.close()
+
+
+def test_remote_backend_error_reaches_client_and_is_retryable():
+    state = {"fail": True}
+
+    def flaky(idx):
+        if state["fail"]:
+            raise RuntimeError("transient backend error")
+        return _parity_fn(idx)
+
+    with OracleServiceServer({"flaky": flaky}, max_wait_ms=2.0) as server:
+        o = RemoteOracle(server.address, "flaky")
+        o.bind_sizes((64, 64))
+        batch = OracleBatch(o)
+        h = batch.submit(np.array([[1, 2], [3, 4]]))
+        with pytest.raises(RemoteExecutionError, match="transient"):
+            batch.flush()
+        assert o.calls == 0                          # atomic failure
+        state["fail"] = False
+        batch.flush()                                # retryable
+        np.testing.assert_array_equal(h.labels, [1, 1])
+        assert o.calls == 2
+        o.close()
+
+
+def test_super_batches_shard_across_worker_hosts():
+    """A front server with a registered worker host splits each super-batch
+    across hosts; results are bit-identical to local-only execution."""
+    worker_rows, local_rows = [], []
+    lock = threading.Lock()
+
+    def worker_fn(idx):
+        with lock:
+            worker_rows.append(len(idx))
+        return _parity_fn(idx)
+
+    def local_fn(idx):
+        with lock:
+            local_rows.append(len(idx))
+        return _parity_fn(idx)
+
+    rng = np.random.default_rng(3)
+    idx = np.unique(rng.integers(0, 1000, size=(768, 2)), axis=0)
+    with OracleServiceServer({"parity": worker_fn},
+                             max_wait_ms=1.0) as worker:
+        with OracleServiceServer({"parity": local_fn}, max_wait_ms=1.0,
+                                 workers=1, min_shard=64) as front:
+            front.register_worker(worker.address)
+            with RemoteOracle(front.address, "parity") as o:
+                o.bind_sizes((1000, 1000))
+                got = o.label(idx)
+            stats = front.service.stats()
+    np.testing.assert_array_equal(got, idx.sum(1) % 2)
+    assert sum(worker_rows) > 0 and sum(local_rows) > 0   # both hosts worked
+    assert sum(worker_rows) + sum(local_rows) == len(idx)
+    assert stats["remote_shards"] >= 1
+
+
+def test_dead_worker_host_degrades_to_local_execution():
+    """A worker host that died stays registered; its shards fall back to
+    local execution — a dead worker costs throughput, never a query."""
+    worker = OracleServiceServer({"parity": _parity_fn}, max_wait_ms=1.0)
+    front = OracleServiceServer({"parity": _parity_fn}, max_wait_ms=1.0,
+                                workers=1, min_shard=64)
+    try:
+        front.register_worker(worker.address)
+        worker.close()                               # host dies after joining
+        rng = np.random.default_rng(4)
+        idx = np.unique(rng.integers(0, 1000, size=(512, 2)), axis=0)
+        with RemoteOracle(front.address, "parity") as o:
+            o.bind_sizes((1000, 1000))
+            got = o.label(idx)
+        np.testing.assert_array_equal(got, idx.sum(1) % 2)
+        assert front.service.stats()["remote_failures"] >= 1
+    finally:
+        front.close()
