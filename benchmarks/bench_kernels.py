@@ -2,8 +2,16 @@
 pure-jnp reference, wall time + agreement.  On TPU the same entry points run
 compiled.
 
-Run via ``python -m benchmarks.run --only kernels``.  Reporting only — no CI
-gate (kernel/reference agreement is asserted by ``tests/test_kernels.py``)."""
+The ``kernel_sim_sweep_*`` rows compare the fused single-sweep pass against
+the sequential sim_hist + sim_topk schedule at matched shapes: compiled (TPU)
+runs must clear >= 1.8x (the sweep halves the MXU passes); interpret-mode
+runs only assert agreement and report the measured ratio (the CPU interpreter
+is epilogue-bound, so the dot saving barely shows).
+
+Run via ``python -m benchmarks.run --only kernels``.  CI diffs the ``--json``
+output against ``benchmarks/baselines/BENCH_kernels.json`` warn-only (see
+``scripts/bench_diff.py``); kernel/reference agreement is asserted here and
+in ``tests/test_kernels.py``."""
 from __future__ import annotations
 
 import time
@@ -18,7 +26,7 @@ from .common import row
 
 
 def _time(fn, *args, reps=3):
-    fn(*args)  # warmup/compile
+    jax.block_until_ready(fn(*args))  # warmup/compile, fully retired
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
@@ -26,16 +34,17 @@ def _time(fn, *args, reps=3):
     return (time.perf_counter() - t0) / reps, out
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, smoke: bool = False):
     rows = []
     rng = np.random.default_rng(0)
+    n = 256 if smoke else 512
 
     # sim_hist
     from repro.kernels.sim_hist.kernel import sim_hist_pallas
     from repro.kernels.sim_hist.ref import sim_hist_ref
 
-    e1 = jnp.asarray(normalize(rng.standard_normal((512, 64))))
-    e2 = jnp.asarray(normalize(rng.standard_normal((512, 64))))
+    e1 = jnp.asarray(normalize(rng.standard_normal((n, 64))))
+    e2 = jnp.asarray(normalize(rng.standard_normal((n, 64))))
     dt_k, out_k = _time(lambda a, b: sim_hist_pallas(a, b, n_bins=512, bm=128,
                                                      bn=128, interpret=True), e1, e2)
     dt_r, out_r = _time(lambda a, b: sim_hist_ref(a, b, n_bins=512), e1, e2)
@@ -44,7 +53,7 @@ def run(fast: bool = True):
     rows.append(row("kernel_sim_hist_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
 
     # sim_hist with the per-row scale operand (k-way chain-prefix weights)
-    scale = jnp.asarray(rng.random(512), jnp.float32)
+    scale = jnp.asarray(rng.random(n), jnp.float32)
     dt_k, out_k = _time(lambda a, b, s: sim_hist_pallas(a, b, s[:, None],
                                                         n_bins=512, bm=128,
                                                         bn=128, interpret=True),
@@ -65,6 +74,49 @@ def run(fast: bool = True):
     agree = bool(np.allclose(np.asarray(vk), np.asarray(vr), atol=1e-5))
     rows.append(row("kernel_sim_topk_pallas", dt_k, f"agree={agree}"))
     rows.append(row("kernel_sim_topk_ref", dt_r, f"ratio={dt_k/dt_r:.1f}"))
+
+    # sim_sweep: the fused single pass vs the sequential two-kernel schedule
+    # at matched shapes (one blocked E1@E2^T instead of two)
+    from repro.kernels.sim_sweep.kernel import sim_sweep_pallas
+
+    interpret = jax.default_backend() != "tpu"
+
+    def fused(a, b):
+        return sim_sweep_pallas(a, b, n_bins=512, k=8, bm=128, bn=128,
+                                interpret=interpret)
+
+    def sequential(a, b):
+        return (
+            sim_hist_pallas(a, b, n_bins=512, bm=128, bn=128,
+                            interpret=interpret),
+            sim_topk_pallas(a, b, k=8, bm=128, bn=128, interpret=interpret),
+        )
+
+    dt_f, (bc, vf, jf) = _time(fused, e1, e2)
+    dt_s, (hist, (vs, js)) = _time(sequential, e1, e2)
+    agree = bool(
+        np.array_equal(np.asarray(bc).sum(axis=0), np.asarray(hist))
+        and np.array_equal(np.asarray(vf), np.asarray(vs))
+        and np.array_equal(np.asarray(jf), np.asarray(js))
+    )
+    assert agree, "fused sweep disagrees with the sequential two-kernel path"
+    speedup = dt_s / dt_f
+    if not interpret:
+        assert speedup >= 1.8, (
+            f"compiled fused sweep only {speedup:.2f}x vs sequential"
+        )
+    rows.append(row("kernel_sim_sweep_fused", dt_f, f"agree={agree}"))
+    rows.append(row("kernel_sim_sweep_sequential", dt_s,
+                    f"fused_speedup_x={speedup:.2f}"))
+
+    # low-precision fast paths of the same fused pass
+    for precision, dtype in (("bf16", jnp.bfloat16),):
+        dt_l, _ = _time(
+            lambda a, b: sim_sweep_pallas(a, b, n_bins=512, k=8, bm=128,
+                                          bn=128, interpret=interpret,
+                                          compute_dtype=dtype), e1, e2)
+        rows.append(row(f"kernel_sim_sweep_{precision}", dt_l,
+                        f"fp32_over_{precision}_x={dt_f/dt_l:.2f}"))
 
     # flash_attention
     from repro.kernels.flash_attention.kernel import flash_attention_pallas

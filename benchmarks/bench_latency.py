@@ -1,11 +1,13 @@
 """Fig. 14 / Appendix A: CPU-phase latency decomposition of BAS (similarity,
 stratification, pilot, allocation, execution, resampling CI) — the speedup of
-the fused sim_hist kernel path vs the paper's sort-based stratification — and
-the dense-vs-streaming crossover sweep that calibrates the memory-aware
-dispatcher (``repro.core.dispatch``).
+the fused single-sweep stratification vs the paper's sort and vs the retired
+two-pass kernel schedule — and the dense-vs-streaming crossover sweep that
+calibrates the memory-aware dispatcher (``repro.core.dispatch``).
 
 Run via ``python -m benchmarks.run --only latency`` (``--full`` for
-paper-scale table sizes).  Reporting only — no CI gate."""
+paper-scale table sizes).  CI diffs the ``--json`` output against
+``benchmarks/baselines/BENCH_latency.json`` warn-only (see
+``scripts/bench_diff.py``)."""
 from __future__ import annotations
 
 import time
@@ -21,9 +23,9 @@ from repro.data import make_clustered_tables
 from .common import row
 
 
-def run(fast: bool = True):
+def run(fast: bool = True, smoke: bool = False):
     rows = []
-    n = 600 if fast else 2000
+    n = 300 if smoke else 600 if fast else 2000
     ds = make_clustered_tables(n, n, n_entities=n, noise=0.4, seed=23)
     q = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(),
               budget=max(n * n // 40, 2000))
@@ -36,30 +38,41 @@ def run(fast: bool = True):
                         f"{t[phase] / total:.3f}"))
     rows.append(row("fig14_total", total, f"{total:.3f}s"))
 
-    # sort-based (paper) vs histogram/kernel stratification at scale
+    # sort-based (paper) vs two-pass kernel vs fused single-sweep
+    # stratification at scale
     w = pair_weights(ds.emb1, ds.emb2).reshape(-1)
     cfg = BASConfig()
     t0 = time.perf_counter()
     stratify_dense(w, 0.2, q.budget, cfg)
     dt_sort = time.perf_counter() - t0
     t0 = time.perf_counter()
-    stratify_streaming(ds.emb1, ds.emb2, 0.2, q.budget, cfg, use_kernel=True)
-    dt_hist = time.perf_counter() - t0
+    two = stratify_streaming(ds.emb1, ds.emb2, 0.2, q.budget, cfg,
+                             use_kernel=True, use_sweep=False)
+    dt_two = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    one = stratify_streaming(ds.emb1, ds.emb2, 0.2, q.budget, cfg,
+                             use_kernel=True, use_sweep=True)
+    dt_sweep = time.perf_counter() - t0
+    assert (one.order == two.order).all(), "sweep strata diverged from two-pass"
     rows.append(row("fig14_stratify_sort", dt_sort, f"{dt_sort*1e3:.1f}ms"))
-    rows.append(row("fig14_stratify_simhist_kernel", dt_hist,
-                    f"speedup_x={dt_sort / max(dt_hist, 1e-9):.2f}"))
-    rows.extend(crossover_sweep(fast))
+    rows.append(row("fig14_stratify_twopass_kernel", dt_two,
+                    f"speedup_vs_sort_x={dt_sort / max(dt_two, 1e-9):.2f}"))
+    rows.append(row("fig14_stratify_sweep_kernel", dt_sweep,
+                    f"sweep_vs_twopass_x={dt_two / max(dt_sweep, 1e-9):.2f}"))
+    rows.extend(crossover_sweep(fast, smoke))
     return rows
 
 
-def crossover_sweep(fast: bool = True):
+def crossover_sweep(fast: bool = True, smoke: bool = False):
     """Dense vs streaming end-to-end latency across problem sizes.
 
     Emits one dense and one streaming row per size plus the dispatcher's
     choice under the default cap, so ``BASConfig.max_dense_weight_bytes``
-    can be tuned from data instead of guesswork."""
+    can be tuned from data instead of guesswork.  The streaming rows run
+    the fused single-sweep stratification (the default)."""
     rows = []
-    sizes = [150, 300, 600] if fast else [300, 600, 1200, 2400]
+    sizes = ([150, 300] if smoke else [150, 300, 600] if fast
+             else [300, 600, 1200, 2400])
     for n in sizes:
         ds = make_clustered_tables(n, n, n_entities=max(n, 64), noise=0.4,
                                    seed=29)

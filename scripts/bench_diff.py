@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Diff a ``benchmarks/run.py --json`` report against checked-in baselines.
+
+Starts the perf trajectory the ROADMAP asks for: ``benchmarks/baselines/``
+holds one JSON per benchmark family (``BENCH_kernels.json``,
+``BENCH_latency.json``, recorded with ``--smoke`` on the CI CPU profile) and
+this script compares a fresh run row-by-row:
+
+* a row slower than ``--threshold`` x its baseline is a **regression**;
+* a row in the baseline but missing from the run is a **regression** (a
+  renamed/removed benchmark must update its baseline in the same PR);
+* new rows are reported informationally.
+
+Exit code is non-zero on regressions unless ``--warn-only`` — which is how
+CI runs it on CPU, where the Pallas kernels execute in interpret mode and
+wall times are noise-dominated; the diff output still lands in the job log
+and the JSON artifact, so drift is visible before a TPU run gates on it.
+
+Usage::
+
+    python scripts/bench_diff.py RESULTS.json BASELINE.json [BASELINE2.json ...]
+        [--threshold 1.5] [--warn-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _rows(report: dict, only_modules=None) -> dict:
+    out = {}
+    for key, mod in report.get("modules", {}).items():
+        if only_modules is not None and key not in only_modules:
+            continue
+        for r in mod.get("rows", []):
+            out[r["name"]] = r
+    return out
+
+
+def diff(current: dict, baseline: dict, threshold: float):
+    # restrict the run to the module families the baseline covers, so one
+    # combined run can be diffed against several per-family baselines
+    fams = set(baseline.get("modules", {}))
+    cur, base = _rows(current, fams), _rows(baseline)
+    regressions, notes = [], []
+    for name, b in base.items():
+        c = cur.get(name)
+        if c is None:
+            regressions.append(f"{name}: present in baseline but missing from run")
+            continue
+        b_us, c_us = b["us_per_call"], c["us_per_call"]
+        ratio = c_us / b_us if b_us > 0 else float("inf")
+        line = f"{name}: {c_us:.1f}us vs baseline {b_us:.1f}us ({ratio:.2f}x)"
+        if ratio > threshold:
+            regressions.append(line)
+        else:
+            notes.append(line)
+    for name in cur.keys() - base.keys():
+        notes.append(f"{name}: new row (no baseline)")
+    return regressions, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", help="fresh benchmarks/run.py --json output")
+    ap.add_argument("baselines", nargs="+", help="baseline JSON file(s)")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="slowdown ratio that counts as a regression")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (CPU/interpret CI)")
+    args = ap.parse_args()
+
+    with open(args.results) as f:
+        current = json.load(f)
+    all_regressions = []
+    for path in args.baselines:
+        with open(path) as f:
+            baseline = json.load(f)
+        regressions, notes = diff(current, baseline, args.threshold)
+        print(f"[bench-diff] vs {path}: {len(regressions)} regression(s), "
+              f"{len(notes)} row(s) in range")
+        for line in notes:
+            print(f"[bench-diff]   ok   {line}")
+        for line in regressions:
+            print(f"[bench-diff]   SLOW {line}", file=sys.stderr)
+        all_regressions += regressions
+    if all_regressions and not args.warn_only:
+        raise SystemExit(1)
+    if all_regressions:
+        print(f"[bench-diff] {len(all_regressions)} regression(s) "
+              "(warn-only mode, not failing)")
+
+
+if __name__ == "__main__":
+    main()

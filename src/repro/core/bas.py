@@ -162,12 +162,15 @@ class StratifiedSpace:
     within-stratum probabilities and returns a :class:`StratumDraw` — no
     labels: the pipeline batches all labelling through the Oracle's batch
     API.  ``stratum_tuples(i)`` enumerates stratum i's (n_i, k) tuple indices
-    for blocking (only ever called for i >= 1 — D_0 cannot be blocked)."""
+    for blocking (only ever called for i >= 1 — D_0 cannot be blocked).
+    ``meta`` records how the space was stratified (e.g. the single-sweep
+    pass/rescan stats) and is surfaced in ``QueryResult.detail``."""
 
     sizes: np.ndarray          # (K+1,) |D_0..D_K|
     weight_sums: np.ndarray    # (K+1,) total sampling weight per stratum
     sample_stratum: Callable[[int, int], StratumDraw]
     stratum_tuples: Callable[[int], np.ndarray]
+    meta: dict = dataclasses.field(default_factory=dict)
 
 
 def run_stratified_pipeline(
@@ -295,6 +298,7 @@ def run_stratified_pipeline(
         oracle_calls=query.oracle.calls,
         detail={
             **detail,
+            **({"stratify": space.meta} if space.meta else {}),
             "beta": sorted(beta),
             "num_strata": k,
             "stratum_sizes": sizes.tolist(),
@@ -359,6 +363,7 @@ def run_bas(
         weight_sums=weight_sums,
         sample_stratum=sample_stratum,
         stratum_tuples=lambda i: flat_to_tuples(per_idx[i], query.spec.sizes),
+        meta={"path": "dense-sort"},
     )
     return run_stratified_pipeline(
         query, cfg, rng, space, {"mode": "bas"}, timings, t_start

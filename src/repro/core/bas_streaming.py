@@ -4,11 +4,16 @@
 Differences from the dense path (``bas.run_bas``):
 
 * stratification uses the histogram threshold
-  (``stratify.stratify_streaming_chain``, backed by the fused ``sim_hist``
-  Pallas kernel with a jnp fallback) — O(bins) memory, two streaming passes
-  over prefix blocks; the chain weight factorises as prefix-weight x
-  last-edge pair weight, so the kernel's per-row ``scale`` operand carries
-  the prefix chain weight and nothing bigger than one block is materialised;
+  (``stratify.stratify_streaming_chain``, backed by the fused single-sweep
+  ``sim_sweep`` Pallas kernel with a blocked numpy fallback) — O(bins)
+  memory, **one** streaming pass over prefix blocks emitting histogram +
+  per-block count tiles + per-row top-k; collection reads the top-k and
+  rescans only blocks the tiles flag.  The chain weight factorises as
+  prefix-weight x last-edge pair weight, so the kernel's per-row ``scale``
+  operand carries the prefix chain weight and nothing bigger than one block
+  is materialised.  ``cfg.sweep_precision`` opts into the bf16/int8 MXU
+  fast path (tolerance-gated, see ``stratify.sweep_pass``); the fp32
+  default is bit-identical to the retired two-pass schedule;
 * the minimum sampling regime D_0 is sampled by **walk + rejection**: WWJ
   walk proposals from the full-space distribution
   p(t) = (1/N1) * prod_j w_j(t_j, t_{j+1}) / r_j(t_j)
@@ -90,12 +95,18 @@ def run_bas_streaming(
     seed: int = 0,
     n_bins: int = 4096,
     use_kernel: Optional[bool] = None,
+    use_sweep: Optional[bool] = None,
+    precision: Optional[str] = None,
 ) -> QueryResult:
     """k-way streaming BAS.  Same estimator/CI machinery as the dense path
     (all aggregates); the cross product is never materialised."""
     cfg = cfg or BASConfig()
     if use_kernel is None:
         use_kernel = cfg.use_kernel
+    if use_sweep is None:
+        use_sweep = cfg.use_sweep
+    if precision is None:
+        precision = cfg.sweep_precision
     rng = np.random.default_rng(seed)
     t_start = time.perf_counter()
     timings: dict = {}
@@ -109,16 +120,24 @@ def run_bas_streaming(
     sizes_spec = tuple(e.shape[0] for e in embeddings)
     exp, floor = cfg.weight_exponent, cfg.weight_floor
 
-    # ---- streaming stratification ----------------------------------------
+    # ---- streaming stratification (single fused sweep) -------------------
     t0 = time.perf_counter()
     strat = stratify_streaming_chain(
         embeddings, cfg.alpha, query.budget, cfg, n_bins=n_bins,
-        use_kernel=use_kernel,
+        use_kernel=use_kernel, use_sweep=use_sweep, precision=precision,
     )
     k = strat.num_strata
     sizes = strat.stratum_sizes()
     top_set = set(strat.order.tolist())
     timings["stratify_s"] = time.perf_counter() - t0
+    # the opt-in low-precision sweep also hands its collected weights to the
+    # samplers (HT stays exact: q is computed from the weights actually
+    # sampled with); the fp32 default recomputes them in f64 so estimates
+    # stay bit-identical to the two-pass schedule
+    lowp = (
+        strat.sweep is not None and strat.sweep.precision != "fp32"
+        and strat.order_weights is not None
+    )
 
     # ---- full-space sampling distribution pieces for D_0 rejection -------
     t0 = time.perf_counter()
@@ -141,9 +160,12 @@ def run_bas_streaming(
         flat_to_tuples(strat.stratum_indices(i), sizes_spec)
         for i in range(1, k + 1)
     ]
-    per_w = [None] + [
-        chain_tuple_weights(embeddings, t, exp, floor) for t in per_tup[1:]
-    ]
+    if lowp:
+        per_w = [None] + [strat.stratum_weights(i) for i in range(1, k + 1)]
+    else:
+        per_w = [None] + [
+            chain_tuple_weights(embeddings, t, exp, floor) for t in per_tup[1:]
+        ]
     weight_sums = np.zeros(k + 1, np.float64)
     weight_sums[0] = max(
         chain_total_weight(embeddings, exp, floor) - float(top_w.sum()), 0.0
@@ -163,11 +185,18 @@ def run_bas_streaming(
             tup = per_tup[i][pos]
         return StratumDraw(tup=tup, q=q, size=int(sizes[i]))
 
+    meta = {"path": "sweep" if strat.sweep is not None else "two-pass"}
+    if strat.sweep is not None:
+        meta.update(
+            kernel=strat.sweep.kernel, precision=strat.sweep.precision,
+            **strat.sweep.stats,
+        )
     space = StratifiedSpace(
         sizes=sizes,
         weight_sums=weight_sums,
         sample_stratum=sample_stratum,
         stratum_tuples=lambda i: per_tup[i],
+        meta=meta,
     )
     return run_stratified_pipeline(
         query, cfg, rng, space,

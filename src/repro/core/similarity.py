@@ -84,6 +84,29 @@ def chain_weights(
     return w
 
 
+def quantize_rows_int8(emb: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-row symmetric int8 quantisation: ``emb ~= q * row_scale``.
+
+    Used by the ``sim_sweep`` int8 fast path — scores reconstruct as
+    ``(q1 @ q2^T) * rs1_i * rs2_j`` with exact int32 MXU accumulation, so
+    the only error is the per-element rounding of the embeddings themselves
+    (<= 0.5 * row_scale, i.e. ~0.4% of the row absmax).  All-zero rows
+    (e.g. block padding) quantise to zeros with scale 0.
+    """
+    emb = np.asarray(emb, np.float32)
+    absmax = np.abs(emb).max(axis=1, keepdims=True)
+    row_scale = absmax / 127.0
+    q = np.where(
+        absmax > 0, np.rint(emb / np.maximum(row_scale, 1e-30)), 0.0
+    ).astype(np.int8)
+    return q, row_scale.astype(np.float32)
+
+
+def dequantize_rows_int8(q: np.ndarray, row_scale: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`quantize_rows_int8` (up to rounding)."""
+    return q.astype(np.float32) * np.asarray(row_scale, np.float32).reshape(-1, 1)
+
+
 def weight_of_score(
     s: np.ndarray, exponent: float = 1.0, floor: float = 1e-3
 ) -> np.ndarray:

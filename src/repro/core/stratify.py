@@ -5,25 +5,35 @@ Two paths:
 * **dense/exact** — materialised flat weights, one argsort; strata are
   contiguous index ranges of the descending order.  Used when the cross
   product fits in memory (paper's own prototype does the same with SortDesc).
-* **streaming/histogram** — TPU-native redesign (DESIGN.md §3): a blocked
-  similarity matmul fused with a histogram (Pallas kernel ``sim_hist``; jnp
-  fallback here) yields the global score distribution in O(bins) memory; the
-  top-m threshold is the histogram CDF quantile and a second pass collects the
-  indices above it.  This replaces the paper's O(N^2 log N^2) sort with two
-  O(N^2) streaming passes and never materialises the cross product.
+* **streaming/single-sweep** — TPU-native redesign (docs/kernels.md): **one**
+  blocked pass of ``E1 @ E2^T`` (Pallas kernel ``sim_sweep``; blocked
+  numpy fallback here) emits the global weight histogram, per-(row-block,
+  bin) count tiles, and the per-row top-k.  The top-m threshold is the
+  histogram CDF quantile; collection reads the top-k candidates and rescans
+  only the row blocks whose count tiles prove over-threshold mass — so the
+  paper's O(N^2 log N^2) sort becomes ~one O(N^2) streaming pass, and the
+  cross product is never materialised.  (The two-pass histogram-then-collect
+  path is kept behind ``use_sweep=False`` as the bit-identical baseline.)
 
 k-way chains (``stratify_streaming_chain``): the chain weight factorises as
-prefix-weight x last-edge pair weight, so both streaming passes enumerate the
-*prefix* cross product in blocks and hand the accumulated prefix weight to the
-``sim_hist`` kernel as a per-row scale.  Histogram resolution: chain weights
-are products of k-1 terms and concentrate near zero on a linear [0, 1] grid,
-so the histogram bins the geometric-mean weight W**(1/(k-1)) (a monotone
-transform — identical to the raw weight at k=2); the top-m threshold maps back
-as thr**(k-1).  The two-pass memory stays O(N + bins + block*Nk + m).
+prefix-weight x last-edge pair weight, so the sweep enumerates the chain's
+*prefix* space in blocks and hands the accumulated prefix weight to the
+kernel as a per-row scale.  Histogram resolution: chain weights are products
+of k-1 terms and concentrate near zero on a linear [0, 1] grid, so the
+histogram bins the geometric-mean weight W**(1/(k-1)) (a monotone transform —
+identical to the raw weight at k=2); the top-m threshold maps back as
+thr**(k-1).  Memory stays O(N + bins + block*Nk + m).
+
+Precision: the sweep runs fp32 by default (bit-identical to the two-pass
+path).  ``precision="bf16"``/``"int8"`` (see
+``configs.joinml_embedder.EMBEDDING_PRECISIONS``) opt into the low-precision
+MXU fast path; the first row block is re-binned at fp32 and the sweep falls
+back to fp32 when the CDF deviation exceeds the configured tolerance.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import numpy as np
 
@@ -39,11 +49,18 @@ class Stratification:
     regime and ``rest_mask`` identifies D_0 implicitly).
     ``bounds``: (K+1,) ints; stratum i (1-indexed as in the paper) is
     ``order[bounds[i-1]:bounds[i]]``.  D_0 is everything not in ``order[:bounds[-1]]``.
+    ``order_weights``: sampling weights aligned with ``order`` when the
+    streaming collector produced them (f64; None on the dense path).
+    ``sweep``: the :class:`SweepInfo` that stratified this space, when the
+    single-sweep path ran (None otherwise) — samplers consume its count
+    tiles and stats.
     """
 
     order: np.ndarray
     bounds: np.ndarray
     n_total: int
+    order_weights: Optional[np.ndarray] = None
+    sweep: Optional["SweepInfo"] = None
 
     @property
     def num_strata(self) -> int:
@@ -53,6 +70,12 @@ class Stratification:
         """Flat indices of stratum i in {1..K}."""
         assert 1 <= i <= self.num_strata
         return self.order[self.bounds[i - 1] : self.bounds[i]]
+
+    def stratum_weights(self, i: int) -> Optional[np.ndarray]:
+        """Collector-produced weights of stratum i, if available."""
+        if self.order_weights is None:
+            return None
+        return self.order_weights[self.bounds[i - 1] : self.bounds[i]]
 
     def stratum_sizes(self) -> np.ndarray:
         """Sizes of [D_0, D_1, ..., D_K]."""
@@ -100,27 +123,219 @@ def stratify_dense(
 
 
 # ----------------------------------------------------------------------------
-# Streaming/histogram path (sim_hist Pallas kernel with jnp/numpy fallback).
+# Single-sweep streaming path (sim_sweep Pallas kernel with numpy fallback).
 # ----------------------------------------------------------------------------
 
-def _kernel_hist(e1, e2, n_bins, exponent, floor, scale=None):
-    """Fused-kernel histogram, or None when Pallas is unavailable/broken —
-    the caller falls back to the blocked numpy path.  Missing Pallas
-    (ImportError) degrades silently; any other kernel failure is a real bug
-    and is surfaced as a warning so it cannot hide behind the fallback."""
+# Per-row candidate budget of the sweep's top-k output.  The top-k collection
+# path only engages when the blocking regime averages < 16 pairs per left row
+# (see collect_top), so 32 gives 2x headroom; rows that saturate it get one
+# raised-k retry and an exact rescan after that (_collect_from_topk) — no
+# pair is ever dropped at the cap.
+TOPK_CANDIDATES = 32
+
+
+@dataclasses.dataclass
+class SweepInfo:
+    """Everything one fused pass over the (never materialised) product
+    yields: the global histogram, per-(row-block, bin) count tiles at
+    ``block_rows`` left/prefix-row granularity, and (two-table kernel path
+    only) the per-row top-k candidates.  ``stats`` accumulates collection
+    bookkeeping (blocks rescanned vs proven empty, retry counts) that the
+    BAS engines surface in ``QueryResult.detail``."""
+
+    counts: np.ndarray
+    edges: np.ndarray
+    block_counts: np.ndarray
+    block_rows: int
+    topk: Optional[tuple]       # (vals, idx, valid) or None
+    kernel: bool
+    precision: str
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def n_bins(self) -> int:
+        return len(self.counts)
+
+    def threshold_bin(self, threshold: float) -> int:
+        """Bin index of a histogram-edge threshold."""
+        return int(np.clip(round(threshold * self.n_bins), 0, self.n_bins))
+
+    def blocks_over(self, threshold: float, margin: Optional[int] = None) -> np.ndarray:
+        """Boolean mask over row blocks that may hold weight >= threshold.
+
+        ``margin`` bins of slack absorb binning-precision mismatch between
+        the sweep (f32 scores) and host rescans (f64 transform of f32
+        matmuls); low-precision sweeps get a wider default margin."""
+        if margin is None:
+            margin = 2 if self.precision == "fp32" else max(2, self.n_bins // 64)
+        lo = max(self.threshold_bin(threshold) - margin, 0)
+        return self.block_counts[:, lo:].sum(axis=1) > 0
+
+    def rescan_starts(self, threshold: float, n_rows: int) -> tuple[list, int]:
+        """Row offsets of the blocks a >= threshold rescan must touch (and
+        the block stride), skipping blocks the count tiles prove empty;
+        records the skip accounting in ``stats``."""
+        over = self.blocks_over(threshold)
+        starts = [
+            b * self.block_rows for b in np.nonzero(over)[0]
+            if b * self.block_rows < n_rows
+        ]
+        self.stats["blocks_total"] = int(len(over))
+        self.stats["blocks_rescanned"] = int(len(starts))
+        return starts, self.block_rows
+
+
+def _kernel_op(module: str, attr: str, *args, **kwargs):
+    """Call a Pallas op with the shared degradation policy: missing Pallas
+    (ImportError) degrades silently to the caller's fallback; any other
+    failure is a real bug and is surfaced as a warning so it cannot hide
+    behind the fallback.  Returns the op's result, or None to fall back."""
+    import importlib
+
     try:
-        from repro.kernels.sim_hist import ops as sim_hist_ops
+        mod = importlib.import_module(module)
     except ImportError:
         return None
     try:
-        return sim_hist_ops.sim_hist(
-            e1, e2, n_bins, exponent, floor, scale=scale
-        )
+        return getattr(mod, attr)(*args, **kwargs)
     except Exception as e:
         import warnings
 
-        warnings.warn(f"sim_hist kernel failed ({e!r}); using jnp fallback")
+        warnings.warn(f"{module}.{attr} failed ({e!r}); using fallback")
         return None
+
+
+def _kernel_sweep(e1, e2, n_bins, exponent, floor, scale=None,
+                  precision="fp32", k_top=TOPK_CANDIDATES, right=None):
+    """Fused-kernel sweep, or None -> blocked numpy fallback."""
+    return _kernel_op(
+        "repro.kernels.sim_sweep.ops", "sim_sweep", e1, e2, n_bins, exponent,
+        floor, k=k_top, scale=scale, precision=precision, right=right,
+    )
+
+
+def _prepare_sweep_right(e2, precision):
+    """Padded/quantised right table for repeated chain sweeps, or None when
+    the kernel layer is unavailable."""
+    return _kernel_op(
+        "repro.kernels.sim_sweep.ops", "prepare_right", e2, precision=precision
+    )
+
+
+def _warn_lowp_unavailable(precision):
+    import warnings
+
+    warnings.warn(
+        f"{precision} sweep requested but the Pallas kernel path is "
+        "unavailable; the numpy fallback computes fp32"
+    )
+
+
+def _kernel_hist(e1, e2, n_bins, exponent, floor, scale=None):
+    """Two-pass baseline: fused-kernel histogram, or None -> jnp fallback."""
+    return _kernel_op(
+        "repro.kernels.sim_hist.ops", "sim_hist", e1, e2, n_bins, exponent,
+        floor, scale=scale,
+    )
+
+
+def _precision_tolerance(precision: str, tolerance: Optional[float]) -> Optional[float]:
+    """Validate a sweep precision against the embedder's export table and
+    resolve the CDF-shift tolerance (explicit value wins)."""
+    from repro.configs.joinml_embedder import EMBEDDING_PRECISIONS
+
+    if precision not in EMBEDDING_PRECISIONS:
+        raise ValueError(
+            f"unknown sweep precision {precision!r}; "
+            f"expected one of {sorted(EMBEDDING_PRECISIONS)}"
+        )
+    if tolerance is not None:
+        return tolerance
+    return EMBEDDING_PRECISIONS[precision].max_cdf_shift or None
+
+
+def _binned_counts(w: np.ndarray, n_bins: int) -> np.ndarray:
+    """Host-side floor-binning matching the kernel's bin assignment."""
+    idx = np.clip((np.asarray(w) * n_bins).astype(np.int64), 0, n_bins - 1)
+    return np.bincount(idx.reshape(-1), minlength=n_bins).astype(np.int64)
+
+
+def _lowp_cdf_dev(ref_counts: np.ndarray, lowp_counts: np.ndarray) -> float:
+    """Sup-distance between two normalised histogram CDFs."""
+    mass = max(float(ref_counts.sum()), 1.0)
+    dev = np.abs(np.cumsum(ref_counts) - np.cumsum(lowp_counts)) / mass
+    return float(dev.max())
+
+
+def sweep_pass(
+    e1: np.ndarray,
+    e2: np.ndarray,
+    n_bins: int = 4096,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+    use_kernel: bool = False,
+    precision: str = "fp32",
+    tolerance: Optional[float] = None,
+    k_top: int = TOPK_CANDIDATES,
+) -> SweepInfo:
+    """One pass over the two-table product: histogram + count tiles + top-k.
+
+    ``k_top`` sizes the top-k output; callers that know collection will go
+    dense (m_cap >= 16 * n1) pass 1 to skip the extract-max cost.  The
+    numpy fallback makes the same single pass in ``block``-row chunks
+    (np.histogram per chunk gives the count tiles for free); it has no
+    top-k output, so collection rescans — but only the blocks the tiles
+    flag.  Low-precision sweeps are tolerance-checked: the first row block
+    is re-binned at fp32 and the whole sweep falls back to fp32 when the
+    CDF deviation exceeds ``tolerance``.
+    """
+    from .similarity import pair_weights  # local import to avoid cycle
+
+    tolerance = _precision_tolerance(precision, tolerance)
+    if use_kernel:
+        out = _kernel_sweep(e1, e2, n_bins, exponent, floor,
+                            precision=precision, k_top=k_top)
+        if out is not None:
+            info = SweepInfo(
+                counts=out.counts, edges=out.edges,
+                block_counts=out.block_counts, block_rows=out.block_rows,
+                topk=(out.vals, out.idx, out.valid) if k_top >= 2 else None,
+                kernel=True, precision=precision,
+            )
+            if precision != "fp32":
+                rows = min(info.block_rows, e1.shape[0])
+                ref = _binned_counts(pair_weights(e1[:rows], e2, exponent, floor), n_bins)
+                dev = _lowp_cdf_dev(ref, info.block_counts[0])
+                info.stats["lowp_cdf_dev"] = dev
+                if tolerance is not None and dev > tolerance:
+                    import warnings
+
+                    warnings.warn(
+                        f"{precision} sweep CDF deviation {dev:.4f} exceeds "
+                        f"tolerance {tolerance:.4f}; falling back to fp32"
+                    )
+                    info = sweep_pass(
+                        e1, e2, n_bins, exponent, floor, block, use_kernel,
+                        precision="fp32", k_top=k_top,
+                    )
+                    info.stats["lowp_fallback"] = dev
+            return info
+
+    if precision != "fp32":
+        _warn_lowp_unavailable(precision)
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    n1 = e1.shape[0]
+    tiles = []
+    for s in range(0, n1, block):
+        w = pair_weights(e1[s : s + block], e2, exponent, floor)
+        c, _ = np.histogram(w, bins=edges)
+        tiles.append(c.astype(np.int64))
+    bc = np.stack(tiles) if tiles else np.zeros((1, n_bins), np.int64)
+    return SweepInfo(
+        counts=bc.sum(axis=0), edges=edges, block_counts=bc, block_rows=block,
+        topk=None, kernel=False, precision="fp32",
+    )
 
 
 def _prefix_chain_weights(embeddings, start, stop, exponent, floor):
@@ -138,6 +353,104 @@ def _prefix_chain_weights(embeddings, start, stop, exponent, floor):
     return wp, tup[:, -1]
 
 
+def sweep_pass_chain(
+    embeddings: list,
+    n_bins: int = 4096,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+    use_kernel: bool = False,
+    precision: str = "fp32",
+    tolerance: Optional[float] = None,
+    k_top: int = TOPK_CANDIDATES,
+) -> SweepInfo:
+    """k-way chain sweep: the geometric-mean chain weight W(t)**(1/(k-1)) is
+    histogrammed over prefix blocks; each prefix block contributes one
+    count tile, so chain collection can skip prefix blocks with no
+    over-threshold mass.  At k=2 this is exactly :func:`sweep_pass`."""
+    from .similarity import pair_weights
+
+    k = len(embeddings)
+    if k == 2:
+        return sweep_pass(
+            embeddings[0], embeddings[1], n_bins, exponent, floor, block,
+            use_kernel, precision, tolerance, k_top=k_top,
+        )
+    tolerance = _precision_tolerance(precision, tolerance)
+    root = 1.0 / (k - 1)
+    e_prev, e_last = embeddings[-2], embeddings[-1]
+    n_prefix = 1
+    for e in embeddings[:-1]:
+        n_prefix *= e.shape[0]
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    tiles = []
+    kernel_ok = use_kernel
+    kernel_tiles = 0
+    lowp_dev = None
+    right = None  # right table padded/quantised once, swept per prefix block
+    if kernel_ok:
+        right = _prepare_sweep_right(e_last, precision)
+        kernel_ok = right is not None
+    if not kernel_ok and precision != "fp32":
+        _warn_lowp_unavailable(precision)
+    for s in range(0, n_prefix, block):
+        wp, i_last = _prefix_chain_weights(
+            embeddings, s, min(s + block, n_prefix), exponent, floor
+        )
+        tile = None
+        if kernel_ok:
+            # kernel bins max(clip(sim), floor)**(e*root) * scale —
+            # exactly (wp * w_last)**root when scale = wp**root
+            out = _kernel_sweep(
+                e_prev[i_last], None, n_bins, exponent * root, floor,
+                scale=wp**root, precision=precision, k_top=1, right=right,
+            )
+            if out is None:
+                kernel_ok = False
+            else:
+                tile = out.counts
+                kernel_tiles += 1
+                if precision != "fp32" and s == 0:
+                    w = pair_weights(e_prev[i_last], e_last, exponent * root, floor)
+                    ref = _binned_counts(wp[:, None] ** root * w, n_bins)
+                    dev = lowp_dev = _lowp_cdf_dev(ref, tile)
+                    if tolerance is not None and dev > tolerance:
+                        import warnings
+
+                        warnings.warn(
+                            f"{precision} chain sweep CDF deviation {dev:.4f} "
+                            f"exceeds tolerance {tolerance:.4f}; using fp32"
+                        )
+                        info = sweep_pass_chain(
+                            embeddings, n_bins, exponent, floor, block,
+                            use_kernel, precision="fp32",
+                        )
+                        info.stats["lowp_fallback"] = dev
+                        return info
+        if tile is None:
+            w = pair_weights(e_prev[i_last], e_last, exponent, floor)
+            v = (wp[:, None] * w) ** root
+            c, _ = np.histogram(v, bins=edges)
+            tile = c.astype(np.int64)
+        tiles.append(tile)
+    bc = np.stack(tiles) if tiles else np.zeros((1, n_bins), np.int64)
+    # the precision label drives blocks_over's safety margin: any tile binned
+    # at low precision makes the whole sweep low-precision for that purpose,
+    # even if the kernel died mid-loop and later tiles are fp32
+    used_lowp = kernel_tiles > 0 and precision != "fp32"
+    info = SweepInfo(
+        counts=bc.sum(axis=0), edges=edges, block_counts=bc, block_rows=block,
+        topk=None, kernel=kernel_ok,
+        precision=precision if used_lowp else "fp32",
+    )
+    if used_lowp and lowp_dev is not None:
+        info.stats["lowp_cdf_dev"] = lowp_dev
+    if kernel_tiles and not kernel_ok:
+        info.stats["kernel_tiles"] = kernel_tiles
+        info.stats["numpy_tiles"] = len(tiles) - kernel_tiles
+    return info
+
+
 def weight_histogram(
     e1: np.ndarray,
     e2: np.ndarray,
@@ -147,10 +460,9 @@ def weight_histogram(
     block: int = 4096,
     use_kernel: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Histogram of pair weights over the (never materialised) cross product.
-
-    Returns (counts[n_bins], edges[n_bins+1]) with edges spanning [0, 1].
-    """
+    """Two-pass baseline, pass 1: histogram of pair weights over the (never
+    materialised) cross product.  Returns (counts[n_bins], edges[n_bins+1])
+    with edges spanning [0, 1]."""
     from .similarity import pair_weights  # local import to avoid cycle
 
     if use_kernel:
@@ -176,9 +488,9 @@ def chain_weight_histogram(
     block: int = 4096,
     use_kernel: bool = False,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Histogram of the geometric-mean chain weight W(t)**(1/(k-1)) over the
-    full k-way cross product, streamed over prefix blocks (O(block * Nk)
-    peak memory).  At k=2 this is exactly ``weight_histogram``."""
+    """Two-pass baseline, pass 1 for k-way chains: histogram of the
+    geometric-mean chain weight W(t)**(1/(k-1)), streamed over prefix blocks
+    (O(block * Nk) peak memory).  At k=2 this is ``weight_histogram``."""
     from .similarity import pair_weights
 
     k = len(embeddings)
@@ -200,8 +512,6 @@ def chain_weight_histogram(
         )
         done = False
         if use_kernel:
-            # kernel computes max(clip(sim), floor)**(e*root) * scale —
-            # exactly (wp * w_last)**root when scale = wp**root
             out = _kernel_hist(
                 e_prev[i_last], e_last, n_bins, exponent * root, floor,
                 scale=wp**root,
@@ -218,7 +528,13 @@ def chain_weight_histogram(
 
 
 def threshold_for_top_m(counts: np.ndarray, edges: np.ndarray, m: int) -> float:
-    """Largest bin edge t such that #weights >= t is >= m (CDF from the top)."""
+    """Largest bin edge t such that #weights >= t is >= m (CDF from the top).
+
+    Edge cases: ``m <= 0`` returns the top edge (collect nothing below the
+    maximum representable weight); ``m`` at or beyond the total mass — or an
+    all-empty histogram — returns the bottom edge (collect everything)."""
+    if m <= 0:
+        return float(edges[-1])
     csum = np.cumsum(counts[::-1])[::-1]  # csum[i] = #weights in bins >= i
     ok = np.nonzero(csum >= m)[0]
     if len(ok) == 0:
@@ -226,27 +542,23 @@ def threshold_for_top_m(counts: np.ndarray, edges: np.ndarray, m: int) -> float:
     return float(edges[ok[-1]])
 
 
-def _collect_top_pairs_topk(e1, e2, threshold, exponent, floor):
-    """sim_topk-kernel-assisted over-threshold collection for two tables.
+def _try_sim_topk(e1, e2, k):
+    """sim_topk kernel call, or None -> dense scan."""
+    return _kernel_op("repro.kernels.sim_topk.ops", "sim_topk", e1, e2, k=k)
 
-    Per-row top-k candidates from the fused kernel; any row whose k-th
-    candidate still clears the threshold may have been truncated and is
-    rescanned exactly.  Returns (flat_idx, weights) or None when the kernel
-    is unavailable or the candidate count would not pay off."""
+
+def _collect_from_topk(e1, e2, vals, idx, valid, threshold, exponent, floor,
+                       stats=None):
+    """Over-threshold collection from per-row top-k candidates.
+
+    Any row whose last candidate still clears the threshold may have been
+    truncated at the candidate budget; truncated rows get ONE retry at 4x
+    the budget (``sim_topk`` with a raised k) and rows that saturate even
+    that are rescanned exactly — so no pair is ever silently dropped and
+    the full product is never rescanned.  Returns (flat_idx, weights)."""
     from .similarity import pair_weights, weight_of_score
 
     n1, n2 = e1.shape[0], e2.shape[0]
-    try:
-        from repro.kernels.sim_topk.ops import sim_topk
-    except ImportError:
-        return None
-    try:
-        vals, idx, valid = sim_topk(e1, e2, k=min(64, n2))
-    except Exception as e:
-        import warnings
-
-        warnings.warn(f"sim_topk kernel failed ({e!r}); using dense scan")
-        return None
     kk = vals.shape[1]
     w_vals = weight_of_score(np.asarray(vals, np.float64), exponent, floor)
     keep = (w_vals >= threshold) & valid
@@ -254,18 +566,51 @@ def _collect_top_pairs_topk(e1, e2, threshold, exponent, floor):
         saturated = np.nonzero(w_vals[:, -1] >= threshold)[0]
     else:
         saturated = np.empty(0, np.int64)
-    if len(saturated) > n1 // 4:
-        return None  # threshold too deep for k candidates; dense scan is cheaper
     keep[saturated] = False
     r, c = np.nonzero(keep)
     flat = [r.astype(np.int64) * n2 + idx[r, c]]
     wts = [w_vals[r, c]]
     if len(saturated):
-        w = pair_weights(e1[saturated], e2, exponent, floor)
-        rr, cc = np.nonzero(w >= threshold)
-        flat.append(saturated[rr].astype(np.int64) * n2 + cc)
-        wts.append(w[rr, cc])
+        k2 = min(max(4 * kk, 128), n2)
+        # a deep threshold saturates most rows; the retry would likely
+        # saturate too, so go straight to the exact rescan
+        retry_pays = len(saturated) <= n1 // 4
+        out = _try_sim_topk(e1[saturated], e2, k2) if k2 > kk and retry_pays else None
+        if out is not None:
+            v2, i2, valid2 = out
+            w2 = weight_of_score(np.asarray(v2, np.float64), exponent, floor)
+            keep2 = (w2 >= threshold) & valid2
+            if v2.shape[1] < n2:
+                still = np.nonzero(w2[:, -1] >= threshold)[0]
+            else:
+                still = np.empty(0, np.int64)
+            keep2[still] = False
+            r2, c2 = np.nonzero(keep2)
+            flat.append(saturated[r2].astype(np.int64) * n2 + i2[r2, c2])
+            wts.append(w2[r2, c2])
+            if stats is not None:
+                stats["topk_retry_rows"] = int(len(saturated))
+            saturated = saturated[still]
+        if stats is not None:
+            stats["dense_rescan_rows"] = int(len(saturated))
+        if len(saturated):
+            w = pair_weights(e1[saturated], e2, exponent, floor)
+            rr, cc = np.nonzero(w >= threshold)
+            flat.append(saturated[rr].astype(np.int64) * n2 + cc)
+            wts.append(w[rr, cc])
     return np.concatenate(flat), np.concatenate(wts)
+
+
+def _collect_top_pairs_topk(e1, e2, threshold, exponent, floor, stats=None):
+    """Two-pass baseline: run sim_topk now, then collect (see
+    :func:`_collect_from_topk`).  None when the kernel is unavailable."""
+    out = _try_sim_topk(e1, e2, k=min(TOPK_CANDIDATES, e2.shape[0]))
+    if out is None:
+        return None
+    vals, idx, valid = out
+    return _collect_from_topk(
+        e1, e2, vals, idx, valid, threshold, exponent, floor, stats=stats
+    )
 
 
 def collect_top(
@@ -277,27 +622,53 @@ def collect_top(
     floor: float = 1e-3,
     block: int = 4096,
     use_kernel: bool = False,
-) -> np.ndarray:
-    """Second streaming pass: flat indices of pairs with weight >= threshold,
-    sorted by weight descending, truncated to m_cap."""
+    sweep: Optional[SweepInfo] = None,
+    return_weights: bool = False,
+):
+    """Collect flat indices of pairs with weight >= threshold, sorted by
+    weight descending, truncated to m_cap.
+
+    With a :class:`SweepInfo` the candidates come straight from the sweep's
+    top-k output (no second kernel pass) and any rescan — truncated rows,
+    or the whole collection on the fallback path — touches only the row
+    blocks whose count tiles show over-threshold mass."""
     from .similarity import pair_weights
 
     n1, n2 = e1.shape[0], e2.shape[0]
-    if use_kernel and m_cap < 16 * n1:
-        out = _collect_top_pairs_topk(e1, e2, threshold, exponent, floor)
+    stats = sweep.stats if sweep is not None else None
+    if m_cap < 16 * n1:
+        out = None
+        if sweep is not None and sweep.topk is not None:
+            vals, idx, valid = sweep.topk
+            out = _collect_from_topk(
+                e1, e2, vals, idx, valid, threshold, exponent, floor,
+                stats=stats,
+            )
+        elif use_kernel:
+            out = _collect_top_pairs_topk(e1, e2, threshold, exponent, floor,
+                                          stats=stats)
         if out is not None:
             idx, w = out
             order = np.argsort(w)[::-1][:m_cap]
+            if return_weights:
+                return idx[order], w[order]
             return idx[order]
+
     idx_chunks, w_chunks = [], []
-    for s in range(0, n1, block):
-        w = pair_weights(e1[s : s + block], e2, exponent, floor)
+    if sweep is not None:
+        starts, step = sweep.rescan_starts(threshold, n1)
+    else:
+        starts, step = list(range(0, n1, block)), block
+    for s in starts:
+        w = pair_weights(e1[s : s + step], e2, exponent, floor)
         r, c = np.nonzero(w >= threshold)
         idx_chunks.append(((r + s).astype(np.int64) * n2 + c))
         w_chunks.append(w[r, c])
     idx = np.concatenate(idx_chunks) if idx_chunks else np.empty(0, np.int64)
     w = np.concatenate(w_chunks) if w_chunks else np.empty(0, np.float64)
     order = np.argsort(w)[::-1][:m_cap]
+    if return_weights:
+        return idx[order], w[order]
     return idx[order]
 
 
@@ -309,17 +680,20 @@ def collect_top_chain(
     floor: float = 1e-3,
     block: int = 4096,
     use_kernel: bool = False,
-) -> np.ndarray:
+    sweep: Optional[SweepInfo] = None,
+    return_weights: bool = False,
+):
     """Flat indices (over the full k-way cross product, row-major) of tuples
     whose geometric-mean chain weight clears ``threshold_root``, sorted by
-    chain weight descending, truncated to m_cap."""
+    chain weight descending, truncated to m_cap.  With a chain sweep, prefix
+    blocks whose count tiles show no over-threshold mass are skipped."""
     from .similarity import pair_weights
 
     k = len(embeddings)
     if k == 2:
         return collect_top(
             embeddings[0], embeddings[1], threshold_root, m_cap, exponent,
-            floor, block, use_kernel,
+            floor, block, use_kernel, sweep=sweep, return_weights=return_weights,
         )
     thr_w = threshold_root ** (k - 1)  # back to raw chain-weight space
     e_prev, e_last = embeddings[-2], embeddings[-1]
@@ -327,10 +701,14 @@ def collect_top_chain(
     n_prefix = 1
     for e in embeddings[:-1]:
         n_prefix *= e.shape[0]
+    if sweep is not None:
+        starts, step = sweep.rescan_starts(threshold_root, n_prefix)
+    else:
+        starts, step = list(range(0, n_prefix, block)), block
     idx_chunks, w_chunks = [], []
-    for s in range(0, n_prefix, block):
+    for s in starts:
         wp, i_last = _prefix_chain_weights(
-            embeddings, s, min(s + block, n_prefix), exponent, floor
+            embeddings, s, min(s + step, n_prefix), exponent, floor
         )
         w = wp[:, None] * pair_weights(e_prev[i_last], e_last, exponent, floor)
         r, c = np.nonzero(w >= thr_w)
@@ -339,6 +717,8 @@ def collect_top_chain(
     idx = np.concatenate(idx_chunks) if idx_chunks else np.empty(0, np.int64)
     w = np.concatenate(w_chunks) if w_chunks else np.empty(0, np.float64)
     order = np.argsort(w)[::-1][:m_cap]
+    if return_weights:
+        return idx[order], w[order]
     return idx[order]
 
 
@@ -349,13 +729,25 @@ def stratify_streaming_chain(
     cfg: BASConfig,
     n_bins: int = 4096,
     use_kernel: bool = False,
+    use_sweep: Optional[bool] = None,
+    precision: Optional[str] = None,
 ) -> Stratification:
     """Histogram-thresholded stratification of a k-way chain; equal-size
     strata like the dense path but the threshold (hence membership at the
     boundary) is bin-resolution approximate.  Strata remain exactly
     equal-sized; only *which* borderline tuples land in D_K vs D_0 can differ
     — the estimator stays unbiased because stratum membership is
-    deterministic given the data."""
+    deterministic given the data.
+
+    ``use_sweep`` (default from ``cfg.use_sweep``) runs the fused
+    single-sweep path; ``use_sweep=False`` keeps the two-pass
+    histogram-then-collect baseline, which is bit-identical at fp32.
+    ``precision`` opts the sweep into the bf16/int8 fast path (default from
+    ``cfg.sweep_precision``), tolerance-gated via ``cfg.sweep_tolerance``."""
+    if use_sweep is None:
+        use_sweep = cfg.use_sweep
+    if precision is None:
+        precision = cfg.sweep_precision
     n = 1
     for e in embeddings:
         n *= e.shape[0]
@@ -364,19 +756,35 @@ def stratify_streaming_chain(
     k = max(1, min(k, m)) if m > 0 else 0
     if m == 0:
         return Stratification(np.empty(0, np.int64), np.zeros(1, np.int64), n)
-    counts, edges = chain_weight_histogram(
-        embeddings, n_bins, cfg.weight_exponent, cfg.weight_floor,
-        use_kernel=use_kernel,
-    )
+    sweep = None
+    if use_sweep:
+        # collection only consults the top-k when the blocking regime is
+        # sparse per row (see collect_top); otherwise skip its epilogue cost
+        n1 = embeddings[0].shape[0]
+        k_top = TOPK_CANDIDATES if (len(embeddings) == 2 and m < 16 * n1) else 1
+        sweep = sweep_pass_chain(
+            embeddings, n_bins, cfg.weight_exponent, cfg.weight_floor,
+            use_kernel=use_kernel, precision=precision,
+            tolerance=cfg.sweep_tolerance, k_top=k_top,
+        )
+        counts, edges = sweep.counts, sweep.edges
+    else:
+        counts, edges = chain_weight_histogram(
+            embeddings, n_bins, cfg.weight_exponent, cfg.weight_floor,
+            use_kernel=use_kernel,
+        )
     thr = threshold_for_top_m(counts, edges, m)
-    order = collect_top_chain(
+    order, order_w = collect_top_chain(
         embeddings, thr, m, cfg.weight_exponent, cfg.weight_floor,
-        use_kernel=use_kernel,
+        use_kernel=use_kernel, sweep=sweep, return_weights=True,
     )
     m_eff = len(order)
     k = max(1, min(k, m_eff))
     bounds = np.round(np.linspace(0, m_eff, k + 1)).astype(np.int64)
-    return Stratification(order=order, bounds=bounds, n_total=n)
+    return Stratification(
+        order=order, bounds=bounds, n_total=n, order_weights=order_w,
+        sweep=sweep,
+    )
 
 
 def stratify_streaming(
@@ -387,8 +795,11 @@ def stratify_streaming(
     cfg: BASConfig,
     n_bins: int = 4096,
     use_kernel: bool = False,
+    use_sweep: Optional[bool] = None,
+    precision: Optional[str] = None,
 ) -> Stratification:
     """Two-table wrapper of :func:`stratify_streaming_chain`."""
     return stratify_streaming_chain(
-        [e1, e2], alpha, budget, cfg, n_bins=n_bins, use_kernel=use_kernel
+        [e1, e2], alpha, budget, cfg, n_bins=n_bins, use_kernel=use_kernel,
+        use_sweep=use_sweep, precision=precision,
     )

@@ -77,8 +77,25 @@ class BASConfig:
                                   # exceeds this cap, run_auto routes to the
                                   # streaming path (O(N + alpha*b) memory)
     use_kernel: bool = True       # streaming stratification: use the fused
-                                  # sim_hist/sim_topk Pallas kernels (falls
-                                  # back to blocked jnp when unavailable)
+                                  # Pallas kernels (falls back to blocked
+                                  # jnp/numpy when unavailable)
+    use_sweep: bool = True        # fuse the stratification passes into ONE
+                                  # sim_sweep kernel launch (histogram +
+                                  # top-k + per-block count tiles); False
+                                  # keeps the two-pass sim_hist + sim_topk
+                                  # schedule (bit-identical at fp32)
+    sweep_precision: str = "fp32"  # opt-in low-precision sweep: "bf16"
+                                  # (bf16 MXU inputs, f32 accumulation) or
+                                  # "int8" (per-row-quantised embeddings,
+                                  # int32 accumulation); only the strata
+                                  # boundaries move — HT estimates stay
+                                  # unbiased (membership is deterministic)
+    sweep_tolerance: Optional[float] = None
+                                  # max CDF shift tolerated from a
+                                  # low-precision sweep before it falls back
+                                  # to fp32; None uses the documented
+                                  # per-precision default from
+                                  # configs.joinml_embedder.EMBEDDING_PRECISIONS
     defensive_mix: float = 0.2    # within-stratum sampling = (1-mix)*importance
                                   # + mix*uniform (Hesterberg defensive IS):
                                   # caps HT weights at |D_i|/mix, bounding the

@@ -14,6 +14,11 @@ never materialising anything bigger than one (bm, bn) block.
 
 Grid: (M/bm, N/bn), sequential on TPU so the histogram accumulates safely in
 the output block (same output block mapped to every program).
+
+The binning epilogue is shared with ``sim_sweep`` (``repro.kernels.binning``):
+a two-level one-hot + MXU combine replaces the original O(n_bins)-compares-
+per-element chunked scan whenever the bin count decomposes (scan fallback
+otherwise).  Counts are bit-identical either way.
 """
 from __future__ import annotations
 
@@ -23,9 +28,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..binning import bin_counts, plan_bins
+
 
 def _kernel(e1_ref, e2_ref, s_ref, out_ref, *, n_bins: int, exponent: float,
-            floor: float, bin_chunk: int):
+            floor: float, plan):
     i, j = pl.program_id(0), pl.program_id(1)
 
     @pl.when((i == 0) & (j == 0))
@@ -43,17 +50,7 @@ def _kernel(e1_ref, e2_ref, s_ref, out_ref, *, n_bins: int, exponent: float,
         w = w**exponent
     w = w * s_ref[...].astype(jnp.float32)  # (bm, 1) prefix weights broadcast
     idx = jnp.clip((w * n_bins).astype(jnp.int32), 0, n_bins - 1)
-    flat = idx.reshape(1, -1)
-
-    def body(c, _):
-        base = c * bin_chunk
-        bins = base + jax.lax.broadcasted_iota(jnp.int32, (bin_chunk, 1), 0)
-        hits = (flat == bins).astype(jnp.int32).sum(axis=1)  # (bin_chunk,)
-        cur = out_ref[pl.ds(base, bin_chunk)]
-        out_ref[pl.ds(base, bin_chunk)] = cur + hits
-        return c + 1, None
-
-    jax.lax.scan(body, 0, None, length=n_bins // bin_chunk)
+    out_ref[...] = out_ref[...] + bin_counts(idx, n_bins, plan)
 
 
 @functools.partial(
@@ -76,7 +73,7 @@ def sim_hist_pallas(
     m, d = e1.shape
     n, _ = e2.shape
     assert m % bm == 0 and n % bn == 0, "pad inputs to block multiples"
-    assert n_bins % bin_chunk == 0
+    plan = plan_bins(n_bins, bm * bn, bin_chunk)
     if scale is None:
         scale = jnp.ones((m, 1), jnp.float32)
     else:
@@ -84,8 +81,7 @@ def sim_hist_pallas(
     grid = (m // bm, n // bn)
     return pl.pallas_call(
         functools.partial(
-            _kernel, n_bins=n_bins, exponent=exponent, floor=floor,
-            bin_chunk=bin_chunk,
+            _kernel, n_bins=n_bins, exponent=exponent, floor=floor, plan=plan,
         ),
         grid=grid,
         in_specs=[

@@ -7,16 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..padding import pad_rows, remove_pad_counts
 from .kernel import sim_hist_pallas
 from .ref import sim_hist_ref  # noqa: F401  (oracle for tests/benchmarks)
-
-
-def _pad(e, mult):
-    n = e.shape[0]
-    pad = (-n) % mult
-    if pad:
-        e = np.concatenate([e, np.zeros((pad, e.shape[1]), e.dtype)], axis=0)
-    return e, pad
 
 
 def sim_hist(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, block=256,
@@ -26,7 +19,9 @@ def sim_hist(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, block=256,
 
     Padded left rows get scale 0 (weight 0 -> bin 0); padded right columns
     pair with real rows at weight ``scale_i * floor**exponent``.  Both
-    contributions are computed exactly on the host and subtracted.
+    contributions are computed exactly on the host and subtracted
+    (``repro.kernels.padding`` — shared with ``sim_sweep`` so the two stay
+    bit-identical).
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -35,8 +30,8 @@ def sim_hist(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, block=256,
     n1, n2 = e1.shape[0], e2.shape[0]
     bm = min(block, max(8, 1 << (n1 - 1).bit_length()))
     bn = min(block, max(8, 1 << (n2 - 1).bit_length()))
-    e1p, p1 = _pad(e1, bm)
-    e2p, p2 = _pad(e2, bn)
+    e1p, p1 = pad_rows(e1, bm)
+    e2p, p2 = pad_rows(e2, bn)
     s = np.ones(n1, np.float32) if scale is None else np.asarray(scale, np.float32)
     sp = np.concatenate([s, np.zeros(p1, np.float32)]) if p1 else s
     counts = np.asarray(
@@ -45,12 +40,8 @@ def sim_hist(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, block=256,
             exponent=exponent, floor=floor, bm=bm, bn=bn, interpret=interpret,
         )
     ).astype(np.int64)
-    # remove padded-pair contributions
-    if p1:  # padded left rows: scale 0 -> weight 0 -> bin 0, full padded width
-        counts[0] -= p1 * e2p.shape[0]
-    if p2:  # real rows x padded cols: weight = scale_i * floor**exponent
-        wpad = s.astype(np.float64) * (floor**exponent)
-        fb = np.clip((wpad * n_bins).astype(np.int64), 0, n_bins - 1)
-        np.subtract.at(counts, fb, p2)
+    # remove padded-pair contributions (one global "block": bm >= n1)
+    remove_pad_counts(counts.reshape(1, -1), s, p1, p2, e2p.shape[0], n_bins,
+                      exponent, floor, bm=max(n1, 1))
     edges = np.linspace(0.0, 1.0, n_bins + 1)
     return counts, edges

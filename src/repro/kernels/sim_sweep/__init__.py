@@ -1,0 +1,1 @@
+from .ops import SweepOut, sim_sweep  # noqa: F401

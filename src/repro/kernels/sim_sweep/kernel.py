@@ -1,0 +1,246 @@
+"""Single-sweep stratification kernel: histogram + top-k + per-block bins.
+
+The streaming stratifier (``repro.core.stratify``) used to pay the blocked
+``E1 @ E2^T`` product twice — once for the weight histogram (``sim_hist``)
+that sets the top-m threshold, once for the per-row top-k (``sim_topk``) that
+collects the blocking regime — and a third partial time when over-threshold
+rows had to be rescanned.  This kernel emits everything the stratifier needs
+from **one** pass over the product:
+
+* per-(row-block, bin) count tiles — the global histogram is their exact
+  integer column sum, and the tiles tell the collector/sampler which row
+  blocks contain over-threshold mass so rescans touch only those blocks;
+* the running per-row top-k of the raw clipped similarity (bit-identical
+  semantics to ``sim_topk``: k static, maintained by k extract-max passes).
+
+The histogram half bins the *sampling weight* ``max(clip(s,0,1), floor) **
+exponent * scale`` (``scale`` is the per-left-row chain-prefix weight for
+k-way joins, exactly as in ``sim_hist``); the top-k half ranks the raw
+clipped score, which is monotone in the weight for any fixed row.
+
+Precision paths (static ``compute_dtype``): fp32 casts inputs to f32 before
+the MXU (bit-identical to the sim_hist/sim_topk pair); bf16 feeds the MXU
+bf16 inputs with f32 accumulation; the int8 variant (``sim_sweep_q_pallas``)
+takes per-row-quantised int8 embeddings + scales, accumulates in int32 on
+the MXU and rescales to f32 scores.
+
+Grid: (M/bm, N/bn); the N dimension iterates sequentially (TPU grid order),
+the count tile and top-k scratch are initialised at j == 0.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ..binning import bin_counts, plan_bins
+
+NEG = -1e30
+
+
+def _fused_epilogue(scores, s, bc_ref, vals_ref, idx_ref, run_v, run_i, *,
+                    n_bins, exponent, floor, k, bn, n_blocks, plan):
+    """Shared histogram + top-k epilogue over one (bm, bn) score block."""
+    j = pl.program_id(1)
+
+    # ---- histogram half: sampling-weight transform + per-block bin counts
+    w = jnp.clip(scores, 0.0, 1.0)
+    w = jnp.maximum(w, floor)
+    if exponent != 1.0:
+        w = w**exponent
+    w = w * s.astype(jnp.float32)  # (bm, 1) prefix weights broadcast
+    idx = jnp.clip((w * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    bc_ref[...] = bc_ref[...] + bin_counts(idx, n_bins, plan).reshape(1, n_bins)
+
+    # ---- top-k half: raw clipped scores, identical math to sim_topk
+    sc = jnp.clip(scores, 0.0, 1.0)
+    bm = sc.shape[0]
+    col = j * bn + jax.lax.broadcasted_iota(jnp.int32, (bm, bn), 1)
+
+    cand_v = jnp.concatenate([run_v[...], sc], axis=1)       # (bm, k+bn)
+    cand_i = jnp.concatenate([run_i[...], col], axis=1)
+    width = k + bn
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bm, width), 1)
+
+    new_v = jnp.full((bm, k), NEG, jnp.float32)
+    new_i = jnp.zeros((bm, k), jnp.int32)
+    for t in range(k):  # k extract-max passes (k is static and small)
+        m = jnp.max(cand_v, axis=1)                           # (bm,)
+        am = jnp.argmax(cand_v, axis=1).astype(jnp.int32)     # (bm,)
+        sel = iota == am[:, None]
+        picked_i = jnp.sum(jnp.where(sel, cand_i, 0), axis=1)
+        new_v = new_v.at[:, t].set(m)
+        new_i = new_i.at[:, t].set(picked_i)
+        cand_v = jnp.where(sel, NEG, cand_v)
+
+    run_v[...] = new_v
+    run_i[...] = new_i
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        vals_ref[...] = new_v
+        idx_ref[...] = new_i
+
+
+def _init(bc_ref, run_v, run_i):
+    @pl.when(pl.program_id(1) == 0)
+    def _():
+        bc_ref[...] = jnp.zeros_like(bc_ref)
+        run_v[...] = jnp.full_like(run_v, NEG)
+        run_i[...] = jnp.zeros_like(run_i)
+
+
+def _kernel(e1_ref, e2_ref, s_ref, bc_ref, vals_ref, idx_ref, run_v, run_i, *,
+            n_bins, exponent, floor, k, bn, n_blocks, plan, compute_dtype):
+    _init(bc_ref, run_v, run_i)
+    e1 = e1_ref[...].astype(compute_dtype)
+    e2 = e2_ref[...].astype(compute_dtype)
+    scores = jax.lax.dot_general(
+        e1, e2, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    _fused_epilogue(
+        scores, s_ref[...], bc_ref, vals_ref, idx_ref, run_v, run_i,
+        n_bins=n_bins, exponent=exponent, floor=floor, k=k, bn=bn,
+        n_blocks=n_blocks, plan=plan,
+    )
+
+
+def _kernel_q(q1_ref, q2_ref, s_ref, rs1_ref, rs2_ref, bc_ref, vals_ref,
+              idx_ref, run_v, run_i, *, n_bins, exponent, floor, k, bn,
+              n_blocks, plan):
+    _init(bc_ref, run_v, run_i)
+    acc = jax.lax.dot_general(
+        q1_ref[...], q2_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    scores = acc.astype(jnp.float32) * rs1_ref[...] * rs2_ref[...]
+    _fused_epilogue(
+        scores, s_ref[...], bc_ref, vals_ref, idx_ref, run_v, run_i,
+        n_bins=n_bins, exponent=exponent, floor=floor, k=k, bn=bn,
+        n_blocks=n_blocks, plan=plan,
+    )
+
+
+def _out_shapes(m, n_bins, k, bm):
+    return (
+        [
+            pl.BlockSpec((1, n_bins), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+        ],
+        [
+            jax.ShapeDtypeStruct((m // bm, n_bins), jnp.int32),
+            jax.ShapeDtypeStruct((m, k), jnp.float32),
+            jax.ShapeDtypeStruct((m, k), jnp.int32),
+        ],
+        [
+            pltpu.VMEM((bm, k), jnp.float32),
+            pltpu.VMEM((bm, k), jnp.int32),
+        ],
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bins", "exponent", "floor", "k", "bm", "bn",
+                     "bin_chunk", "interpret", "compute_dtype"),
+)
+def sim_sweep_pallas(
+    e1: jax.Array,
+    e2: jax.Array,
+    scale: jax.Array | None = None,
+    n_bins: int = 4096,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    k: int = 8,
+    bm: int = 256,
+    bn: int = 256,
+    bin_chunk: int = 128,
+    interpret: bool = True,
+    compute_dtype=jnp.float32,
+):
+    """Fused pass: returns (block_counts (M/bm, n_bins) i32, vals (M, k) f32,
+    idx (M, k) i32).  The global histogram is ``block_counts.sum(axis=0)``."""
+    m, d = e1.shape
+    n, _ = e2.shape
+    assert m % bm == 0 and n % bn == 0, "pad inputs to block multiples"
+    assert k <= bn
+    plan = plan_bins(n_bins, bm * bn, bin_chunk)
+    if scale is None:
+        scale = jnp.ones((m, 1), jnp.float32)
+    else:
+        scale = scale.reshape(m, 1).astype(jnp.float32)
+    grid = (m // bm, n // bn)
+    out_specs, out_shape, scratch = _out_shapes(m, n_bins, k, bm)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, n_bins=n_bins, exponent=exponent, floor=floor, k=k,
+            bn=bn, n_blocks=n // bn, plan=plan, compute_dtype=compute_dtype,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(e1, e2, scale)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_bins", "exponent", "floor", "k", "bm", "bn",
+                     "bin_chunk", "interpret"),
+)
+def sim_sweep_q_pallas(
+    q1: jax.Array,
+    q2: jax.Array,
+    rs1: jax.Array,
+    rs2: jax.Array,
+    scale: jax.Array | None = None,
+    n_bins: int = 4096,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    k: int = 8,
+    bm: int = 256,
+    bn: int = 256,
+    bin_chunk: int = 128,
+    interpret: bool = True,
+):
+    """int8 fast path: ``scores = (q1 @ q2^T) * rs1 * rs2^T`` with int32 MXU
+    accumulation.  ``rs1`` is (M, 1) and ``rs2`` is (1, N) f32 row scales."""
+    m, d = q1.shape
+    n, _ = q2.shape
+    assert m % bm == 0 and n % bn == 0, "pad inputs to block multiples"
+    assert k <= bn
+    plan = plan_bins(n_bins, bm * bn, bin_chunk)
+    if scale is None:
+        scale = jnp.ones((m, 1), jnp.float32)
+    else:
+        scale = scale.reshape(m, 1).astype(jnp.float32)
+    grid = (m // bm, n // bn)
+    out_specs, out_shape, scratch = _out_shapes(m, n_bins, k, bm)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_q, n_bins=n_bins, exponent=exponent, floor=floor, k=k,
+            bn=bn, n_blocks=n // bn, plan=plan,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(q1, q2, scale, rs1.reshape(m, 1), rs2.reshape(1, n))

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the fused sim_sweep kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def sim_sweep_ref(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, k=8,
+                  bm=None, scale=None):
+    """Returns (block_counts (M/bm, n_bins) i32, vals (M, k) f32,
+    idx (M, k) i32) — the same triple as ``sim_sweep_pallas``."""
+    m = e1.shape[0]
+    bm = m if bm is None else bm
+    scores = jnp.dot(
+        e1.astype(jnp.float32), e2.astype(jnp.float32).T,
+        preferred_element_type=jnp.float32,
+    )
+    w = jnp.clip(scores, 0.0, 1.0)
+    w = jnp.maximum(w, floor)
+    if exponent != 1.0:
+        w = w**exponent
+    if scale is not None:
+        w = w * scale.reshape(-1, 1).astype(jnp.float32)
+    idx = jnp.clip((w * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    blk = jnp.arange(m, dtype=jnp.int32) // bm
+    bc = jnp.zeros((m // bm, n_bins), jnp.int32).at[
+        jnp.broadcast_to(blk[:, None], idx.shape).reshape(-1),
+        idx.reshape(-1),
+    ].add(1)
+    vals, top_i = jax.lax.top_k(jnp.clip(scores, 0.0, 1.0), k)
+    return bc, vals, top_i.astype(jnp.int32)

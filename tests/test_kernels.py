@@ -99,6 +99,104 @@ def test_sim_topk_ops_padding_and_validity():
 
 
 # ----------------------------------------------------------------------------
+# sim_sweep (fused histogram + top-k + per-block count tiles)
+# ----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,d,k", [(64, 64, 16, 4), (128, 64, 32, 8),
+                                     (100, 70, 16, 8)])
+def test_sim_sweep_bit_identical_to_two_kernel_path(m, n, d, k):
+    """The fused sweep must reproduce the sequential sim_hist + sim_topk
+    outputs bit-for-bit at fp32, and its count tiles must column-sum to the
+    global histogram exactly."""
+    from repro.kernels.sim_hist import sim_hist
+    from repro.kernels.sim_sweep import sim_sweep
+    from repro.kernels.sim_topk import sim_topk
+
+    rng = np.random.default_rng(10)
+    e1 = normalize(rng.standard_normal((m, d)))
+    e2 = normalize(rng.standard_normal((n, d)))
+    sw = sim_sweep(e1, e2, n_bins=256, k=k)
+    counts, edges = sim_hist(e1, e2, n_bins=256)
+    vals, idx, valid = sim_topk(e1, e2, k=k)
+    np.testing.assert_array_equal(sw.counts, counts)
+    np.testing.assert_array_equal(sw.vals, vals)
+    np.testing.assert_array_equal(sw.idx, idx)
+    np.testing.assert_array_equal(sw.valid, valid)
+    np.testing.assert_array_equal(sw.block_counts.sum(axis=0), sw.counts)
+    assert int(sw.counts.sum()) == m * n
+
+
+def test_sim_sweep_scale_matches_sim_hist():
+    """The per-row scale operand (k-way chain-prefix weights) must bin
+    identically to sim_hist's."""
+    from repro.kernels.sim_hist import sim_hist
+    from repro.kernels.sim_sweep import sim_sweep
+
+    rng = np.random.default_rng(11)
+    e1 = normalize(rng.standard_normal((96, 16)))
+    e2 = normalize(rng.standard_normal((80, 16)))
+    scale = rng.random(96).astype(np.float32)
+    sw = sim_sweep(e1, e2, n_bins=128, exponent=0.5, scale=scale)
+    counts, _ = sim_hist(e1, e2, n_bins=128, exponent=0.5, scale=scale)
+    np.testing.assert_array_equal(sw.counts, counts)
+
+
+def test_sim_sweep_matches_ref():
+    from repro.kernels.sim_sweep.kernel import sim_sweep_pallas
+    from repro.kernels.sim_sweep.ref import sim_sweep_ref
+
+    rng = np.random.default_rng(12)
+    e1 = rand_emb(rng, 128, 16, jnp.float32)
+    e2 = rand_emb(rng, 64, 16, jnp.float32)
+    bc, vals, idx = sim_sweep_pallas(e1, e2, n_bins=256, k=4, bm=64, bn=64,
+                                     interpret=True)
+    rbc, rvals, ridx = sim_sweep_ref(e1, e2, n_bins=256, k=4, bm=64)
+    np.testing.assert_array_equal(np.asarray(bc), np.asarray(rbc))
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), atol=1e-6)
+    distinct = np.abs(np.diff(np.asarray(rvals), axis=1)) > 1e-5
+    same = np.asarray(idx)[:, :-1][distinct] == np.asarray(ridx)[:, :-1][distinct]
+    assert same.mean() > 0.99
+
+
+@pytest.mark.parametrize("precision", ["bf16", "int8"])
+def test_sim_sweep_low_precision_within_tolerance(precision):
+    """bf16/int8 fast paths: exact total mass, CDF within the documented
+    per-precision tolerance of the fp32 histogram."""
+    from repro.configs.joinml_embedder import EMBEDDING_PRECISIONS
+    from repro.kernels.sim_sweep import sim_sweep
+
+    rng = np.random.default_rng(13)
+    e1 = normalize(rng.standard_normal((100, 32)))
+    e2 = normalize(rng.standard_normal((90, 32)))
+    ref = sim_sweep(e1, e2, n_bins=256, k=8)
+    low = sim_sweep(e1, e2, n_bins=256, k=8, precision=precision)
+    assert int(low.counts.sum()) == 100 * 90
+    dev = np.abs(
+        np.cumsum(ref.counts) - np.cumsum(low.counts)
+    ) / ref.counts.sum()
+    assert dev.max() <= EMBEDDING_PRECISIONS[precision].max_cdf_shift
+    # top-k of the lowp scores still finds (nearly) the same neighbours
+    hit = np.mean([
+        len(set(a) & set(b)) / len(a)
+        for a, b in zip(low.idx.tolist(), ref.idx.tolist())
+    ])
+    assert hit > 0.9
+
+
+def test_quantize_rows_int8_roundtrip():
+    from repro.core.similarity import dequantize_rows_int8, quantize_rows_int8
+
+    rng = np.random.default_rng(14)
+    e = normalize(rng.standard_normal((50, 32)))
+    e[7] = 0.0  # padding-style all-zero row
+    q, rs = quantize_rows_int8(e)
+    assert q.dtype == np.int8 and rs.shape == (50, 1)
+    back = dequantize_rows_int8(q, rs)
+    assert np.abs(back - e).max() <= (np.abs(e).max(axis=1) / 127).max() * 0.51
+    assert (q[7] == 0).all() and rs[7] == 0.0
+
+
+# ----------------------------------------------------------------------------
 # flash_attention
 # ----------------------------------------------------------------------------
 
