@@ -1,0 +1,133 @@
+"""Persistent stratification index: warm-query speedup + delta maintenance
+cost (``core.index`` / ``checkpoint.index_io``).
+
+Rows:
+
+* ``index_query_cold`` — full streaming stratification (the fused sweep +
+  threshold + collection), what every query paid before the index existed;
+* ``index_query_warm`` — the same stratification hydrating a resident
+  :class:`~repro.core.index.IndexArtifact`.  **Gate** (asserted): warm must
+  be >= 5x faster than cold — the whole point of build-once/query-many;
+* ``index_load_mmap`` — save + mmap-load + hydrate from disk (the serving
+  cold-start path: file-open cost, not a table read);
+* ``index_append_delta`` — :func:`~repro.core.index.append_rows` for a
+  small row delta vs ``index_rebuild_full`` — a cold rebuild of the grown
+  tables.  **Gate** (asserted): the append costs at most half the rebuild
+  (the sweep it runs is ``delta/(n+delta)`` of the rebuild's, so well under
+  half even with fixed overheads) — maintenance is proportional to the
+  delta, never the table.
+
+Strata equality between the cold and warm paths is asserted on every
+measured repetition, so the speedup numbers can never come from computing
+something different.  Run via ``python -m benchmarks.run --only index``;
+the CI index job uploads the ``--json`` artifact next to the built index.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core import BASConfig, build_index
+from repro.core.similarity import normalize
+from repro.core.stratify import stratify_streaming
+
+from .common import row
+
+
+def _tables(n1: int, n2: int, d: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return (
+        normalize(rng.standard_normal((n1, d))).astype(np.float32),
+        normalize(rng.standard_normal((n2, d))).astype(np.float32),
+    )
+
+
+def _time(fn, reps: int):
+    fn()                                   # warmup (jit, page cache)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    return (time.perf_counter() - t0) / reps, out
+
+
+def run(fast: bool = True, smoke: bool = False):
+    rows = []
+    n = 384 if smoke else (768 if fast else 2048)
+    delta = max(n // 16, 8)
+    n_bins = 1024
+    budget = 4 * n
+    cfg = BASConfig()
+    reps = 3 if smoke else 5
+    e1, e2 = _tables(n, n, 32, seed=0)
+
+    art = build_index([e1, e2], n_bins=n_bins, exponent=cfg.weight_exponent,
+                      floor=cfg.weight_floor, use_kernel=cfg.use_kernel)
+
+    def strat_cold():
+        return stratify_streaming(e1, e2, cfg.alpha, budget, cfg,
+                                  n_bins=n_bins, use_kernel=cfg.use_kernel)
+
+    def strat_warm():
+        return stratify_streaming(e1, e2, cfg.alpha, budget, cfg,
+                                  n_bins=n_bins, artifact=art)
+
+    dt_cold, s_cold = _time(strat_cold, reps)
+    dt_warm, s_warm = _time(strat_warm, reps)
+    assert np.array_equal(s_cold.order, s_warm.order), (
+        "hydrated stratification diverged from the fresh sweep"
+    )
+    speedup = dt_cold / max(dt_warm, 1e-12)
+    assert speedup >= 5.0, (
+        f"warm stratify only {speedup:.1f}x faster than cold sweep "
+        f"({dt_warm*1e3:.1f}ms vs {dt_cold*1e3:.1f}ms)"
+    )
+    rows.append(row("index_query_cold", dt_cold,
+                    f"n={n};kernel={art.kernel}"))
+    rows.append(row("index_query_warm", dt_warm,
+                    f"warm_speedup_x={speedup:.1f}"))
+
+    # serving cold start: artifact save + mmap load + hydrate
+    from repro.checkpoint.index_io import load_index, save_index
+
+    with tempfile.TemporaryDirectory() as root:
+        save_index(root, art)
+
+        def load_hydrate():
+            return load_index(root, art.key).sweep_info()
+
+        dt_load, info = _time(load_hydrate, reps)
+        assert np.array_equal(np.asarray(info.counts), art.counts)
+        rows.append(row("index_load_mmap", dt_load,
+                        f"bytes={art.nbytes}"))
+
+    # delta maintenance: append `delta` rows to the right table vs a cold
+    # rebuild of the grown pair — the delta sweep is n x delta instead of
+    # n x (n + delta)
+    from repro.core import append_rows
+
+    extra = _tables(delta, delta, 32, seed=7)[0]
+    grown = [e1, np.concatenate([e2, extra])]
+
+    dt_append, art2 = _time(
+        lambda: append_rows(art, 1, extra, use_kernel=cfg.use_kernel), reps)
+    dt_rebuild, art_full = _time(
+        lambda: build_index(grown, n_bins=n_bins,
+                            exponent=cfg.weight_exponent,
+                            floor=cfg.weight_floor,
+                            use_kernel=cfg.use_kernel), reps)
+    assert np.array_equal(art2.block_counts, art_full.block_counts), (
+        "incremental append diverged from full recompute"
+    )
+    frac = dt_append / max(dt_rebuild, 1e-12)
+    assert frac <= 0.5, (
+        f"append of {delta}/{n + delta} rows cost {frac:.2f}x a full "
+        f"rebuild — maintenance is not proportional to the delta"
+    )
+    rows.append(row("index_append_delta", dt_append,
+                    f"delta_rows={delta};delta_blocks="
+                    f"{art2.stats['last_delta_blocks']}"))
+    rows.append(row("index_rebuild_full", dt_rebuild,
+                    f"append_cost_frac={frac:.3f}"))
+    return rows

@@ -23,8 +23,12 @@ framing, one round trip per flush, and per-connection handler threads.
 
 Rows: ``service_{serial|async|tcp}_q{C}`` with labels/sec plus p50/p99
 per-query latency; async/tcp rows add the speedup over serial and the
-window/backend-call counts.  Run via ``python -m benchmarks.run --only
-service`` (``--json`` for the artifact CI uploads).
+window/backend-call counts.  ``service_index_{cold|warm}`` runs repeat
+streaming queries through a service-resident
+:class:`~repro.core.index.IndexStore` and surfaces the index counters the
+service's ``stats()`` now carries (``index_hit`` / ``index_build_ms`` /
+``delta_blocks``).  Run via ``python -m benchmarks.run --only service``
+(``--json`` for the artifact CI uploads).
 
 CI gates (asserted here, exercised by the workflow's smoke-bench job with
 ``--smoke``): (a) the in-process service reaches >= 2x serial labels/sec at
@@ -256,6 +260,54 @@ def run(fast: bool = True, smoke: bool = False):
             f"segments_per_window={stats['segments_per_window']};"
             f"backend_calls={stats['backend_calls']}",
         ))
+    # --- index-aware serving ------------------------------------------------
+    # Repeat streaming queries through a service-resident IndexStore: the
+    # first query builds the stratification artifact (index_miss/index_build),
+    # every later one hydrates it (index_hit) — the service's stats() now
+    # carries the store counters, which is what these rows surface.
+    from repro.core import IndexStore
+    from repro.core.bas_streaming import run_bas_streaming
+
+    store = IndexStore(max_bytes=1 << 28)
+    with OracleService(workers=1, max_wait_ms=4.0, min_shard=4096,
+                       index_store=store) as svc:
+
+        def served_query(seed: int):
+            # fresh oracle per run: ModelOracle sampling state carries across
+            # runs, and this comparison is about the index, not oracle reuse
+            oracle = ModelOracle(scorer, threshold=0.5)
+            svc.attach(oracle)
+            q = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=oracle,
+                      budget=budget)
+            t0 = time.perf_counter()
+            try:
+                return (run_bas_streaming(q, cfg, seed=seed,
+                                          index_store=store),
+                        time.perf_counter() - t0)
+            finally:
+                svc.detach(oracle)
+
+        res_cold, t_cold = served_query(100)
+        res_warm, t_warm = served_query(100)
+        # hydration must not change what the query computes
+        assert res_warm.estimate == res_cold.estimate, (
+            "index-hydrated streaming estimate diverged from the cold build"
+        )
+        stats = svc.stats()
+    assert stats["index_miss"] == 1 and stats["index_hit"] == 1, stats
+    rows.append(row(
+        "service_index_cold", t_cold,
+        f"index_miss={stats['index_miss']};"
+        f"index_build={stats['index_build']};"
+        f"index_build_ms={stats['index_build_ms']:.1f}",
+    ))
+    rows.append(row(
+        "service_index_warm", t_warm,
+        f"index_hit={stats['index_hit']};"
+        f"index_bytes={stats['index_bytes']};"
+        f"delta_blocks={stats['delta_blocks']}",
+    ))
+
     if 16 in speedups:
         # acceptance headline: cross-query coalescing must at least halve the
         # serial path's cost at 16 concurrent queries

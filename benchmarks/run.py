@@ -28,6 +28,7 @@ MODULES = {
     "kernels": "benchmarks.bench_kernels",          # Pallas vs ref
     "oracle": "benchmarks.bench_oracle",            # batched oracle layer
     "service": "benchmarks.bench_service",          # async oracle service
+    "index": "benchmarks.bench_index",              # persistent strat index
 }
 
 
@@ -75,10 +76,17 @@ def main() -> None:
     keys = list(MODULES) if not args.only else args.only.split(",")
     print("name,us_per_call,derived")
     failures = []
+    try:
+        import jax
+
+        backend = jax.default_backend()
+    except Exception:  # noqa: BLE001 — metadata only, never fail the run
+        backend = "unknown"
     report: dict = {
         "profile": ("smoke" if args.smoke else "full" if args.full else "fast"),
         "python": platform.python_version(),
         "platform": platform.platform(),
+        "backend": backend,
         "modules": {},
     }
     for key in keys:

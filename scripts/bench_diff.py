@@ -16,16 +16,33 @@ CI runs it on CPU, where the Pallas kernels execute in interpret mode and
 wall times are noise-dominated; the diff output still lands in the job log
 and the JSON artifact, so drift is visible before a TPU run gates on it.
 
+Certification: the run report records which backend produced the timings
+(``benchmarks/run.py`` emits ``backend``).  When that backend is ``cpu`` or
+``unknown`` — interpret-mode numbers — every diff line carries an explicit
+``uncertified: compiled-only gate`` label, so a green CPU diff can never be
+read as a certified perf result.  ``--require-compiled`` turns the label
+into a hard failure: the diff exits non-zero (even under ``--warn-only``)
+unless the results came from a compiled backend — this is the flag the
+eventual TPU perf job sets so only compiled runs gate merges.
+
 Usage::
 
     python scripts/bench_diff.py RESULTS.json BASELINE.json [BASELINE2.json ...]
-        [--threshold 1.5] [--warn-only]
+        [--threshold 1.5] [--warn-only] [--require-compiled]
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+# backends whose timings certify a perf gate; anything else (cpu interpret
+# mode, or a report too old to carry the field) is labelled uncertified
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def certified_backend(report: dict) -> bool:
+    return str(report.get("backend", "unknown")).lower() in COMPILED_BACKENDS
 
 
 def _rows(report: dict, only_modules=None) -> dict:
@@ -69,22 +86,37 @@ def main() -> None:
                     help="slowdown ratio that counts as a regression")
     ap.add_argument("--warn-only", action="store_true",
                     help="report regressions but exit 0 (CPU/interpret CI)")
+    ap.add_argument("--require-compiled", action="store_true",
+                    help="fail unless the results were produced by a "
+                         "compiled backend (tpu/gpu) — the certified perf "
+                         "gate; overrides --warn-only")
     args = ap.parse_args()
 
     with open(args.results) as f:
         current = json.load(f)
+    backend = str(current.get("backend", "unknown"))
+    certified = certified_backend(current)
+    tag = "" if certified else " [uncertified: compiled-only gate]"
+    if not certified:
+        print(f"[bench-diff] backend={backend}: interpret-mode timings — "
+              f"every row below is uncertified (compiled-only gate)")
     all_regressions = []
     for path in args.baselines:
         with open(path) as f:
             baseline = json.load(f)
         regressions, notes = diff(current, baseline, args.threshold)
         print(f"[bench-diff] vs {path}: {len(regressions)} regression(s), "
-              f"{len(notes)} row(s) in range")
+              f"{len(notes)} row(s) in range{tag}")
         for line in notes:
-            print(f"[bench-diff]   ok   {line}")
+            print(f"[bench-diff]   ok   {line}{tag}")
         for line in regressions:
-            print(f"[bench-diff]   SLOW {line}", file=sys.stderr)
+            print(f"[bench-diff]   SLOW {line}{tag}", file=sys.stderr)
         all_regressions += regressions
+    if args.require_compiled and not certified:
+        print(f"[bench-diff] FAIL: --require-compiled but results backend "
+              f"is {backend!r} (need one of {', '.join(COMPILED_BACKENDS)})",
+              file=sys.stderr)
+        raise SystemExit(2)
     if all_regressions and not args.warn_only:
         raise SystemExit(1)
     if all_regressions:

@@ -22,6 +22,14 @@ from .oracle import (  # noqa: F401
 from .bas import run_bas, run_exact, run_stratified_pipeline  # noqa: F401
 from .bas_streaming import run_bas_streaming  # noqa: F401
 from .dispatch import choose_path, dense_weight_bytes, run_auto  # noqa: F401
+from .index import (  # noqa: F401
+    IndexArtifact,
+    IndexStore,
+    append_rows,
+    artifact_key,
+    build_index,
+    table_fingerprint,
+)
 from .baselines import (  # noqa: F401
     calibrate_threshold,
     run_abae,

@@ -97,9 +97,20 @@ def run_bas_streaming(
     use_kernel: Optional[bool] = None,
     use_sweep: Optional[bool] = None,
     precision: Optional[str] = None,
+    artifact=None,
+    index_store=None,
 ) -> QueryResult:
     """k-way streaming BAS.  Same estimator/CI machinery as the dense path
-    (all aggregates); the cross product is never materialised."""
+    (all aggregates); the cross product is never materialised.
+
+    ``artifact`` (:class:`repro.core.index.IndexArtifact`) stratifies from
+    a persisted sweep instead of recomputing it — bit-identical at fp32.
+    ``index_store`` (:class:`repro.core.index.IndexStore`) resolves the
+    artifact by content key, building (once, shared across concurrent
+    queries) on miss; ignored when ``artifact`` is given.  Either way the
+    index accounting lands in ``QueryResult.detail["stratify"]``
+    (``index_hit``, ``index_build_ms``, ``delta_blocks``,
+    ``index_version``)."""
     cfg = cfg or BASConfig()
     if use_kernel is None:
         use_kernel = cfg.use_kernel
@@ -122,9 +133,21 @@ def run_bas_streaming(
 
     # ---- streaming stratification (single fused sweep) -------------------
     t0 = time.perf_counter()
+    index_hit = None
+    index_build_ms = None
+    if artifact is None and index_store is not None:
+        artifact, index_hit = index_store.get_or_build(
+            embeddings, n_bins=n_bins, exponent=exp, floor=floor,
+            precision=precision, use_kernel=use_kernel,
+        )
+        if not index_hit:
+            index_build_ms = (time.perf_counter() - t0) * 1e3
+    elif artifact is not None:
+        index_hit = True
     strat = stratify_streaming_chain(
         embeddings, cfg.alpha, query.budget, cfg, n_bins=n_bins,
         use_kernel=use_kernel, use_sweep=use_sweep, precision=precision,
+        artifact=artifact,
     )
     k = strat.num_strata
     sizes = strat.stratum_sizes()
@@ -191,6 +214,13 @@ def run_bas_streaming(
             kernel=strat.sweep.kernel, precision=strat.sweep.precision,
             **strat.sweep.stats,
         )
+    if artifact is not None:
+        meta["path"] = "index"
+        meta["index_hit"] = bool(index_hit)
+        meta["index_version"] = artifact.version
+        meta["delta_blocks"] = int(artifact.stats.get("delta_blocks", 0))
+        if index_build_ms is not None:
+            meta["index_build_ms"] = round(index_build_ms, 2)
     space = StratifiedSpace(
         sizes=sizes,
         weight_sums=weight_sums,

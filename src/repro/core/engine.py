@@ -147,17 +147,25 @@ class JoinMLEngine:
     supplies the Oracle for a given join predicate (e.g. a ModelOracle bound to
     the serving stack, or an ArrayOracle in tests).  ``nl_condition`` is a
     single string for one predicate, or the list of per-edge predicates when
-    the query conjoins ``NL('...') AND NL('...')`` (one per join edge)."""
+    the query conjoins ``NL('...') AND NL('...')`` (one per join edge).
+
+    ``index_store`` (:class:`repro.core.index.IndexStore`) makes repeat and
+    concurrent queries on the same registered tables stratify from one
+    persistent sweep artifact: ``method="auto"`` routes through a fresh
+    resident artifact when one exists, and ``method="bas-streaming"``
+    resolves (building on first miss) through the store."""
 
     def __init__(
         self,
         catalog: Catalog,
         oracle_factory: Callable[[Union[str, list[str]], list[str]], Oracle],
         cfg: Optional[BASConfig] = None,
+        index_store=None,
     ):
         self.catalog = catalog
         self.oracle_factory = oracle_factory
         self.cfg = cfg or BASConfig()
+        self.index_store = index_store
 
     def build(self, sql: str, budget: Optional[int] = None,
               confidence: Optional[float] = None) -> Query:
@@ -185,11 +193,14 @@ class JoinMLEngine:
         ``"bas"`` / ``"bas-streaming"`` force a path explicitly."""
         q = self.build(sql, budget, confidence)
         if method == "auto":
-            return dispatch.run_auto(q, self.cfg, seed=seed)
+            return dispatch.run_auto(q, self.cfg, seed=seed,
+                                     index_store=self.index_store)
         if method == "bas":
             return bas.run_bas(q, self.cfg, seed=seed)
         if method == "bas-streaming":
-            return bas_streaming.run_bas_streaming(q, self.cfg, seed=seed)
+            return bas_streaming.run_bas_streaming(
+                q, self.cfg, seed=seed, index_store=self.index_store
+            )
         if method == "wwj":
             return baselines.run_wwj(q, self.cfg, seed=seed)
         if method == "uniform":

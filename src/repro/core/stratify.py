@@ -278,6 +278,7 @@ def sweep_pass(
     precision: str = "fp32",
     tolerance: Optional[float] = None,
     k_top: int = TOPK_CANDIDATES,
+    artifact=None,
 ) -> SweepInfo:
     """One pass over the two-table product: histogram + count tiles + top-k.
 
@@ -289,9 +290,18 @@ def sweep_pass(
     flag.  Low-precision sweeps are tolerance-checked: the first row block
     is re-binned at fp32 and the whole sweep falls back to fp32 when the
     CDF deviation exceeds ``tolerance``.
+
+    ``artifact`` (a :class:`repro.core.index.IndexArtifact`) skips the pass
+    entirely and hydrates the stored sweep instead — bit-identical at fp32
+    because the artifact is a prior pass's output; the artifact must cover
+    exactly these tables and this binning config (checked).
     """
     from .similarity import pair_weights  # local import to avoid cycle
 
+    if artifact is not None:
+        artifact.check(sizes=(e1.shape[0], e2.shape[0]), n_bins=n_bins,
+                       exponent=exponent, floor=floor)
+        return artifact.sweep_info()
     tolerance = _precision_tolerance(precision, tolerance)
     if use_kernel:
         out = _kernel_sweep(e1, e2, n_bins, exponent, floor,
@@ -363,19 +373,26 @@ def sweep_pass_chain(
     precision: str = "fp32",
     tolerance: Optional[float] = None,
     k_top: int = TOPK_CANDIDATES,
+    artifact=None,
 ) -> SweepInfo:
     """k-way chain sweep: the geometric-mean chain weight W(t)**(1/(k-1)) is
     histogrammed over prefix blocks; each prefix block contributes one
     count tile, so chain collection can skip prefix blocks with no
-    over-threshold mass.  At k=2 this is exactly :func:`sweep_pass`."""
+    over-threshold mass.  At k=2 this is exactly :func:`sweep_pass`.
+    ``artifact`` hydrates a stored sweep instead of computing (see
+    :func:`sweep_pass`)."""
     from .similarity import pair_weights
 
     k = len(embeddings)
     if k == 2:
         return sweep_pass(
             embeddings[0], embeddings[1], n_bins, exponent, floor, block,
-            use_kernel, precision, tolerance, k_top=k_top,
+            use_kernel, precision, tolerance, k_top=k_top, artifact=artifact,
         )
+    if artifact is not None:
+        artifact.check(sizes=tuple(e.shape[0] for e in embeddings),
+                       n_bins=n_bins, exponent=exponent, floor=floor)
+        return artifact.sweep_info()
     tolerance = _precision_tolerance(precision, tolerance)
     root = 1.0 / (k - 1)
     e_prev, e_last = embeddings[-2], embeddings[-1]
@@ -731,6 +748,7 @@ def stratify_streaming_chain(
     use_kernel: bool = False,
     use_sweep: Optional[bool] = None,
     precision: Optional[str] = None,
+    artifact=None,
 ) -> Stratification:
     """Histogram-thresholded stratification of a k-way chain; equal-size
     strata like the dense path but the threshold (hence membership at the
@@ -743,7 +761,10 @@ def stratify_streaming_chain(
     single-sweep path; ``use_sweep=False`` keeps the two-pass
     histogram-then-collect baseline, which is bit-identical at fp32.
     ``precision`` opts the sweep into the bf16/int8 fast path (default from
-    ``cfg.sweep_precision``), tolerance-gated via ``cfg.sweep_tolerance``."""
+    ``cfg.sweep_precision``), tolerance-gated via ``cfg.sweep_tolerance``.
+    ``artifact`` (:class:`repro.core.index.IndexArtifact`) hydrates a
+    persisted sweep instead of computing one — threshold selection and
+    collection run unchanged against the loaded tiles/top-k."""
     if use_sweep is None:
         use_sweep = cfg.use_sweep
     if precision is None:
@@ -757,7 +778,13 @@ def stratify_streaming_chain(
     if m == 0:
         return Stratification(np.empty(0, np.int64), np.zeros(1, np.int64), n)
     sweep = None
-    if use_sweep:
+    if artifact is not None:
+        sweep = sweep_pass_chain(
+            embeddings, n_bins, cfg.weight_exponent, cfg.weight_floor,
+            artifact=artifact,
+        )
+        counts, edges = sweep.counts, sweep.edges
+    elif use_sweep:
         # collection only consults the top-k when the blocking regime is
         # sparse per row (see collect_top); otherwise skip its epilogue cost
         n1 = embeddings[0].shape[0]
@@ -797,9 +824,10 @@ def stratify_streaming(
     use_kernel: bool = False,
     use_sweep: Optional[bool] = None,
     precision: Optional[str] = None,
+    artifact=None,
 ) -> Stratification:
     """Two-table wrapper of :func:`stratify_streaming_chain`."""
     return stratify_streaming_chain(
         [e1, e2], alpha, budget, cfg, n_bins=n_bins, use_kernel=use_kernel,
-        use_sweep=use_sweep, precision=precision,
+        use_sweep=use_sweep, precision=precision, artifact=artifact,
     )

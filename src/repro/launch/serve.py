@@ -29,6 +29,23 @@ dimension over the host mesh (``launch.sharding.data_parallel``).
 (:class:`repro.serve.transport.OracleServiceServer`); ``--mode client``
 runs the same BAS queries through :class:`repro.serve.transport.RemoteOracle`
 — plan/commit stay client-side, only labelling crosses the network.
+
+Index maintenance modes (no model; see ``repro.core.index``)::
+
+    # one cold sweep -> content-addressed artifact under --index-root
+    ... serve --mode build-index --index-root runs/index --n-side 256
+    # append rows to one table, version-bumped delta maintenance
+    ... serve --mode refresh-index --index-root runs/index \
+        --append-rows 32 --append-table 1
+
+``--mode build-index`` builds a persistent stratification index (one fused
+sweep) over ``--tables`` (comma-separated ``.npy`` embedding files) or the
+synthetic demo pair, and saves it atomically.  ``--mode refresh-index``
+loads the newest stored version and applies incremental ``append_rows``
+maintenance — cost proportional to the appended rows, version bumped so
+stale readers detect drift.  Services point an
+:class:`repro.core.index.IndexStore` at the same ``--index-root`` to serve
+warm queries from these artifacts.
 """
 from __future__ import annotations
 
@@ -101,6 +118,64 @@ def _run_client(args) -> None:
               f"ci=[{r.ci.lo:.1f}, {r.ci.hi:.1f}] calls={oracles[i].calls}")
 
 
+def _index_tables(args) -> list:
+    """Embedding tables for the index modes: ``--tables a.npy,b.npy`` or the
+    same seeded synthetic pair the demo server scores."""
+    if args.tables:
+        return [np.load(p.strip()) for p in args.tables.split(",")]
+    from repro.data import make_clustered_tables
+
+    n = args.n_side
+    ds = make_clustered_tables(n, n, n_entities=max(2 * n // 3, 4),
+                               noise=0.4, seed=0)
+    return [np.asarray(e, np.float32) for e in ds.spec().embeddings]
+
+
+def _run_build_index(args) -> None:
+    """``--mode build-index``: one cold sweep -> saved artifact."""
+    from repro.checkpoint.index_io import save_index
+    from repro.core.index import build_index
+
+    embs = _index_tables(args)
+    t0 = time.time()
+    art = build_index(embs, n_bins=args.bins, precision=args.precision)
+    path = save_index(args.index_root, art)
+    print(f"[index] built key={art.key[:16]}... v{art.version} over tables "
+          f"{art.sizes} in {time.time()-t0:.2f}s "
+          f"(kernel={art.kernel}, {art.nbytes/1e6:.1f} MB) -> {path}")
+
+
+def _run_refresh_index(args) -> None:
+    """``--mode refresh-index``: incremental append maintenance on the
+    newest stored version (delta-proportional cost, version bump)."""
+    from repro.checkpoint.index_io import list_indexes, load_index, save_index
+    from repro.core.index import append_rows
+    from repro.core.similarity import normalize
+
+    key = args.key
+    if not key:
+        stored = list_indexes(args.index_root)
+        if not stored:
+            raise SystemExit(f"[index] nothing stored under {args.index_root}")
+        # newest lineage: append_rows re-keys (content-addressing) but keeps
+        # bumping version, so the highest version is the latest refresh
+        key = max(stored, key=lambda s: s["version"])["key"]
+    art = load_index(args.index_root, key)
+    if args.append_file:
+        new_rows = np.load(args.append_file)
+    else:
+        rng = np.random.default_rng(art.version)
+        d = art.embeddings[args.append_table].shape[1]
+        new_rows = normalize(rng.standard_normal((args.append_rows, d)))
+    t0 = time.time()
+    art2 = append_rows(art, args.append_table, new_rows)
+    path = save_index(args.index_root, art2)
+    print(f"[index] refreshed key={art.key[:16]}... -> {art2.key[:16]}... "
+          f"v{art.version}->v{art2.version}: +{len(new_rows)} rows on table "
+          f"{args.append_table}, {art2.stats['last_delta_blocks']} delta "
+          f"tile(s) in {time.time()-t0:.2f}s -> {path}")
+
+
 def _run_fleet_role(args, scorer) -> None:
     """``--mode server|worker``: expose the scorer over TCP.  A worker is a
     server with no downstream hosts; ``--worker-hosts`` turns a server into
@@ -139,7 +214,8 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b")
     ap.add_argument("--mode",
                     choices=("decode", "score", "service",
-                             "server", "client", "worker"),
+                             "server", "client", "worker",
+                             "build-index", "refresh-index"),
                     default="decode")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--pairs", type=int, default=64)
@@ -167,12 +243,38 @@ def main():
                     help="server/client mode: synthetic table side length")
     ap.add_argument("--duration", type=float, default=0.0,
                     help="server/worker mode: seconds to serve (0 = forever)")
+    ap.add_argument("--index-root", default="runs/index",
+                    help="build-index/refresh-index mode: artifact store dir")
+    ap.add_argument("--tables", default="",
+                    help="build-index mode: comma-separated .npy embedding "
+                         "files (default: synthetic --n-side pair)")
+    ap.add_argument("--bins", type=int, default=4096,
+                    help="build-index mode: sweep histogram bins")
+    ap.add_argument("--precision", default="fp32",
+                    help="build-index mode: sweep precision "
+                         "(fp32 | bf16 | int8)")
+    ap.add_argument("--key", default="",
+                    help="refresh-index mode: content key (default: newest "
+                         "stored index)")
+    ap.add_argument("--append-rows", type=int, default=32,
+                    help="refresh-index mode: synthetic rows to append")
+    ap.add_argument("--append-table", type=int, default=1, choices=(0, 1),
+                    help="refresh-index mode: table receiving the rows")
+    ap.add_argument("--append-file", default="",
+                    help="refresh-index mode: .npy of rows to append "
+                         "(overrides --append-rows)")
     args = ap.parse_args()
 
     if args.mode == "client":
         # the client holds no model — plan/commit are local, labelling is
         # remote — so skip scorer construction entirely
         _run_client(args)
+        return
+    if args.mode == "build-index":
+        _run_build_index(args)
+        return
+    if args.mode == "refresh-index":
+        _run_refresh_index(args)
         return
 
     import jax

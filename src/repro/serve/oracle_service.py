@@ -166,10 +166,20 @@ class OracleService:
         Smallest shard worth its own worker; groups below ``2 * min_shard``
         rows execute unsharded (sharding a padded scorer batch too finely
         wastes pad rows).
+    index_store:
+        Optional :class:`repro.core.index.IndexStore` shared by the queries
+        served here: concurrent queries on the same table pair stratify from
+        one resident artifact instead of each paying the sweep (route it via
+        ``dispatch.run_auto(index_store=service.index_store)`` or
+        ``JoinMLEngine(index_store=...)``).  The service owns no routing —
+        it just gives the store a service-scoped home and merges its
+        counters into :meth:`stats`.
     """
 
     def __init__(self, workers: int = 1, max_batch: int = 8192,
-                 max_wait_ms: float = 4.0, min_shard: int = 256):
+                 max_wait_ms: float = 4.0, min_shard: int = 256,
+                 index_store=None):
+        self.index_store = index_store
         self.workers = max(int(workers), 1)
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) / 1e3
@@ -337,7 +347,7 @@ class OracleService:
         self.close()
 
     def stats(self) -> dict:
-        return {
+        out = {
             "windows": self.windows,
             "segments": self.segments,
             "backend_calls": self.backend_calls,
@@ -349,6 +359,9 @@ class OracleService:
                 self.segments / max(self.windows, 1), 2
             ),
         }
+        if self.index_store is not None:
+            out.update(self.index_store.stats())
+        return out
 
     # ---- dispatcher --------------------------------------------------------
 

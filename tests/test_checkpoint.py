@@ -1,0 +1,140 @@
+"""Unit tests for :mod:`repro.checkpoint.checkpoint` failure modes.
+
+The happy paths (roundtrip, async, reshard, restart) live in
+tests/test_substrates.py; this file pins down what happens when a
+checkpoint is *wrong*: partially written, structurally mismatched, or
+corrupted on disk.  These are the cases the atomic-write guarantee and
+restore-time validation exist for, so each one must fail loudly (or be
+invisible), never restore garbage.
+"""
+import json
+import os
+import shutil
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import (cleanup, latest_step, restore,
+                                         restore_latest, save)
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.bfloat16)},
+    }
+
+
+# ----------------------------------------------------------------------------
+# partial writes are invisible
+# ----------------------------------------------------------------------------
+
+def test_partial_tmp_dir_is_not_a_checkpoint(tmp_path):
+    """A crash mid-save leaves only a ``.tmp_`` dir — discovery must not see
+    it, and a later save of the same step must clobber it cleanly."""
+    root = str(tmp_path)
+    tmp = os.path.join(root, ".tmp_00000003")
+    os.makedirs(tmp)
+    # half-written leaf, no manifest: exactly what a kill -9 leaves behind
+    np.save(os.path.join(tmp, "leaf_00000.npy"), np.zeros(4))
+    assert latest_step(root) is None
+    out, manifest = restore_latest(root, _tree())
+    assert out is None and manifest is None
+    save(root, 3, _tree())
+    assert latest_step(root) == 3
+    assert not [d for d in os.listdir(root) if d.startswith(".tmp")]
+
+
+def test_step_dir_without_manifest_is_skipped(tmp_path):
+    """A step directory whose manifest is missing (torn non-atomic copy from
+    some external tool) is not offered by latest_step."""
+    root = str(tmp_path)
+    save(root, 1, _tree())
+    fake = os.path.join(root, "step_00000009")
+    os.makedirs(fake)
+    assert latest_step(root) == 1
+
+
+# ----------------------------------------------------------------------------
+# corrupt / mismatched checkpoints fail loudly
+# ----------------------------------------------------------------------------
+
+def test_restore_missing_leaf_raises_keyerror(tmp_path):
+    """Restoring a target tree with a leaf the checkpoint never saved is a
+    structural mismatch -> KeyError naming the missing path."""
+    root = str(tmp_path)
+    save(root, 1, {"w": jnp.zeros((2,))})
+    with pytest.raises(KeyError, match="nested/b"):
+        restore(root, 1, _tree())
+
+
+def test_restore_shape_mismatch_raises_valueerror(tmp_path):
+    root = str(tmp_path)
+    save(root, 1, {"w": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError, match="shape"):
+        restore(root, 1, {"w": jnp.zeros((4, 4))})
+
+
+def test_restore_truncated_leaf_file_raises(tmp_path):
+    """Bit-rot on a leaf file (truncated npy) must not restore silently."""
+    root = str(tmp_path)
+    d = save(root, 1, {"w": jnp.arange(64, dtype=jnp.float32)})
+    leaf = os.path.join(d, "leaf_00000.npy")
+    with open(leaf, "rb") as f:
+        blob = f.read()
+    with open(leaf, "wb") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.raises(Exception):
+        restore(root, 1, {"w": jnp.zeros((64,), jnp.float32)})
+
+
+def test_restore_corrupt_manifest_raises(tmp_path):
+    root = str(tmp_path)
+    d = save(root, 1, _tree())
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        f.write("{not json")
+    with pytest.raises(json.JSONDecodeError):
+        restore(root, 1, _tree())
+
+
+def test_restore_wrong_dtype_leaf_swap(tmp_path):
+    """Swapping a leaf file for one with a different byte size per element
+    trips either the dtype re-view or the shape check — never a silent
+    reinterpretation."""
+    root = str(tmp_path)
+    d = save(root, 1, {"w": jnp.arange(8, dtype=jnp.float32)})
+    np.save(os.path.join(d, "leaf_00000.npy"), np.zeros(3, np.float64))
+    with pytest.raises(ValueError):
+        restore(root, 1, {"w": jnp.zeros((8,), jnp.float32)})
+
+
+# ----------------------------------------------------------------------------
+# overwrite + retention
+# ----------------------------------------------------------------------------
+
+def test_save_same_step_overwrites_atomically(tmp_path):
+    root = str(tmp_path)
+    save(root, 5, {"w": jnp.zeros((2,))})
+    save(root, 5, {"w": jnp.full((2,), 9.0)})
+    out, _ = restore(root, 5, {"w": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(out["w"]), [9.0, 9.0])
+
+
+def test_cleanup_keeps_newest_and_tolerates_strays(tmp_path):
+    root = str(tmp_path)
+    for s in (1, 2, 3, 4):
+        save(root, s, {"w": jnp.zeros((1,))})
+    stray = os.path.join(root, "step_00000099")   # manifest-less stray
+    os.makedirs(stray)
+    cleanup(root, keep_last=2)
+    kept = sorted(
+        d for d in os.listdir(root)
+        if d.startswith("step_")
+        and os.path.isfile(os.path.join(root, d, "manifest.json"))
+    )
+    assert kept == ["step_00000003", "step_00000004"]
+    shutil.rmtree(stray)
+    # keep_last <= 0 disables retention entirely
+    cleanup(root, keep_last=0)
+    assert latest_step(root) == 4
