@@ -1,0 +1,190 @@
+"""Shared label store benchmark: charge-once caching throughput on a
+repeat-query workload vs. the store-less service path, plus the BAS-level
+correctness contract (bit-identical estimates, bounded total charges).
+
+Workload: Q clients x R rounds against one served
+:class:`~benchmarks.bench_service.PaddedDeviceScorer`.  Every client's pair
+set is 50% *hot* pairs (shared by all clients) and 50% pairs unique to that
+client, and each round re-issues the same query through a **fresh**
+:class:`~repro.core.ModelOracle` — the serving fleet's steady state, where
+dashboards and repeated analytical queries hit the same hot table pairs but
+every query carries its own cache and ledger.  Without a store the backend
+executes R*Q*n rows; with one it executes each distinct pair once —
+(Q+1)*n/2 rows — so the structural speedup at the default profile is ~5x
+while every query still *acquires* exactly the same labels (``calls`` is
+identical; the discount lands on ``charged``).
+
+Rows: ``label_store_{off|on}_q{Q}`` with labels/sec (acquired labels per
+wall second — the numerator is identical in both arms, so the ratio is pure
+store win), plus the store's hit/charge counters; ``label_store_bas_repeat``
+runs full BAS queries through a stored service and surfaces the repeat
+query's (zero) charge.  Run via ``python -m benchmarks.run --only
+label_store``.
+
+CI gates (asserted here, exercised by the workflow's smoke-bench job with
+``--smoke``): (a) the stored service reaches >= 3x the store-less path's
+labels/sec on the repeat workload; (b) labels and BAS estimates are
+bit-identical to store-less execution; (c) summed ledger charges equal the
+store's distinct-pair count — the charge-once bound.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import Agg, BASConfig, ModelOracle, Query, run_bas
+from repro.data import make_clustered_tables
+from repro.serve.label_store import LabelStore
+from repro.serve.oracle_service import OracleService, serve_queries
+
+from .bench_service import PaddedDeviceScorer
+from .common import row
+
+
+def _pair_sets(n_side: int, n_clients: int, n_pairs: int, seed: int = 5):
+    """Per-client pair arrays: the first half is one hot set every client
+    shares, the second half is unique to the client."""
+    rng = np.random.default_rng(seed)
+
+    def draw(n):
+        return np.unique(
+            rng.integers(0, n_side, size=(2 * n, 2)), axis=0
+        )[:n]
+
+    hot = draw(n_pairs // 2)
+    return [np.concatenate([hot, draw(n_pairs // 2)]) for _ in range(n_clients)]
+
+
+def _run_arm(scorer, sizes, pair_sets, rounds: int, store):
+    """Q concurrent labelling clients per round, fresh oracles each round;
+    returns (wall_s, acquired, charged, per-client label arrays, stats)."""
+    calls = charged = 0
+    wall = 0.0
+    labels = None
+    with OracleService(workers=1, max_wait_ms=50.0, min_shard=1 << 30,
+                       label_store=store) as svc:
+        for _ in range(rounds):
+            oracles = [ModelOracle(scorer, threshold=0.5, name="bench")
+                       for _ in pair_sets]
+            for o in oracles:
+                o.bind_sizes(sizes)
+            svc.attach(*oracles)
+
+            def job(i):
+                try:
+                    return oracles[i].label(pair_sets[i])
+                finally:
+                    svc.detach(oracles[i])
+
+            t0 = time.perf_counter()
+            labels = serve_queries(
+                svc, [lambda i=i: job(i) for i in range(len(pair_sets))]
+            )
+            wall += time.perf_counter() - t0
+            calls += sum(o.calls for o in oracles)
+            charged += sum(o.charged for o in oracles)
+        stats = svc.stats()
+    return wall, calls, charged, labels, stats
+
+
+def run(fast: bool = True, smoke: bool = False):
+    rows = []
+    if smoke:
+        n_side, n_clients, n_pairs, rounds, budget = 512, 4, 512, 3, 300
+    elif fast:
+        n_side, n_clients, n_pairs, rounds, budget = 1024, 6, 1024, 3, 500
+    else:
+        n_side, n_clients, n_pairs, rounds, budget = 2048, 8, 2048, 4, 1500
+    rng = np.random.default_rng(0)
+    emb = [rng.standard_normal((n_side, 32)).astype(np.float32)
+           for _ in range(2)]
+    pair_sets = _pair_sets(n_side, n_clients, n_pairs)
+    unique_pairs = len(np.unique(np.concatenate(pair_sets), axis=0))
+
+    # --- throughput: store-less vs stored service on the repeat workload ----
+    scorer_off = PaddedDeviceScorer(emb[0], emb[1], hidden=256, depth=2,
+                                    pad_to=512)
+    wall_off, calls_off, charged_off, labels_off, _ = _run_arm(
+        scorer_off, (n_side, n_side), pair_sets, rounds, store=None,
+    )
+    assert charged_off == calls_off          # without a store, charged==calls
+    rate_off = calls_off / max(wall_off, 1e-9)
+    rows.append(row(
+        f"label_store_off_q{n_clients}", wall_off / max(calls_off, 1),
+        f"labels_per_s={rate_off:.0f};rounds={rounds};"
+        f"rows_executed={scorer_off.rows_padded}",
+    ))
+
+    scorer_on = PaddedDeviceScorer(emb[0], emb[1], hidden=256, depth=2,
+                                   pad_to=512)
+    store = LabelStore()
+    wall_on, calls_on, charged_on, labels_on, stats = _run_arm(
+        scorer_on, (n_side, n_side), pair_sets, rounds, store=store,
+    )
+    assert calls_on == calls_off             # same labels acquired...
+    for a, b in zip(labels_off, labels_on):  # ...and bit-identical
+        np.testing.assert_array_equal(a, b)
+    # the charge-once bound: total charges == distinct pairs ever labelled
+    assert charged_on == stats["store_entries"] <= unique_pairs, (
+        charged_on, stats["store_entries"], unique_pairs,
+    )
+    rate_on = calls_on / max(wall_on, 1e-9)
+    speedup = rate_on / max(rate_off, 1e-9)
+    rows.append(row(
+        f"label_store_on_q{n_clients}", wall_on / max(calls_on, 1),
+        f"labels_per_s={rate_on:.0f};speedup={speedup:.2f}x;"
+        f"hit_rate={stats['store_hit_rate']:.2f};"
+        f"charged={charged_on};charge_saved={calls_on - charged_on};"
+        f"rows_executed={scorer_on.rows_padded}",
+    ))
+
+    # --- full BAS queries: estimates bit-identical, repeats charge zero -----
+    ds = make_clustered_tables(96, 96, n_entities=150, noise=0.4, seed=3)
+    bas_scorer = PaddedDeviceScorer(ds.spec().embeddings[0],
+                                    ds.spec().embeddings[1],
+                                    hidden=128, depth=2, pad_to=256)
+    cfg = BASConfig(n_bootstrap=20)
+
+    def fresh_query():
+        return Query(spec=ds.spec(), agg=Agg.COUNT,
+                     oracle=ModelOracle(bas_scorer, threshold=0.5,
+                                        name="bas"),
+                     budget=budget)
+
+    ref_q = fresh_query()
+    ref = run_bas(ref_q, cfg, seed=17)
+    bas_store = LabelStore()
+    with OracleService(workers=1, max_wait_ms=1.0, min_shard=1 << 30,
+                       label_store=bas_store) as svc:
+        q1, q2 = fresh_query(), fresh_query()
+        for q in (q1, q2):
+            svc.attach(q.oracle)
+            t0 = time.perf_counter()
+            res = run_bas(q, cfg, seed=17)
+            t_run = time.perf_counter() - t0
+            svc.detach(q.oracle)
+            assert res.estimate == ref.estimate, (
+                "store-served BAS estimate diverged from serial execution"
+            )
+            assert res.ci.lo == ref.ci.lo and res.ci.hi == ref.ci.hi
+            assert q.oracle.calls == ref_q.oracle.calls
+    assert q1.oracle.charged == ref_q.oracle.calls   # first requester pays
+    assert q2.oracle.charged == 0                    # the repeat rides free
+    assert (q1.oracle.charged + q2.oracle.charged
+            == bas_store.stats()["store_entries"])
+    rows.append(row(
+        "label_store_bas_repeat", t_run,
+        f"charged={q2.oracle.charged};"
+        f"store_hits={q2.oracle.store_hits};"
+        f"bit_identical=True",
+    ))
+
+    # acceptance headline: charge-once caching must at least triple the
+    # repeat workload's labels/sec over the store-less service path
+    assert speedup >= 3.0, (
+        f"label store speedup is {speedup:.2f}x (< 3x) on the "
+        f"{n_clients}-client x {rounds}-round repeat workload: "
+        f"charge-once caching regressed"
+    )
+    return rows

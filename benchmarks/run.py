@@ -29,6 +29,7 @@ MODULES = {
     "oracle": "benchmarks.bench_oracle",            # batched oracle layer
     "service": "benchmarks.bench_service",          # async oracle service
     "index": "benchmarks.bench_index",              # persistent strat index
+    "label_store": "benchmarks.bench_label_store",  # charge-once label cache
 }
 
 

@@ -58,6 +58,20 @@ number of strata.  For a local flush that is exactly the number of backend
 ``_label`` invocations; under an attached service, cross-query fusion and
 worker sharding make the true backend-call count differ (see
 ``OracleService.stats()["backend_calls"]``).
+
+Charge-once accounting (shared label store)
+-------------------------------------------
+When the attached service carries a :class:`repro.serve.label_store
+.LabelStore`, some of a flush's unique uncached keys are served from the
+communal store instead of a backend execution.  Those keys still advance
+``calls`` — the counter that paces the BAS pipeline and meters the
+user-facing budget guarantee — so sampling decisions and estimates are
+bit-identical to serial execution.  What changes is who *pays*: ``charged``
+counts the keys this oracle's own flushes executed on a backend (the real
+ledger spend), and ``store_hits``/``store_charge_saved`` count the keys
+served communally.  Without a store ``charged == calls``; with one, the
+workload-wide sum of ``charged`` equals the store's unique-miss count —
+each distinct pair is charged exactly once, to its first requester.
 """
 from __future__ import annotations
 
@@ -72,6 +86,12 @@ import numpy as np
 
 class BudgetExceeded(RuntimeError):
     pass
+
+
+# Marker for service-group keys built from id(...) — equality works within
+# the process (coalescing, store segments), but the key is meaningless in
+# another process, so the shared label store never persists such segments.
+PROCESS_LOCAL = "#process-local"
 
 
 # ---- wire payloads ----------------------------------------------------------
@@ -174,9 +194,12 @@ class Oracle(abc.ABC):
         self._vals = np.empty(0, np.float64)  # labels aligned with _keys
         self._sizes: Optional[tuple] = None   # bound per-table sizes
         self._pack: Optional[tuple] = None    # fallback encoding (k, bit width)
-        self.calls = 0          # unique tuples actually labelled
+        self.calls = 0          # unique tuples acquired (budget pacing)
         self.requests = 0       # total tuples requested (incl. cache hits)
         self.batches = 0        # backend _label invocations
+        self.charged = 0        # unique tuples this oracle paid to execute
+        self.store_hits = 0     # unique tuples served by a shared LabelStore
+        self.store_charge_saved = 0   # ledger charges avoided via the store
         self.budget: Optional[int] = None
         self.service = None     # attached OracleService (None = local flushes)
 
@@ -273,8 +296,10 @@ class Oracle(abc.ABC):
         indices for both (same backend model, same table bindings).  The
         default is per-instance (no cross-oracle fusion, but requests still
         micro-batch into the same service window and shard over its worker
-        pool); :class:`ModelOracle` keys on its shared scorer."""
-        return ("oracle", id(self))
+        pool); :class:`ModelOracle` keys on its shared scorer.  id()-based
+        keys carry the :data:`PROCESS_LOCAL` marker so the shared label
+        store knows they cannot be persisted across restarts."""
+        return (PROCESS_LOCAL, "oracle", id(self))
 
     def lookup(self, keys: np.ndarray) -> np.ndarray:
         """Cached labels for already-resolved keys (keys must all be cached)."""
@@ -311,6 +336,9 @@ class Oracle(abc.ABC):
             "calls": self.calls,
             "requests": self.requests,
             "batches": self.batches,
+            "charged": self.charged,
+            "store_hits": self.store_hits,
+            "store_charge_saved": self.store_charge_saved,
             "dedup_ratio": round(self.dedup_ratio, 4),
         }
 
@@ -320,6 +348,9 @@ class Oracle(abc.ABC):
         self.calls = 0
         self.requests = 0
         self.batches = 0
+        self.charged = 0
+        self.store_hits = 0
+        self.store_charge_saved = 0
 
 
 def plan_requests(
@@ -364,15 +395,31 @@ def commit_requests(
     n_requested: int,
     new_keys: np.ndarray,
     new_vals: Optional[np.ndarray],
+    store_keys: Optional[np.ndarray] = None,
+    store_vals: Optional[np.ndarray] = None,
 ) -> None:
     """Commit an executed flush: merge the fresh labels into the cache,
     charge the ledger atomically, and resolve every request handle.  The
     counterpart of :func:`plan_requests`, shared by local and served flushes;
-    callers invoke it only after the backend execution succeeded."""
+    callers invoke it only after the backend execution succeeded.
+
+    ``store_keys``/``store_vals`` are the store-consultation phase's output:
+    keys of this flush served from a shared :class:`repro.serve.label_store
+    .LabelStore` instead of a backend execution.  They merge into the cache
+    and advance ``calls`` exactly like executed keys (so budget pacing — and
+    therefore every estimate — is bit-identical to serial execution), but
+    the ledger charge lands on ``store_hits``/``store_charge_saved`` rather
+    than ``charged``: the store's first requester already paid."""
+    n_store = len(store_keys) if store_keys is not None else 0
     if len(new_keys):
         oracle._merge(new_keys, new_vals)
-        oracle.calls += len(new_keys)
+        oracle.charged += len(new_keys)
         oracle.batches += 1
+    if n_store:
+        oracle._merge(store_keys, store_vals)
+        oracle.store_hits += n_store
+        oracle.store_charge_saved += n_store
+    oracle.calls += len(new_keys) + n_store
     oracle.requests += n_requested
     for r, keys in zip(requests, keys_list):
         r._labels = oracle.lookup(keys)
@@ -520,12 +567,20 @@ class ModelOracle(Oracle):
     route through :class:`OracleBatch`, the scorer receives each pipeline
     stage's deduped union as one large request and applies its own device
     batching/sharding internally.
+
+    ``name`` optionally gives the scorer a *stable* identity: named oracles
+    fuse (and share label-store segments) by name rather than by object id,
+    so their segments survive a service restart when the store persists to
+    disk.  Naming is a contract — every oracle sharing a name must score
+    through the same model weights.
     """
 
-    def __init__(self, scorer, threshold: float = 0.5):
+    def __init__(self, scorer, threshold: float = 0.5,
+                 name: Optional[str] = None):
         super().__init__()
         self.scorer = scorer.score if hasattr(scorer, "score") else scorer
         self.threshold = threshold
+        self.name = name
 
     def _label(self, idx: np.ndarray) -> np.ndarray:
         probs = np.asarray(self.scorer(idx), dtype=np.float64)
@@ -534,9 +589,12 @@ class ModelOracle(Oracle):
     def service_group(self):
         """Fuse with every oracle scoring through the same served model at the
         same threshold: concurrent queries against one scorer become one
-        super-batch per service window.  Keyed on the scorer *object* — for a
-        bound ``scorer.score`` the owning instance, via ``__self__`` — since
-        each attribute access creates a fresh bound-method object whose id
-        would never match across oracles."""
+        super-batch per service window.  Named oracles key on the name (a
+        stable, persistable identity); unnamed ones key on the scorer
+        *object* — for a bound ``scorer.score`` the owning instance, via
+        ``__self__``, since each attribute access creates a fresh
+        bound-method object whose id would never match across oracles."""
+        if self.name is not None:
+            return ("scorer", str(self.name), float(self.threshold))
         backend = getattr(self.scorer, "__self__", self.scorer)
-        return ("scorer", id(backend), float(self.threshold))
+        return (PROCESS_LOCAL, "scorer", id(backend), float(self.threshold))

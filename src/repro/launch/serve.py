@@ -29,6 +29,10 @@ dimension over the host mesh (``launch.sharding.data_parallel``).
 (:class:`repro.serve.transport.OracleServiceServer`); ``--mode client``
 runs the same BAS queries through :class:`repro.serve.transport.RemoteOracle`
 — plan/commit stay client-side, only labelling crosses the network.
+``--label-store-mb``/``--label-store-root`` give the service/server/worker
+modes a shared cross-query label store (charge-once oracle caching, see
+``repro.serve.label_store``); shutdown prints window fill/dedup ratios and
+the store hit rate.
 
 Index maintenance modes (no model; see ``repro.core.index``)::
 
@@ -176,6 +180,31 @@ def _run_refresh_index(args) -> None:
           f"tile(s) in {time.time()-t0:.2f}s -> {path}")
 
 
+def _make_label_store(args):
+    """Optional service-resident :class:`repro.serve.label_store.LabelStore`
+    for the service/server/worker modes: ``--label-store-mb 0`` (the default)
+    disables it; ``--label-store-root`` additionally persists stable segments
+    across restarts."""
+    if not args.label_store_mb and not args.label_store_root:
+        return None
+    from repro.serve.label_store import LabelStore
+
+    store = LabelStore(max_bytes=int((args.label_store_mb or 256) * 2**20),
+                       root=args.label_store_root or None)
+    where = args.label_store_root or "memory-only"
+    print(f"[serve] label store: {args.label_store_mb or 256} MB budget, "
+          f"root={where}, {store.loads} segment(s) hydrated")
+    return store
+
+
+def _print_service_stats(role: str, stats: dict) -> None:
+    """Shutdown observability line shared by the fleet and service modes."""
+    print(f"[{role}] windows: fill={stats.get('window_fill_ratio', 0.0):.2f} "
+          f"dedup={stats.get('window_dedup_ratio', 0.0):.2f}; "
+          f"store: hit_rate={stats.get('store_hit_rate', 0.0):.2f} "
+          f"charges_saved={stats.get('store_shared', 0) + stats.get('store_hits', 0)}")
+
+
 def _run_fleet_role(args, scorer) -> None:
     """``--mode server|worker``: expose the scorer over TCP.  A worker is a
     server with no downstream hosts; ``--worker-hosts`` turns a server into
@@ -188,6 +217,7 @@ def _run_fleet_role(args, scorer) -> None:
         {args.group: scorer_group(scorer, threshold=0.5)},
         host=args.host, port=args.port,
         workers=args.workers, max_wait_ms=8.0,
+        label_store=_make_label_store(args),
     )
     host, port = server.address
     print(f"[{role}] group {args.group!r} listening on {host}:{port}")
@@ -207,6 +237,7 @@ def _run_fleet_role(args, scorer) -> None:
         print(f"[{role}] shut down; {stats['windows']} windows, "
               f"{stats['rows_labelled']} rows labelled, "
               f"{stats['remote_shards']} remote shards")
+        _print_service_stats(role, stats)
 
 
 def main():
@@ -239,6 +270,12 @@ def main():
                     help="server mode: comma-separated worker host:port list")
     ap.add_argument("--group", default="default",
                     help="server/worker/client mode: wire group name")
+    ap.add_argument("--label-store-mb", type=float, default=0.0,
+                    help="service/server/worker mode: shared label store "
+                         "memory budget in MB (0 = disabled)")
+    ap.add_argument("--label-store-root", default="",
+                    help="service/server/worker mode: persist stable label "
+                         "store segments under this directory")
     ap.add_argument("--n-side", type=int, default=48,
                     help="server/client mode: synthetic table side length")
     ap.add_argument("--duration", type=float, default=0.0,
@@ -321,14 +358,17 @@ def main():
         records = [f"entity record {i:03d}" for i in range(n_side)]
         scorer = _make_scorer(args, cfg, params, tok, records, batch_size=32)
         cfg_bas = BASConfig(n_bootstrap=100)
-        oracles = [ModelOracle(scorer, threshold=0.5)
+        # named oracles share one LabelStore segment group (an unnamed
+        # ModelOracle's group is process-local and can never be persisted)
+        oracles = [ModelOracle(scorer, threshold=0.5, name=args.group)
                    for _ in range(args.queries)]
         queries = [
             Query(spec=ds.spec(), agg=Agg.COUNT, oracle=o, budget=args.budget)
             for o in oracles
         ]
         lat = np.zeros(args.queries)
-        with OracleService(workers=args.workers, max_wait_ms=8.0) as svc:
+        with OracleService(workers=args.workers, max_wait_ms=8.0,
+                           label_store=_make_label_store(args)) as svc:
             svc.attach(*oracles)
 
             def job(i: int):
@@ -353,6 +393,7 @@ def main():
               f"p99={np.quantile(lat, 0.99)*1e3:.0f}ms per query; "
               f"service: {stats['windows']} windows, "
               f"{stats['segments_per_window']} flushes/window")
+        _print_service_stats("serve", stats)
         for i, r in enumerate(results):
             print(f"[serve]   q{i}: estimate={r.estimate:.1f} "
                   f"ci=[{r.ci.lo:.1f}, {r.ci.hi:.1f}] "

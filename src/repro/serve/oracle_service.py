@@ -64,6 +64,14 @@ Architecture
 * **Commit** happens after execution, per segment in arrival order: merge the
   new labels into the client's cache, charge its ledger atomically, resolve
   the request handles, complete the future.
+* With a **shared label store** attached (``label_store=``, see
+  ``repro.serve.label_store``), a store-consultation phase sits between plan
+  and execute: keys surviving the per-client dedup are split into resident
+  hits, in-flight waits, and true misses *before any ledger is charged* —
+  only misses execute, successful results are written back communally, and
+  hits/waits are served at commit time under a charge-once budget policy
+  (first requester pays; everyone else's ``calls`` still advances exactly
+  as in serial execution, so estimates stay bit-identical).
 
 The window/plan/commit machinery here is transport-agnostic, and
 ``repro.serve.transport`` puts a network in front of it: remote client
@@ -136,7 +144,13 @@ class _Segment:
 
 @dataclasses.dataclass
 class _Plan:
-    """A successfully planned segment, ready for group execution."""
+    """A successfully planned segment, ready for group execution.
+
+    With a shared label store attached, ``new_keys``/``new_idx`` hold only
+    the store *misses* (the rows actually executed); ``store`` carries the
+    consultation result — resident hits (values captured at plan time, so
+    eviction can't fail the window), in-flight waits, and this plan's
+    reservation token, which execution must publish or cancel."""
 
     seg: _Segment
     keys_list: list            # per-request encoded keys
@@ -144,6 +158,19 @@ class _Plan:
     new_keys: np.ndarray       # unique uncached keys this segment labels
     new_idx: np.ndarray        # decoded (n_new, k) tuple indices
     vals: Optional[np.ndarray] = None   # labels for new_keys (set by execute)
+    store: Optional[object] = None      # label_store.StorePlan (None = no store)
+    row_keys: Optional[np.ndarray] = None   # raw segments: per-row flat keys
+
+
+def _encoding_key(oracle: Oracle):
+    """The key-encoding half of a label-store segment key: two oracles may
+    share stored labels only when their int64 flat keys mean the same tuples
+    (same bound sizes, or the same unbound bit packing)."""
+    if oracle._sizes is not None:
+        return ("sizes",) + tuple(oracle._sizes)
+    if oracle._pack is not None:
+        return ("pack",) + tuple(oracle._pack)
+    return None
 
 
 class OracleService:
@@ -174,12 +201,24 @@ class OracleService:
         ``JoinMLEngine(index_store=...)``).  The service owns no routing —
         it just gives the store a service-scoped home and merges its
         counters into :meth:`stats`.
+    label_store:
+        Optional :class:`repro.serve.label_store.LabelStore`: the window
+        planner then dedupes each plan's uncached keys against the communal
+        store *before any ledger is charged* — resident hits and keys
+        reserved by another in-flight plan are served at commit time, only
+        true misses execute (and are written back on success).  Off by
+        default: without a store, served execution charges exactly like a
+        local flush.  Raw (transport) segments get the same treatment
+        whenever their tuple indices fit the store's bit packing, so remote
+        clients' EXEC answers can be store-served too.  ``close()`` calls
+        ``label_store.save()``.
     """
 
     def __init__(self, workers: int = 1, max_batch: int = 8192,
                  max_wait_ms: float = 4.0, min_shard: int = 256,
-                 index_store=None):
+                 index_store=None, label_store=None):
         self.index_store = index_store
+        self.label_store = label_store
         self.workers = max(int(workers), 1)
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) / 1e3
@@ -214,6 +253,8 @@ class OracleService:
         self.backend_calls = 0
         self.rows_requested = 0
         self.rows_labelled = 0
+        self.window_rows = 0        # rows entering windows (fill ratio)
+        self.rows_planned = 0       # rows surviving per-client cache dedup
         self.remote_shards = 0
         self.remote_failures = 0
         self._dispatcher = threading.Thread(
@@ -331,7 +372,8 @@ class OracleService:
             )
 
     def close(self) -> None:
-        """Drain the queue, stop the dispatcher, shut the worker pool."""
+        """Drain the queue, stop the dispatcher, shut the worker pool, and
+        persist the label store (a no-op unless it has a disk root)."""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
@@ -339,6 +381,8 @@ class OracleService:
         for pool in [self._pool] + self._retired_pools:
             if pool is not None:
                 pool.shutdown(wait=True)
+        if self.label_store is not None:
+            self.label_store.save()
 
     def __enter__(self) -> "OracleService":
         return self
@@ -358,9 +402,21 @@ class OracleService:
             "segments_per_window": round(
                 self.segments / max(self.windows, 1), 2
             ),
+            # how full windows run vs the max_batch trigger — low fill with
+            # high window counts means max_wait_ms closes windows early
+            "window_fill_ratio": round(
+                self.window_rows / max(self.windows * self.max_batch, 1), 4
+            ),
+            # fraction of window rows already answered by per-client caches
+            # before any backend (or store) work was planned
+            "window_dedup_ratio": round(
+                1.0 - self.rows_planned / max(self.window_rows, 1), 4
+            ),
         }
         if self.index_store is not None:
             out.update(self.index_store.stats())
+        if self.label_store is not None:
+            out.update(self.label_store.stats())
         return out
 
     # ---- dispatcher --------------------------------------------------------
@@ -416,33 +472,42 @@ class OracleService:
     def _process(self, window: list[_Segment]) -> None:
         self.windows += 1
         self.segments += len(window)
+        self.window_rows += sum(seg.rows for seg in window)
         plans = self._plan(window)
-        groups: dict = {}
-        for plan in plans:
-            groups.setdefault(plan.seg.group_key(), []).append(plan)
-        for key, group in groups.items():
-            self._execute_group(key, group)
-        for plan in plans:                       # commit in arrival order
-            if plan.seg.future.done():           # its group failed
-                continue
-            self._commit(plan)
+        try:
+            groups: dict = {}
+            for plan in plans:
+                groups.setdefault(plan.seg.group_key(), []).append(plan)
+            for key, group in groups.items():
+                self._execute_group(key, group)
+            for plan in plans:                   # commit in arrival order
+                if plan.seg.future.done():       # its group failed
+                    continue
+                self._commit(plan)
+        except BaseException as e:
+            # a dispatcher-level failure must not leave store reservations
+            # dangling — waiters (possibly in another service sharing the
+            # store) would block on them forever
+            for plan in plans:
+                if plan.store is not None and self.label_store is not None:
+                    self.label_store.cancel(plan.store, e)
+            raise
 
     def _plan(self, window: list[_Segment]) -> list[_Plan]:
         """Per-segment dedup + budget check via the shared
         :func:`repro.core.oracle.plan_requests` (exactly local-flush
-        semantics).  Earlier same-oracle segments in the window count as
-        cached-to-be (same-oracle segments always share a service group, so
-        they execute — and later commit — together or fail together)."""
+        semantics), then the store-consultation phase: keys surviving the
+        client-cache dedup are split against the shared label store —
+        resident hits and in-flight waits are served at commit, only misses
+        stay in ``new_keys`` for execution.  Earlier same-oracle segments in
+        the window count as cached-to-be with their *full* acquired key set
+        (store-served keys land in the client cache at commit too)."""
         plans: list[_Plan] = []
         planned: dict[int, list[np.ndarray]] = {}   # id(oracle) -> key arrays
+        store = self.label_store
         for seg in window:
             if seg.raw:
-                # pre-planned by the remote client against its own cache and
-                # ledger: nothing to dedup or budget-check here
-                plans.append(_Plan(
-                    seg=seg, keys_list=[], n_requested=seg.rows,
-                    new_keys=np.empty(0, np.int64), new_idx=seg.idx,
-                ))
+                plans.append(self._plan_raw(seg))
                 continue
             o = seg.oracle
             try:
@@ -451,21 +516,64 @@ class OracleService:
                     o, seg.requests,
                     extra_planned=np.concatenate(prior) if prior else None,
                 )
-                plans.append(_Plan(
-                    seg=seg, keys_list=keys_list, n_requested=n_requested,
-                    new_keys=new_keys, new_idx=o._decode(new_keys),
-                ))
                 if len(new_keys):
                     planned.setdefault(id(o), []).append(new_keys)
+                self.rows_planned += len(new_keys)
+                plan = _Plan(
+                    seg=seg, keys_list=keys_list, n_requested=n_requested,
+                    new_keys=new_keys, new_idx=None,
+                )
+                if store is not None and len(new_keys):
+                    enc = _encoding_key(o)
+                    if enc is not None:
+                        plan.store = store.plan(
+                            (o.service_group(), enc), new_keys
+                        )
+                        plan.new_keys = plan.store.miss_keys
+                plan.new_idx = o._decode(plan.new_keys)
+                plans.append(plan)
             except BaseException as e:  # noqa: BLE001 — isolate per client
                 seg.fail(e)
         return plans
 
+    def _plan_raw(self, seg: _Segment) -> _Plan:
+        """Raw (transport) segments are pre-planned by the remote client
+        against its own cache and ledger — nothing to dedup or budget-check.
+        The store-consultation phase still applies when the tuple indices
+        fit the store's bit packing: hits/waits are served at commit and
+        only miss rows execute, so remote EXEC answers can be store-served
+        (the client's plan/commit semantics never notice)."""
+        plan = _Plan(
+            seg=seg, keys_list=[], n_requested=seg.rows,
+            new_keys=np.empty(0, np.int64), new_idx=seg.idx,
+        )
+        store = self.label_store
+        if store is None or not len(seg.idx):
+            self.rows_planned += seg.rows
+            return plan
+        from repro.serve.label_store import pack_tuples, unpack_tuples
+
+        row_keys = pack_tuples(seg.idx)
+        if row_keys is None:        # indices exceed the packing — skip store
+            self.rows_planned += seg.rows
+            return plan
+        k = seg.idx.shape[1]
+        ukeys = np.unique(row_keys)
+        self.rows_planned += len(ukeys)
+        plan.row_keys = row_keys
+        plan.store = store.plan((seg.key, ("pack", k, 63 // k)), ukeys)
+        plan.new_keys = plan.store.miss_keys
+        plan.new_idx = unpack_tuples(plan.store.miss_keys, k)
+        return plan
+
     def _execute_group(self, key, group: list[_Plan]) -> None:
         """Concatenate a group's new rows into one super-batch, shard it over
         the worker pool (and worker hosts serving this group), and scatter
-        labels back per plan.  A backend error fails every segment of this
-        group and only this group."""
+        labels back per plan.  On success each plan's fresh labels are
+        published to the shared store (releasing its reservations); a
+        backend error cancels the reservations and fails every segment of
+        this group and only this group — cancelled keys become reservable
+        again, so the failed flushes retry cleanly."""
         lens = [len(p.new_idx) for p in group]
         total = sum(lens)
         if total == 0:
@@ -480,6 +588,9 @@ class OracleService:
                 )
         except BaseException as e:  # noqa: BLE001 — isolate per group
             for p in group:
+                if p.store is not None and self.label_store is not None:
+                    self.label_store.cancel(p.store, e)
+                    p.store = None
                 p.seg.fail(e)
             return
         self.rows_labelled += total
@@ -487,6 +598,8 @@ class OracleService:
         for p, n in zip(group, lens):
             p.vals = vals[off:off + n]
             off += n
+            if p.store is not None and self.label_store is not None:
+                self.label_store.publish(p.store, p.vals)
 
     def _eligible_workers(self, key) -> list:
         """Worker hosts that can execute this group.  Only wire groups are
@@ -538,21 +651,61 @@ class OracleService:
                 self.remote_failures += 1
             return np.asarray(fn(shard), np.float64)
 
+    def _resolve_store(self, plan: _Plan) -> tuple:
+        """Gather the store-served labels for a plan: resident hits (values
+        captured at plan time) plus keys reserved by other in-flight plans —
+        their tokens resolve to the owner's ``(published_keys, vals)``.
+        Within one service tokens are always done by commit time (publish
+        precedes commit in ``_process``); across services sharing a store,
+        ``result()`` blocks until the owning window publishes or cancels.
+        Raises on a cancelled token — the segment then fails retryably."""
+        sp = plan.store
+        ks, vs = [sp.hit_keys], [sp.hit_vals]
+        for token, keys in sp.wait:
+            owner_keys, owner_vals = token.result(timeout=120.0)
+            pos = np.searchsorted(owner_keys, keys)
+            ks.append(keys)
+            vs.append(owner_vals[pos])
+        return np.concatenate(ks), np.concatenate(vs)
+
     def _commit(self, plan: _Plan) -> None:
         """Atomic ledger charge + cache merge + per-client result routing via
         the shared :func:`repro.core.oracle.commit_requests`.  Runs only
         after the group's backend execution succeeded, so a failure anywhere
-        earlier leaves this client's oracle untouched.  Raw segments have no
-        local oracle to commit to — their future resolves to the labels and
-        the remote client commits on its own side."""
+        earlier leaves this client's oracle untouched.  Store-served keys
+        merge into the client cache here (advancing ``calls`` exactly like
+        serial execution; the charge-once discount lands on ``store_hits``/
+        ``store_charge_saved``).  Raw segments have no local oracle to
+        commit to — their future resolves to the labels (reassembled in
+        request-row order from hits, waits, and executed rows) and the
+        remote client commits on its own side."""
+        store_keys = store_vals = None
+        if plan.store is not None:
+            try:
+                store_keys, store_vals = self._resolve_store(plan)
+            except BaseException as e:  # noqa: BLE001 — owner's call failed
+                plan.seg.fail(e)
+                return
         self.rows_requested += plan.n_requested
         if plan.seg.raw:
-            vals = plan.vals if plan.vals is not None else np.empty(0)
+            if plan.row_keys is not None and store_keys is not None:
+                # scatter hit + waited + executed values back to row order
+                all_keys = np.concatenate([store_keys, plan.new_keys])
+                all_vals = np.concatenate([
+                    store_vals,
+                    plan.vals if plan.vals is not None else np.empty(0),
+                ])
+                order = np.argsort(all_keys, kind="stable")
+                pos = np.searchsorted(all_keys[order], plan.row_keys)
+                vals = all_vals[order][pos]
+            else:
+                vals = plan.vals if plan.vals is not None else np.empty(0)
             plan.seg.future.set_result(np.asarray(vals, np.float64))
             return
         commit_requests(
             plan.seg.oracle, plan.seg.requests, plan.keys_list,
             plan.n_requested, plan.new_keys, plan.vals,
+            store_keys=store_keys, store_vals=store_vals,
         )
         plan.seg.future.set_result(None)
 

@@ -40,11 +40,19 @@ like an attached in-process oracle.  Un-announced connections — monitors,
 registration handshakes, or sockets that never send a frame — are never
 waited for (a connection's first EXEC also counts as an announcement).
 
-A client keeps one connection and at most one in-flight EXEC (the batch
-flush protocol is submit-then-await, so this is the natural discipline); the
-server answers every EXEC with exactly one RESULT or ERROR on the same
-connection.  There is no request pipelining in v1 — ``request_id`` exists so
-a future pipelined revision stays wire-compatible.
+EXEC frames are **pipelined**: a client may keep any number of EXECs in
+flight on one connection, each carrying a unique ``request_id``, and the
+server answers every EXEC with exactly one RESULT or ERROR — possibly out
+of order — on the same connection.  A background reader thread demuxes
+replies by id (control replies — PONG, GROUPS_OK — are unnumbered and
+matched FIFO, which is safe because the server handles control frames
+inline in receive order).  Pipelining is what lets several worker threads
+shard one super-batch over a single host connection concurrently, and lets
+two in-flight flushes from one client fuse into one server window.  An
+ERROR whose ``request_id`` is 0 (the server could not decode the request
+far enough to know its id) fails every in-flight request on the connection
+— attribution is ambiguous, and an undecodable frame means version skew
+anyway.
 
 Semantics and failure model
 ---------------------------
@@ -72,11 +80,15 @@ Semantics and failure model
 """
 from __future__ import annotations
 
+import random
 import socket
 import socketserver
 import struct
 import threading
 import time
+from collections import deque
+from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutureTimeout
 from typing import Callable, Optional
 
 import numpy as np
@@ -139,22 +151,31 @@ def _recv_exact(sock: socket.socket, n: int) -> bytes:
 
 
 class ServiceConnection:
-    """One client connection with reconnect-and-retry.
+    """One pipelined client connection with reconnect-and-retry.
 
-    ``execute`` is the workhorse: frame an EXEC, await the matching RESULT,
-    and on any transport failure reconnect (with exponential backoff) and
-    re-send — safe because the server's labelling is pure and commit happens
-    on the caller's side only after success.  Thread-safe via a round-trip
-    lock: concurrent callers (e.g. service worker threads sharding one
-    super-batch over several hosts) serialize on the single connection.
+    ``execute`` frames an EXEC, registers a per-request future keyed by
+    ``request_id``, and awaits it; a background reader thread demuxes every
+    reply on the connection to its future, so any number of caller threads
+    keep requests in flight concurrently on the one socket.  On a transport
+    failure (drop, truncation, reply timeout) every in-flight request on
+    that connection epoch fails with :class:`TransportError` and each caller
+    independently reconnects and re-sends with capped, jittered exponential
+    backoff — safe because the server's labelling is pure and commit happens
+    on the caller's side only after success.
+
+    Epochs make reconnects race-free: each physical connect bumps an epoch
+    counter, futures are registered under the epoch they were sent on, and
+    a dying reader fails only its own epoch's futures — never requests that
+    already moved to the replacement connection.
     """
 
     def __init__(self, address: tuple[str, int], retries: int = 5,
-                 backoff_s: float = 0.05, timeout_s: float = 120.0,
-                 announce: bool = False):
+                 backoff_s: float = 0.05, max_backoff_s: float = 2.0,
+                 timeout_s: float = 120.0, announce: bool = False):
         self.address = (str(address[0]), int(address[1]))
         self.retries = int(retries)
         self.backoff_s = float(backoff_s)
+        self.max_backoff_s = float(max_backoff_s)
         self.timeout_s = float(timeout_s)
         # announce=True sends HELLO on every (re)connect: query clients do,
         # so the server's windows wait for them from the moment they connect;
@@ -162,8 +183,17 @@ class ServiceConnection:
         self.announce = bool(announce)
         self.reconnects = 0           # observability: transport drops survived
         self._sock: Optional[socket.socket] = None
-        self._lock = threading.Lock()
-        self._seq = 0
+        self._epoch = 0               # bumped per physical connect
+        self._lock = threading.Lock()       # connection + routing-table state
+        self._send_lock = threading.Lock()  # frame writes are atomic
+        self._seq = 0                       # globally monotonic request ids
+        self._pending: dict[int, tuple[int, Future]] = {}
+        self._ctrl: deque = deque()         # FIFO (epoch, Future) for PONG/…
+        # control replies carry no request id, so they match their futures
+        # by wire order; serializing control round trips (they are rare —
+        # health checks and the worker handshake) keeps that trivial while
+        # EXECs pipeline freely
+        self._ctrl_lock = threading.Lock()
 
     # -- lifecycle --
 
@@ -180,15 +210,27 @@ class ServiceConnection:
         except OSError:
             return False
 
-    def _ensure(self) -> socket.socket:
+    def _ensure(self) -> tuple[socket.socket, int]:
+        """(lock held) Current socket + its epoch, connecting if needed."""
         if self._sock is None:
             sock = socket.create_connection(self.address,
                                             timeout=self.timeout_s)
+            # no read timeout after connect: the reader blocks on recv for
+            # the connection's whole life (an announced client may idle far
+            # longer than timeout_s between flushes); per-request deadlines
+            # are enforced caller-side on the future instead
+            sock.settimeout(None)
             sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
             if self.announce:
                 send_frame(sock, MSG_HELLO)     # one-way, no reply expected
             self._sock = sock
-        return self._sock
+            if self._epoch:         # any connect after the first survived a
+                self.reconnects += 1  # drop — count it even when the reader
+            self._epoch += 1          # noticed before a caller had to retry
+            threading.Thread(target=self._read_loop,
+                             args=(sock, self._epoch),
+                             name="oracle-conn-reader", daemon=True).start()
+        return self._sock, self._epoch
 
     def _drop(self) -> None:
         if self._sock is not None:
@@ -199,8 +241,8 @@ class ServiceConnection:
             self._sock = None
 
     def close(self) -> None:
-        with self._lock:
-            self._drop()
+        self._fail_epoch(self._sock, None,
+                         TransportError("connection closed"), drop=True)
 
     def __enter__(self) -> "ServiceConnection":
         return self
@@ -208,77 +250,183 @@ class ServiceConnection:
     def __exit__(self, *exc) -> None:
         self.close()
 
+    # -- reply demux --
+
+    def _read_loop(self, sock: socket.socket, epoch: int) -> None:
+        """Reader thread: one per connection epoch.  Routes numbered replies
+        to their futures, control replies FIFO, and on any read failure fails
+        every future of this epoch (callers then reconnect-retry)."""
+        try:
+            while True:
+                mtype, payload = recv_frame(sock)
+                if mtype in (MSG_RESULT, MSG_ERROR):
+                    res = LabelResult.from_bytes(payload)
+                    if mtype == MSG_ERROR and not res.request_id:
+                        # the server could not decode a request far enough to
+                        # know its id — attribution over a pipelined stream is
+                        # ambiguous, so every in-flight request fails (the
+                        # connection itself is still good: keep it)
+                        self._fail_epoch(sock, epoch,
+                                         RemoteExecutionError(res.error),
+                                         drop=False)
+                        continue
+                    with self._lock:
+                        entry = self._pending.pop(res.request_id, None)
+                    if entry is None:       # reply raced a caller's timeout
+                        continue
+                    _, fut = entry
+                    if mtype == MSG_ERROR:
+                        fut.set_exception(RemoteExecutionError(res.error))
+                    else:
+                        fut.set_result(res)
+                else:                       # PONG / GROUPS_OK / unknown
+                    with self._lock:
+                        fut = None
+                        while self._ctrl:
+                            e, f = self._ctrl.popleft()
+                            if e == epoch:
+                                fut = f
+                                break
+                    if fut is not None:
+                        fut.set_result((mtype, payload))
+        except Exception as e:  # noqa: BLE001 — any read failure kills epoch
+            exc = e if isinstance(e, TransportError) else TransportError(
+                f"{type(e).__name__}: {e}")
+            self._fail_epoch(sock, epoch, exc, drop=True)
+
+    def _fail_epoch(self, sock: Optional[socket.socket],
+                    epoch: Optional[int], exc: Exception,
+                    drop: bool) -> None:
+        """Fail every in-flight future of ``epoch`` (all epochs if None) and,
+        if ``drop``, retire the socket so the next attempt reconnects."""
+        with self._lock:
+            if drop and self._sock is sock:
+                self._drop()
+            doomed = [rid for rid, (e, _) in self._pending.items()
+                      if epoch is None or e == epoch]
+            victims = [self._pending.pop(rid)[1] for rid in doomed]
+            keep = deque((e, f) for e, f in self._ctrl
+                         if epoch is not None and e != epoch)
+            victims += [f for e, f in self._ctrl
+                        if epoch is None or e == epoch]
+            self._ctrl = keep
+        for fut in victims:
+            if not fut.done():
+                fut.set_exception(exc)
+
     # -- round trips --
 
-    def _roundtrip(self, mtype: int, payload: bytes) -> tuple[int, bytes]:
-        """Send one frame and read the reply, reconnecting and re-sending on
-        transport failures.  The first attempt may ride a connection that
-        died while idle (server restart between flushes) — that costs one
-        retry, not a failed flush."""
+    def _backoff(self, attempt: int) -> float:
+        """Capped exponential backoff with full jitter: the cap keeps a long
+        outage from stretching sleeps unboundedly, the jitter keeps a fleet
+        of clients from reconnecting to a restarted server in lockstep."""
+        base = min(self.backoff_s * (2 ** attempt), self.max_backoff_s)
+        return base * (0.5 + random.random())
+
+    def _submit(self, register, send) -> Future:
+        """One attempt: connect if needed, register the reply future under
+        the connection's epoch, write the frame.  A failed write fails the
+        whole epoch (frame boundaries are lost once a sendall splits)."""
+        with self._lock:
+            sock, epoch = self._ensure()
+            fut: Future = Future()
+            register(epoch, fut)
+        try:
+            with self._send_lock:
+                send(sock)
+        except (TransportError, OSError) as e:
+            self._fail_epoch(sock, epoch, TransportError(str(e)), drop=True)
+        return fut
+
+    def _await(self, fut: Future):
+        """Block on a reply future with the per-request deadline; a timeout
+        is a transport failure (kill the connection so in-flight peers retry
+        too, rather than queueing behind a wedged server)."""
+        try:
+            return fut.result(timeout=self.timeout_s)
+        except _FutureTimeout:
+            with self._lock:
+                sock, epoch = self._sock, self._epoch
+            exc = TransportError(f"no reply within {self.timeout_s}s")
+            self._fail_epoch(sock, epoch, exc, drop=True)
+            raise exc from None
+
+    def execute(self, group: str, idx: np.ndarray) -> np.ndarray:
+        """Label ``idx`` through the server-side ``group``; returns (n,)
+        float64 labels.  Raises :class:`RemoteExecutionError` on application
+        errors, :class:`TransportError` when the server stays unreachable.
+        Concurrent calls pipeline over the one connection."""
+        idx = np.asarray(idx)
+        if idx.ndim == 1:
+            idx = idx[:, None]
+        with self._lock:
+            self._seq += 1
+            rid = self._seq
+        payload = LabelRequest(group=group, idx=idx,
+                               request_id=rid).to_bytes()
         last: Exception = TransportError("no attempt made")
         for attempt in range(self.retries + 1):
             try:
-                with self._lock:
-                    fresh = self._sock is None
-                    sock = self._ensure()
-                    if fresh and attempt:
-                        self.reconnects += 1
-                    try:
-                        send_frame(sock, mtype, payload)
-                        return recv_frame(sock)
-                    except (TransportError, OSError):
-                        self._drop()
-                        raise
+                fut = self._submit(
+                    lambda epoch, f: self._pending.__setitem__(
+                        rid, (epoch, f)),
+                    lambda sock: send_frame(sock, MSG_EXEC, payload),
+                )
+                res = self._await(fut)
             except (TransportError, OSError) as e:
                 last = e
                 if attempt < self.retries:
-                    time.sleep(self.backoff_s * (2 ** attempt))
+                    time.sleep(self._backoff(attempt))
+                continue
+            if len(res.labels) != len(idx):
+                raise TransportError(
+                    f"reply carries {len(res.labels)} labels for "
+                    f"{len(idx)} rows"
+                )
+            return res.labels
         raise TransportError(
             f"{self.address[0]}:{self.address[1]} unreachable after "
             f"{self.retries + 1} attempts: {last}"
         ) from last
 
-    def execute(self, group: str, idx: np.ndarray) -> np.ndarray:
-        """Label ``idx`` through the server-side ``group``; returns (n,)
-        float64 labels.  Raises :class:`RemoteExecutionError` on application
-        errors, :class:`TransportError` when the server stays unreachable."""
-        idx = np.asarray(idx)
-        if idx.ndim == 1:
-            idx = idx[:, None]
-        self._seq += 1
-        req = LabelRequest(group=group, idx=idx, request_id=self._seq)
-        mtype, payload = self._roundtrip(MSG_EXEC, req.to_bytes())
-        if mtype not in (MSG_RESULT, MSG_ERROR):
-            raise TransportError(f"unexpected reply type 0x{mtype:02x}")
-        res = LabelResult.from_bytes(payload)
-        # error replies surface before the id check: the server may not have
-        # decoded our request far enough to know its id (one in-flight EXEC
-        # per connection makes the attribution unambiguous anyway)
-        if not res.ok:
-            raise RemoteExecutionError(res.error)
-        if res.request_id != req.request_id:
-            raise TransportError(
-                f"reply id {res.request_id} != request id {req.request_id}"
-            )
-        if len(res.labels) != len(idx):
-            raise TransportError(
-                f"reply carries {len(res.labels)} labels for {len(idx)} rows"
-            )
-        return res.labels
+    def _control(self, mtype: int, expect: int) -> bytes:
+        """Unnumbered request/reply (GROUPS, PING) with the same
+        reconnect-retry loop as ``execute``.  At most one control request is
+        in flight per connection (``_ctrl_lock``) so wire-order matching of
+        the unnumbered replies stays unambiguous."""
+        last: Exception = TransportError("no attempt made")
+        with self._ctrl_lock:
+            for attempt in range(self.retries + 1):
+                try:
+                    fut = self._submit(
+                        lambda epoch, f: self._ctrl.append((epoch, f)),
+                        lambda sock: send_frame(sock, mtype),
+                    )
+                    rtype, payload = self._await(fut)
+                except (TransportError, OSError) as e:
+                    last = e
+                    if attempt < self.retries:
+                        time.sleep(self._backoff(attempt))
+                    continue
+                if rtype != expect:
+                    raise TransportError(
+                        f"unexpected reply type 0x{rtype:02x}")
+                return payload
+        raise TransportError(
+            f"{self.address[0]}:{self.address[1]} unreachable after "
+            f"{self.retries + 1} attempts: {last}"
+        ) from last
 
     def groups(self) -> tuple[str, ...]:
         """The server's registered group names (the worker handshake)."""
-        mtype, payload = self._roundtrip(MSG_GROUPS, b"")
-        if mtype != MSG_GROUPS_OK:
-            raise TransportError(f"unexpected reply type 0x{mtype:02x}")
-        text = payload.decode("utf-8")
+        text = self._control(MSG_GROUPS, MSG_GROUPS_OK).decode("utf-8")
         return tuple(g for g in text.split("\n") if g)
 
     def ping(self) -> bool:
         try:
-            mtype, _ = self._roundtrip(MSG_PING, b"")
-            return mtype == MSG_PONG
-        except TransportError:
+            self._control(MSG_PING, MSG_PONG)
+            return True
+        except (TransportError, RemoteExecutionError):
             return False
 
 
@@ -297,11 +445,12 @@ class RemoteOracle(Oracle):
 
     def __init__(self, address: tuple[str, int], group: str = "default",
                  retries: int = 5, backoff_s: float = 0.05,
-                 timeout_s: float = 120.0):
+                 max_backoff_s: float = 2.0, timeout_s: float = 120.0):
         super().__init__()
         self.group = str(group)
         self.conn = ServiceConnection(address, retries=retries,
                                       backoff_s=backoff_s,
+                                      max_backoff_s=max_backoff_s,
                                       timeout_s=timeout_s, announce=True)
         self.conn.connect()     # best-effort: count toward windows early
 
@@ -309,7 +458,10 @@ class RemoteOracle(Oracle):
         return self.conn.execute(self.group, idx)
 
     def service_group(self):
-        return ("remote", self.conn.address, self.group)
+        # flat str/int parts so a shared LabelStore can persist segments for
+        # this group (label_io only stores JSON-scalar key components)
+        host, port = self.conn.address
+        return ("remote", host, int(port), self.group)
 
     def close(self) -> None:
         """Drop the connection (the server sees a disconnect and stops
@@ -330,9 +482,11 @@ class RemoteWorkerClient:
     """
 
     def __init__(self, address: tuple[str, int], retries: int = 2,
-                 backoff_s: float = 0.05, timeout_s: float = 120.0):
+                 backoff_s: float = 0.05, max_backoff_s: float = 2.0,
+                 timeout_s: float = 120.0):
         self.conn = ServiceConnection(address, retries=retries,
                                       backoff_s=backoff_s,
+                                      max_backoff_s=max_backoff_s,
                                       timeout_s=timeout_s)
         self.groups: frozenset = frozenset(self.conn.groups())
 
@@ -358,12 +512,17 @@ class _Server(socketserver.ThreadingTCPServer):
 
 class _Handler(socketserver.BaseRequestHandler):
     """One connected client: count it toward window assembly, answer frames
-    until EOF.  One thread per connection (ThreadingTCPServer), so blocking
-    on the service future is the per-client await, not a server stall."""
+    until EOF.  One thread per connection (ThreadingTCPServer) keeps reading
+    while EXECs execute asynchronously — replies are written from service
+    callbacks when each future resolves, which is what makes client-side
+    pipelining (several EXECs in flight on one connection) actually overlap
+    server-side instead of queueing behind the first future."""
 
     def handle(self) -> None:
         owner = self.server.owner
         self.request.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # interleaved replies from concurrent futures must not split frames
+        self._wlock = threading.Lock()
         owner._track(self.request, add=True)
         # window assembly waits only for ANNOUNCED connections: a query
         # client HELLOs at connect (and its first EXEC counts as an implicit
@@ -396,19 +555,32 @@ class _Handler(socketserver.BaseRequestHandler):
                     owner.service.client_disconnected(client_id)
                     counted = False
                 if mtype == MSG_PING:
-                    send_frame(self.request, MSG_PONG)
+                    with self._wlock:
+                        send_frame(self.request, MSG_PONG)
                 elif mtype == MSG_GROUPS:
                     names = "\n".join(sorted(owner.groups))
-                    send_frame(self.request, MSG_GROUPS_OK,
-                               names.encode("utf-8"))
+                    with self._wlock:
+                        send_frame(self.request, MSG_GROUPS_OK,
+                                   names.encode("utf-8"))
                 else:
                     res = LabelResult(error=f"ProtocolError: unknown message "
                                             f"type 0x{mtype:02x}")
-                    send_frame(self.request, MSG_ERROR, res.to_bytes())
+                    with self._wlock:
+                        send_frame(self.request, MSG_ERROR, res.to_bytes())
         finally:
             if counted:
                 owner.service.client_disconnected(client_id)
             owner._track(self.request, add=False)
+
+    def _reply(self, mtype: int, res: LabelResult) -> None:
+        """Write one reply frame; a failing send means the client is gone —
+        swallow it (the reader loop will notice EOF and clean up) rather
+        than crash whichever service thread delivered the result."""
+        try:
+            with self._wlock:
+                send_frame(self.request, mtype, res.to_bytes())
+        except OSError:
+            pass
 
     def _exec(self, owner: "OracleServiceServer", client_id: int,
               payload: bytes) -> None:
@@ -418,32 +590,45 @@ class _Handler(socketserver.BaseRequestHandler):
             # a deterministic protocol error (version skew, corrupt segment)
             # must be an ERROR reply, not a dropped connection the client
             # would misread as "server unreachable" and retry-loop against
-            res = LabelResult(error=f"ProtocolError: undecodable EXEC "
-                                    f"payload ({type(e).__name__}: {e})")
-            send_frame(self.request, MSG_ERROR, res.to_bytes())
+            self._reply(MSG_ERROR, LabelResult(
+                error=f"ProtocolError: undecodable EXEC "
+                      f"payload ({type(e).__name__}: {e})"))
             return
         fn = owner.groups.get(req.group)
         if fn is None:
-            res = LabelResult(request_id=req.request_id,
-                              error=f"RemoteExecutionError: unknown group "
-                                    f"{req.group!r} (registered: "
-                                    f"{sorted(owner.groups)})")
-            send_frame(self.request, MSG_ERROR, res.to_bytes())
+            self._reply(MSG_ERROR, LabelResult(
+                request_id=req.request_id,
+                error=f"RemoteExecutionError: unknown group "
+                      f"{req.group!r} (registered: "
+                      f"{sorted(owner.groups)})"))
             return
+
+        def _deliver(fut) -> None:
+            try:
+                labels = fut.result()
+                mtype = MSG_RESULT
+                res = LabelResult(request_id=req.request_id, labels=labels)
+            except BaseException as e:  # noqa: BLE001 — isolate per client
+                # ANY execution failure — including a backend raising
+                # OSError — is an application error the client must see as
+                # ERROR (no transport retry)
+                mtype = MSG_ERROR
+                res = LabelResult(request_id=req.request_id,
+                                  error=f"{type(e).__name__}: {e}")
+            self._reply(mtype, res)
+
         try:
             fut = owner.service.submit_raw(req.group, fn, req.idx,
                                            client_id=client_id)
-            labels = fut.result()
-            mtype, res = MSG_RESULT, LabelResult(request_id=req.request_id,
-                                                 labels=labels)
-        except BaseException as e:  # noqa: BLE001 — isolate per client
-            # ANY execution failure — including a backend raising OSError —
-            # is an application error the client must see as ERROR (no
-            # transport retry); only a failing send below drops the client
-            mtype, res = MSG_ERROR, LabelResult(
-                request_id=req.request_id, error=f"{type(e).__name__}: {e}"
-            )
-        send_frame(self.request, mtype, res.to_bytes())
+        except BaseException as e:  # noqa: BLE001
+            self._reply(MSG_ERROR, LabelResult(
+                request_id=req.request_id,
+                error=f"{type(e).__name__}: {e}"))
+            return
+        # reply when the window resolves — NOT inline — so this thread goes
+        # straight back to recv and further pipelined EXECs from the same
+        # client can join the window this one is still waiting on
+        fut.add_done_callback(_deliver)
 
 
 class OracleServiceServer:

@@ -1,0 +1,307 @@
+"""Shared label store: charge-once oracle caching across queries.
+
+The contract under test: attaching a :class:`repro.serve.label_store
+.LabelStore` to an :class:`OracleService` changes *who pays* for a label
+(first requester; everyone else rides free via ``store_hits``) but nothing
+about *what* any query computes — ``calls`` advances exactly as in serial
+execution, so estimates stay bit-identical, while summed ``charged`` is
+bounded by the number of distinct pairs ever labelled.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import Agg, ModelOracle, Query, run_bas
+from repro.core.oracle import OracleBatch
+from repro.data import make_clustered_tables
+from repro.serve.label_store import (
+    LabelStore,
+    pack_tuples,
+    persistable_key,
+    unpack_tuples,
+)
+from repro.serve.oracle_service import OracleService
+
+
+def _flush_concurrently(batches):
+    """Flush all batches from separate threads so they land in one service
+    window; returns the futures' exceptions (None for success)."""
+    outcomes = [None] * len(batches)
+    barrier = threading.Barrier(len(batches))
+
+    def go(i):
+        barrier.wait()
+        try:
+            batches[i].flush_async().result()
+        except BaseException as e:  # noqa: BLE001
+            outcomes[i] = e
+
+    threads = [threading.Thread(target=go, args=(i,))
+               for i in range(len(batches))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return outcomes
+
+
+def _counting_scorer(rows):
+    """Deterministic pair scorer that records every row it executes."""
+    lock = threading.Lock()
+
+    def scorer(idx):
+        with lock:
+            rows.append(np.array(idx))
+        return ((idx[:, 0] * 31 + idx[:, 1]) % 97 / 96.0).astype(np.float64)
+
+    return scorer
+
+
+# ----------------------------------------------------------------------------
+# charge-once accounting
+# ----------------------------------------------------------------------------
+
+def test_concurrent_identical_pairs_charge_once():
+    """Two queries racing on the same uncached pair in one window: exactly
+    one backend execution, one total charge — and both oracles' ``calls``
+    advance as in serial execution (the budget guarantee is untouched)."""
+    rows = []
+    scorer = _counting_scorer(rows)
+    a = ModelOracle(scorer, threshold=0.5)
+    b = ModelOracle(scorer, threshold=0.5)
+    for o in (a, b):
+        o.bind_sizes((64, 64))
+    store = LabelStore()
+    idx = np.array([[3, 4]])
+    with OracleService(max_wait_ms=500.0, label_store=store) as svc:
+        svc.attach(a, b)
+        ba, bb = OracleBatch(a), OracleBatch(b)
+        ha, hb = ba.submit(idx), bb.submit(idx)
+        out = _flush_concurrently([ba, bb])
+    assert out == [None, None]
+    assert sum(len(r) for r in rows) == 1            # one backend execution
+    np.testing.assert_array_equal(ha.labels, hb.labels)
+    assert a.calls == 1 and b.calls == 1             # pacing as in serial
+    assert a.charged + b.charged == 1                # ...but one charge total
+    assert a.store_hits + b.store_hits == 1
+    assert a.store_charge_saved + b.store_charge_saved == 1
+    assert store.stats()["store_shared"] == 1
+    assert store.stats()["store_misses"] == 1
+
+
+def test_repeat_query_served_from_store_without_recharge():
+    """A later query (fresh oracle, same scorer group) repeating already-
+    stored pairs executes nothing and charges nothing."""
+    rows = []
+    scorer = _counting_scorer(rows)
+    store = LabelStore()
+    idx = np.array([[0, 1], [2, 3], [4, 5]])
+    with OracleService(max_wait_ms=1.0, label_store=store) as svc:
+        first = ModelOracle(scorer, threshold=0.5)
+        first.bind_sizes((64, 64))
+        svc.attach(first)
+        first.label(idx)
+        svc.detach(first)
+        assert first.charged == 3 and first.store_hits == 0
+
+        again = ModelOracle(scorer, threshold=0.5)
+        again.bind_sizes((64, 64))
+        svc.attach(again)
+        got = again.label(idx)
+        svc.detach(again)
+    assert sum(len(r) for r in rows) == 3            # only the first paid
+    np.testing.assert_array_equal(got, first.label(idx))
+    assert again.calls == 3                          # acquired, as in serial
+    assert again.charged == 0 and again.store_hits == 3
+    assert store.stats()["store_hit_rate"] == 0.5
+    assert store.stats()["store_entries"] == 3
+
+
+def test_estimates_bit_identical_and_total_charges_bounded():
+    """Full BAS queries through a stored service: estimates and CIs are
+    bit-identical to serial execution, a repeat query charges zero, and the
+    summed ledger charge equals the store's distinct-pair count — the
+    acceptance bound."""
+    ds = make_clustered_tables(60, 60, n_entities=90, noise=0.4, seed=21)
+    rows = []
+    scorer = _counting_scorer(rows)
+
+    def fresh_query():
+        o = ModelOracle(scorer, threshold=0.5, name="shared")
+        return Query(spec=ds.spec(), agg=Agg.COUNT, oracle=o, budget=700)
+
+    ref_q = fresh_query()
+    ref = run_bas(ref_q, seed=9)
+    rows.clear()
+
+    store = LabelStore()
+    results, oracles = [], []
+    with OracleService(max_wait_ms=1.0, label_store=store) as svc:
+        for _ in range(3):                           # 1 first + 2 repeats
+            q = fresh_query()
+            oracles.append(q.oracle)
+            svc.attach(q.oracle)
+            results.append(run_bas(q, seed=9))
+            svc.detach(q.oracle)
+
+    for res, o in zip(results, oracles):
+        assert res.estimate == ref.estimate          # bit-identical
+        assert res.ci.lo == ref.ci.lo and res.ci.hi == ref.ci.hi
+        assert o.calls == ref_q.oracle.calls         # pacing unchanged
+    assert oracles[0].charged == ref_q.oracle.calls  # first requester pays
+    assert oracles[1].charged == 0                   # repeats ride free
+    assert oracles[2].charged == 0
+    # the acceptance bound: total charges == distinct pairs ever labelled
+    total_charged = sum(o.charged for o in oracles)
+    assert total_charged == store.stats()["store_entries"]
+    assert sum(len(r) for r in rows) == total_charged
+    # the discount is surfaced per query result
+    assert results[1].detail["oracle"]["store_hits"] == oracles[1].calls
+    assert results[1].detail["oracle"]["store_charge_saved"] > 0
+
+
+# ----------------------------------------------------------------------------
+# memory budget: LRU segment eviction + single-segment trim
+# ----------------------------------------------------------------------------
+
+def _fill(store, seg_key, keys, val=1.0):
+    keys = np.asarray(sorted(keys), np.int64)
+    plan = store.plan(seg_key, keys)
+    store.publish(plan, np.full(len(plan.miss_keys), val))
+
+
+def test_lru_segment_eviction_under_pressure():
+    # 24 bytes/entry (key + val + gen): budget for ~40 entries
+    store = LabelStore(max_bytes=40 * 24)
+    for g in range(5):
+        _fill(store, ("seg", g), range(g * 100, g * 100 + 20))
+    assert store.bytes_resident <= store.max_bytes
+    assert store.stats()["store_evictions"] >= 1
+    # the newest (hot) segment survives; the LRU-oldest was evicted
+    assert store.resident(("seg", 4), np.arange(400, 420)).all()
+    assert not store.resident(("seg", 0), np.arange(0, 20)).any()
+
+
+def test_lone_over_budget_segment_trims_its_oldest_half():
+    store = LabelStore(max_bytes=30 * 24)
+    _fill(store, ("only",), range(0, 20))            # oldest generation
+    _fill(store, ("only",), range(100, 120))
+    _fill(store, ("only",), range(200, 220))         # newest generation
+    assert store.bytes_resident <= store.max_bytes
+    assert store.stats()["store_evictions"] == 0     # nothing else to evict
+    assert store.stats()["store_trimmed"] >= 20
+    # oldest-inserted entries went first; the newest batch is untouched
+    assert store.resident(("only",), np.arange(200, 220)).all()
+    assert not store.resident(("only",), np.arange(0, 20)).any()
+
+
+def test_failed_plan_cancels_reservations_retryably():
+    store = LabelStore()
+    keys = np.array([1, 2, 3], np.int64)
+    plan = store.plan(("seg",), keys)
+    waiter = store.plan(("seg",), keys)              # rides plan's call
+    assert len(waiter.miss_keys) == 0 and len(waiter.wait) == 1
+    store.cancel(plan, RuntimeError("backend down"))
+    with pytest.raises(RuntimeError):
+        waiter.wait[0][0].result(timeout=1.0)        # waiter fails retryably
+    retry = store.plan(("seg",), keys)               # keys reservable again
+    assert len(retry.miss_keys) == 3
+    store.publish(retry, np.ones(3))
+    assert store.resident(("seg",), keys).all()
+
+
+# ----------------------------------------------------------------------------
+# persistence
+# ----------------------------------------------------------------------------
+
+def test_persistence_roundtrip_and_process_local_exclusion(tmp_path):
+    root = str(tmp_path / "labels")
+    store = LabelStore(root=root)
+    stable = (("scorer", "shared", 0.5), ("sizes", 64, 64))
+    assert persistable_key(stable)
+    _fill(store, stable, [10, 20, 30], val=0.25)
+    # an id()-derived (process-local) group coalesces in memory but must
+    # never be persisted — its key is meaningless in another process
+    local = ModelOracle(lambda i: np.zeros(len(i)), threshold=0.5)
+    local_key = (local.service_group(), ("sizes", 64, 64))
+    assert not persistable_key(local_key)
+    _fill(store, local_key, [1, 2, 3])
+    assert store.save() == 1                         # only the stable segment
+
+    revived = LabelStore(root=root)
+    assert revived.loads == 1
+    assert revived.resident(stable, np.array([10, 20, 30])).all()
+    assert not revived.resident(local_key, np.array([1, 2, 3])).any()
+    plan = revived.plan(stable, np.array([10, 20, 30], np.int64))
+    assert len(plan.miss_keys) == 0
+    np.testing.assert_array_equal(plan.hit_vals, [0.25, 0.25, 0.25])
+
+
+def test_service_restart_keeps_hot_labels(tmp_path):
+    """End to end: a named oracle's labels survive OracleService.close() ->
+    new store -> new service; the repeat query executes zero backend rows."""
+    root = str(tmp_path / "labels")
+    rows = []
+    scorer = _counting_scorer(rows)
+    idx = np.array([[1, 2], [3, 4], [5, 6]])
+
+    with OracleService(max_wait_ms=1.0,
+                       label_store=LabelStore(root=root)) as svc:
+        o = ModelOracle(scorer, threshold=0.5, name="persisted")
+        o.bind_sizes((64, 64))
+        svc.attach(o)
+        first = o.label(idx)
+        svc.detach(o)
+    # close() saved; a fresh service + store + oracle serves from disk
+    with OracleService(max_wait_ms=1.0,
+                       label_store=LabelStore(root=root)) as svc:
+        o2 = ModelOracle(scorer, threshold=0.5, name="persisted")
+        o2.bind_sizes((64, 64))
+        svc.attach(o2)
+        again = o2.label(idx)
+        svc.detach(o2)
+    np.testing.assert_array_equal(again, first)
+    assert sum(len(r) for r in rows) == 3            # restart cost no charges
+    assert o2.charged == 0 and o2.store_hits == 3
+
+
+# ----------------------------------------------------------------------------
+# the transport (raw-segment) path
+# ----------------------------------------------------------------------------
+
+def test_wire_exec_answers_are_store_served():
+    """Raw EXEC segments go through the same store consultation: duplicate
+    rows inside one request cost one execution, and a repeat request from
+    another connection executes nothing."""
+    from repro.serve.transport import OracleServiceServer, ServiceConnection
+
+    rows = []
+    lock = threading.Lock()
+
+    def fn(idx):
+        with lock:
+            rows.append(np.array(idx))
+        return (idx.sum(axis=1) % 2).astype(np.float64)
+
+    idx = np.array([[5, 6], [1, 2], [5, 6], [3, 4]])  # unsorted + duplicate
+    with OracleServiceServer({"parity": fn}, max_wait_ms=2.0,
+                             label_store=LabelStore()) as server:
+        with ServiceConnection(server.address) as conn:
+            got = conn.execute("parity", idx)
+            np.testing.assert_array_equal(got, idx.sum(1) % 2)
+            assert sum(len(r) for r in rows) == 3     # unique rows only
+        with ServiceConnection(server.address) as conn2:
+            again = conn2.execute("parity", idx[::-1])
+            np.testing.assert_array_equal(again, idx[::-1].sum(1) % 2)
+        stats = server.service.stats()
+    assert sum(len(r) for r in rows) == 3             # repeat executed nothing
+    assert stats["store_hits"] >= 3
+
+
+def test_pack_roundtrip_and_overflow_guard():
+    idx = np.array([[0, 1], [2**31 - 1, 7], [123456, 654321]], np.int64)
+    keys = pack_tuples(idx)
+    np.testing.assert_array_equal(unpack_tuples(keys, 2), idx)
+    assert pack_tuples(np.array([[2**31, 0]])) is None   # exceeds 63//2 bits
+    assert pack_tuples(np.array([[-1, 0]])) is None

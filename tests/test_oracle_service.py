@@ -476,6 +476,58 @@ def test_control_plane_connections_do_not_stall_windows():
     assert dt < 2.0                                  # far below the deadline
 
 
+def test_pipelined_execs_on_one_connection_fuse_into_one_window():
+    """Request pipelining: two concurrent EXECs on ONE connection must both
+    be in flight server-side — i.e. fuse into a single window and a single
+    backend call.  Pre-pipelining, the server thread blocked on the first
+    EXEC's future before reading the second, which made same-connection
+    fusion impossible."""
+    from repro.serve.transport import ServiceConnection
+
+    calls = []
+    lock = threading.Lock()
+
+    def fn(idx):
+        with lock:
+            calls.append(np.array(idx))
+        return _parity_fn(idx)
+
+    idxs = [np.array([[0, 1], [2, 3]]), np.array([[4, 5], [6, 7]])]
+    results = [None, None]
+    with OracleServiceServer({"parity": fn}, max_wait_ms=500.0) as server:
+        # an announced client that never flushes holds the window open for
+        # the full deadline — long enough for both pipelined EXECs to join
+        holder = ServiceConnection(server.address, announce=True)
+        holder.connect()
+        with ServiceConnection(server.address, announce=True) as conn:
+            barrier = threading.Barrier(2)
+
+            def go(i):
+                barrier.wait()
+                results[i] = conn.execute("parity", idxs[i])
+
+            threads = [threading.Thread(target=go, args=(i,))
+                       for i in range(2)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+        holder.close()
+    assert len(calls) == 1                           # one fused backend call
+    assert len(calls[0]) == 4
+    for i in range(2):                               # demuxed to the right
+        np.testing.assert_array_equal(results[i], idxs[i].sum(1) % 2)
+
+
+def test_reconnect_backoff_is_capped_and_jittered():
+    from repro.serve.transport import ServiceConnection
+
+    c = ServiceConnection(("127.0.0.1", 1), backoff_s=0.05, max_backoff_s=0.2)
+    sleeps = [c._backoff(a) for a in range(10)] * 3
+    assert all(0 < s <= 0.2 * 1.5 for s in sleeps)   # cap * max jitter
+    assert len({round(c._backoff(5), 9) for _ in range(20)}) > 1  # jittered
+
+
 def test_remote_unknown_group_raises_application_error():
     with OracleServiceServer({"parity": _parity_fn},
                              max_wait_ms=2.0) as server:
