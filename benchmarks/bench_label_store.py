@@ -58,7 +58,7 @@ def _pair_sets(n_side: int, n_clients: int, n_pairs: int, seed: int = 5):
 
 def _run_arm(scorer, sizes, pair_sets, rounds: int, store):
     """Q concurrent labelling clients per round, fresh oracles each round;
-    returns (wall_s, acquired, charged, per-client label arrays, stats)."""
+    returns (wall_s, acquired, charged, per-client label arrays, snapshot)."""
     calls = charged = 0
     wall = 0.0
     labels = None
@@ -84,7 +84,7 @@ def _run_arm(scorer, sizes, pair_sets, rounds: int, store):
             wall += time.perf_counter() - t0
             calls += sum(o.calls for o in oracles)
             charged += sum(o.charged for o in oracles)
-        stats = svc.stats()
+        stats = svc.snapshot()
     return wall, calls, charged, labels, stats
 
 
@@ -126,15 +126,15 @@ def run(fast: bool = True, smoke: bool = False):
     for a, b in zip(labels_off, labels_on):  # ...and bit-identical
         np.testing.assert_array_equal(a, b)
     # the charge-once bound: total charges == distinct pairs ever labelled
-    assert charged_on == stats["store_entries"] <= unique_pairs, (
-        charged_on, stats["store_entries"], unique_pairs,
+    assert charged_on == stats["label_store.entries"] <= unique_pairs, (
+        charged_on, stats["label_store.entries"], unique_pairs,
     )
     rate_on = calls_on / max(wall_on, 1e-9)
     speedup = rate_on / max(rate_off, 1e-9)
     rows.append(row(
         f"label_store_on_q{n_clients}", wall_on / max(calls_on, 1),
         f"labels_per_s={rate_on:.0f};speedup={speedup:.2f}x;"
-        f"hit_rate={stats['store_hit_rate']:.2f};"
+        f"hit_rate={stats['label_store.hit_rate']:.2f};"
         f"charged={charged_on};charge_saved={calls_on - charged_on};"
         f"rows_executed={scorer_on.rows_padded}",
     ))
@@ -172,7 +172,7 @@ def run(fast: bool = True, smoke: bool = False):
     assert q1.oracle.charged == ref_q.oracle.calls   # first requester pays
     assert q2.oracle.charged == 0                    # the repeat rides free
     assert (q1.oracle.charged + q2.oracle.charged
-            == bas_store.stats()["store_entries"])
+            == bas_store.snapshot()["label_store.entries"])
     rows.append(row(
         "label_store_bas_repeat", t_run,
         f"charged={q2.oracle.charged};"

@@ -30,7 +30,7 @@ def run(fast: bool = True, smoke: bool = False):
     q = Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(),
               budget=max(n * n // 40, 2000))
     res = run_bas(q, seed=0)
-    t = res.detail["timings"]
+    t = res.telemetry.timings
     total = t["total_s"]
     for phase in ("similarity_s", "stratify_s", "pilot_s", "allocate_s",
                   "execute_s", "ci_s"):

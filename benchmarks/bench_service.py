@@ -26,17 +26,27 @@ per-query latency; async/tcp rows add the speedup over serial and the
 window/backend-call counts.  ``service_index_{cold|warm}`` runs repeat
 streaming queries through a service-resident
 :class:`~repro.core.index.IndexStore` and surfaces the index counters the
-service's ``stats()`` now carries (``index_hit`` / ``index_build_ms`` /
-``delta_blocks``).  Run via ``python -m benchmarks.run --only service``
-(``--json`` for the artifact CI uploads).
+service's unified ``snapshot()`` carries (``index_store.warm_hits`` /
+``index_store.build_ms`` / ``index_store.delta_blocks``).
+``service_tracker_{off,on}_q16`` re-runs the 16-query fleet with a live
+:class:`~repro.obs.JsonlTracker` and gates its hot-path overhead;
+``service_admission_saturated`` saturates a rate-limited backend and gates
+deadline-based admission control.  Run via
+``python -m benchmarks.run --only service`` (``--json`` for the artifact CI
+uploads; the tracker arm also writes ``bench-tracker.jsonl`` — path override
+``REPRO_BENCH_TRACKER`` — which CI uploads alongside it).
 
 CI gates (asserted here, exercised by the workflow's smoke-bench job with
 ``--smoke``): (a) the in-process service reaches >= 2x serial labels/sec at
 16 concurrent queries; (b) loopback TCP stays within 1.5x of the in-process
 service's labels/sec at 16 queries while still >= 2x serial, with estimates
-bit-identical to the serial path.  The speedups are structural — coalescing
-divides the padded-row and launch counts — so they are machine-independent
-as long as scorer compute dominates, which this profile is sized for.
+bit-identical to the serial path; (c) tracker-enabled serving loses <= 5%
+labels/sec vs. tracker-off at 16 concurrent queries; (d) under a saturated
+queue, admission control keeps the in-deadline class's p99 <= 2x its
+unsaturated p99 while shed flushes raise typed retryable rejections with
+zero ledger charges.  The speedups are structural — coalescing divides the
+padded-row and launch counts — so they are machine-independent as long as
+scorer compute dominates, which this profile is sized for.
 """
 from __future__ import annotations
 
@@ -94,9 +104,9 @@ class PaddedDeviceScorer:
 
 def _run_fleet(ds, scorer, weights, n_queries: int, budget: int,
                cfg: BASConfig, service: bool, workers: int,
-               max_wait_ms: float):
+               max_wait_ms: float, tracker=None):
     """Run ``n_queries`` BAS queries labelling through ``scorer``; returns
-    (total oracle calls, per-query latencies, wall seconds, service stats).
+    (total oracle calls, per-query latencies, wall seconds, service snapshot).
 
     ``weights`` is the precomputed chain-weight array shared by every query
     (read-only) — same-spec queries share the similarity index in a serving
@@ -126,7 +136,7 @@ def _run_fleet(ds, scorer, weights, n_queries: int, budget: int,
     # in-process backend (the thread pool pays off for multi-replica or
     # GIL-bound backends; covered in tests/test_oracle_service.py)
     with OracleService(workers=workers, max_wait_ms=max_wait_ms,
-                       min_shard=4096) as svc:
+                       min_shard=4096, tracker=tracker) as svc:
         svc.attach(*oracles)
 
         def served(i: int):
@@ -138,7 +148,7 @@ def _run_fleet(ds, scorer, weights, n_queries: int, budget: int,
         t0 = time.perf_counter()
         results = serve_queries(svc, [lambda i=i: served(i) for i in range(n_queries)])
         wall = time.perf_counter() - t0
-        stats = svc.stats()
+        stats = svc.snapshot()
     return queries, results, lat, wall, stats
 
 
@@ -173,8 +183,140 @@ def _run_fleet_tcp(ds, scorer, weights, n_queries: int, budget: int,
             server.service, [lambda i=i: job(i) for i in range(n_queries)]
         )
         wall = time.perf_counter() - t0
-        stats = server.service.stats()
+        stats = server.service.snapshot()
     return queries, results, lat, wall, stats
+
+
+def _tracker_overhead_rows(ds, scorer, weights, budget, cfg):
+    """``service_tracker_{off,on}_q16``: the 16-query async fleet with the
+    default :class:`NoopTracker` vs. a live :class:`JsonlTracker` — the
+    instrumented hot path (window assembly timing, per-shard latency,
+    per-class flush histograms, JSONL emission) must cost <= 5% labels/sec.
+    Arms interleave and take best-of-2 so the gate measures the tracker, not
+    scheduler noise; the JSONL file is the artifact CI's smoke-bench uploads
+    (override the path with ``REPRO_BENCH_TRACKER``)."""
+    import os
+
+    from repro.obs import JsonlTracker
+
+    path = os.environ.get("REPRO_BENCH_TRACKER", "bench-tracker.jsonl")
+    if os.path.exists(path):
+        os.remove(path)
+    best = {"off": 0.0, "on": 0.0}
+    snap_on = {}
+    for _ in range(2):                      # best-of-2, interleaved arms
+        for arm in ("off", "on"):
+            tracker = JsonlTracker(path) if arm == "on" else None
+            qs, results, _, wall, snap = _run_fleet(
+                ds, scorer, weights, 16, budget, cfg, service=True,
+                workers=1, max_wait_ms=8.0, tracker=tracker,
+            )
+            assert all(np.isfinite(r.estimate) for r in results)
+            labels = sum(q.oracle.calls for q in qs)
+            best[arm] = max(best[arm], labels / max(wall, 1e-9))
+            if tracker is not None:
+                snap_on = snap
+                tracker.close()
+    # the instrumented run actually recorded the hot-path series
+    assert "service.window.assembly_ms.p50" in snap_on, snap_on
+    assert "service.shard.local_ms.p99" in snap_on, snap_on
+    assert os.path.getsize(path) > 0, f"tracker JSONL {path} is empty"
+    overhead = 1.0 - best["on"] / max(best["off"], 1e-9)
+    assert overhead <= 0.05, (
+        f"tracker-enabled service lost {overhead * 100:.1f}% labels/sec at 16 "
+        f"concurrent queries (> 5%): instrumentation leaked into the hot path"
+    )
+    return [
+        row("service_tracker_off_q16", 1.0 / max(best["off"], 1e-9),
+            f"labels_per_s={best['off']:.0f}"),
+        row("service_tracker_on_q16", 1.0 / max(best["on"], 1e-9),
+            f"labels_per_s={best['on']:.0f};"
+            f"overhead={overhead * 100:.1f}%;"
+            f"jsonl={path}"),
+    ]
+
+
+def _admission_saturated_row(smoke: bool):
+    """``service_admission_saturated``: a rate-limited backend (sleep-bound at
+    1000 rows/s) serving one deadline-class client while bulk raw segments
+    saturate the queue.  Flushes the predicted wait would blow past the
+    deadline are shed with typed retryable :class:`AdmissionRejected` and
+    zero ledger movement; admitted (in-deadline) flushes keep p99 <= 2x the
+    unsaturated p99 — the acceptance gate for deadline-based admission."""
+    from repro.core import FnOracle
+    from repro.serve.oracle_service import AdmissionRejected
+
+    def slow_fn(idx):
+        time.sleep(len(idx) * 1e-3)         # deterministic 1000 rows/s
+        return (idx.sum(axis=1) % 2).astype(np.float64)
+
+    side = 1 << 20
+    seq = {"n": 0}
+
+    def fresh_idx(n):                       # never-repeating pairs: no cache
+        base = np.arange(seq["n"], seq["n"] + n, dtype=np.int64)
+        seq["n"] += n
+        return np.stack([base % side, (base * 7 + 1) % side], axis=1)
+
+    n_unsat, n_bulk, bulk_rows, n_admit = (
+        (8, 2, 800, 6) if smoke else (12, 3, 1200, 10)
+    )
+    rt = FnOracle(slow_fn)
+    rt.bind_sizes((side, side))
+    rejections = 0
+    with OracleService(workers=1, max_wait_ms=4.0,
+                       min_shard=1 << 30) as svc:
+        svc.attach(rt)
+        unsat = []
+        for _ in range(n_unsat):
+            idx = fresh_idx(40)
+            t0 = time.perf_counter()
+            rt.label(idx)
+            unsat.append(time.perf_counter() - t0)
+        p99_unsat = float(np.quantile(unsat, 0.99))
+        # a deadline the unsaturated path clears with room and the saturated
+        # queue cannot: admitted waits stay bounded by it
+        deadline_ms = 1.5 * p99_unsat * 1e3
+        svc.attach(rt, deadline_ms=deadline_ms, query_class="rt")
+
+        bulk_futs = [svc.submit_raw("bulk", slow_fn, fresh_idx(bulk_rows))
+                     for _ in range(n_bulk)]
+        admitted = []
+        t_end = time.monotonic() + 60.0
+        while len(admitted) < n_admit and time.monotonic() < t_end:
+            idx = fresh_idx(40)
+            calls_before, charged_before = rt.calls, rt.charged
+            t0 = time.perf_counter()
+            try:
+                rt.label(idx)
+            except AdmissionRejected as e:
+                assert e.retryable is True
+                assert rt.calls == calls_before      # shed = zero charge
+                assert rt.charged == charged_before
+                rejections += 1
+                time.sleep(0.02)
+            else:
+                admitted.append(time.perf_counter() - t0)
+        for fut in bulk_futs:
+            fut.result()
+        snap = svc.snapshot()
+    assert len(admitted) >= n_admit, "saturated queue never drained"
+    assert rejections >= 1, "saturation never shed an over-deadline flush"
+    assert snap["service.admission.rejected"] == float(rejections)
+    p99_admitted = float(np.quantile(admitted, 0.99))
+    assert p99_admitted <= 2.0 * p99_unsat, (
+        f"in-deadline-class p99 {p99_admitted * 1e3:.0f}ms exceeds 2x the "
+        f"unsaturated p99 {p99_unsat * 1e3:.0f}ms: admission control is not "
+        f"protecting admitted flushes"
+    )
+    return row(
+        "service_admission_saturated", p99_admitted,
+        f"p99_unsat_ms={p99_unsat * 1e3:.0f};"
+        f"p99_admitted_ms={p99_admitted * 1e3:.0f};"
+        f"deadline_ms={deadline_ms:.0f};"
+        f"rejected={rejections};"
+        f"shed_charges=0",
+    )
 
 
 def run(fast: bool = True, smoke: bool = False):
@@ -226,9 +368,10 @@ def run(fast: bool = True, smoke: bool = False):
             f"speedup={speedup:.2f}x;"
             f"p50_ms={np.quantile(lat_a, 0.5) * 1e3:.0f};"
             f"p99_ms={np.quantile(lat_a, 0.99) * 1e3:.0f};"
-            f"windows={stats['windows']};"
-            f"segments_per_window={stats['segments_per_window']};"
-            f"backend_calls={stats['backend_calls']}",
+            f"windows={stats['service.windows']:.0f};"
+            f"segments_per_window={stats['service.segments_per_window']:.2f};"
+            f"fill_recent={stats['service.window.fill_ratio_recent']:.3f};"
+            f"backend_calls={stats['service.backend_calls']:.0f}",
         ))
         # windows get extra grace over the in-process 8ms: each client's next
         # flush arrives a round trip + client-side commit later, so the same
@@ -256,9 +399,9 @@ def run(fast: bool = True, smoke: bool = False):
             f"vs_inproc={tcp_ratios[c]:.2f}x;"
             f"p50_ms={np.quantile(lat_t, 0.5) * 1e3:.0f};"
             f"p99_ms={np.quantile(lat_t, 0.99) * 1e3:.0f};"
-            f"windows={stats['windows']};"
-            f"segments_per_window={stats['segments_per_window']};"
-            f"backend_calls={stats['backend_calls']}",
+            f"windows={stats['service.windows']:.0f};"
+            f"segments_per_window={stats['service.segments_per_window']:.2f};"
+            f"backend_calls={stats['service.backend_calls']:.0f}",
         ))
     # --- index-aware serving ------------------------------------------------
     # Repeat streaming queries through a service-resident IndexStore: the
@@ -293,20 +436,24 @@ def run(fast: bool = True, smoke: bool = False):
         assert res_warm.estimate == res_cold.estimate, (
             "index-hydrated streaming estimate diverged from the cold build"
         )
-        stats = svc.stats()
-    assert stats["index_miss"] == 1 and stats["index_hit"] == 1, stats
+        stats = svc.snapshot()
+    assert stats["index_store.misses"] == 1.0, stats
+    assert stats["index_store.warm_hits"] == 1.0, stats
     rows.append(row(
         "service_index_cold", t_cold,
-        f"index_miss={stats['index_miss']};"
-        f"index_build={stats['index_build']};"
-        f"index_build_ms={stats['index_build_ms']:.1f}",
+        f"index_miss={stats['index_store.misses']:.0f};"
+        f"index_build={stats['index_store.builds']:.0f};"
+        f"index_build_ms={stats['index_store.build_ms']:.1f}",
     ))
     rows.append(row(
         "service_index_warm", t_warm,
-        f"index_hit={stats['index_hit']};"
-        f"index_bytes={stats['index_bytes']};"
-        f"delta_blocks={stats['delta_blocks']}",
+        f"index_hit={stats['index_store.warm_hits']:.0f};"
+        f"index_bytes={stats['index_store.bytes']:.0f};"
+        f"delta_blocks={stats['index_store.delta_blocks']:.0f}",
     ))
+
+    rows.extend(_tracker_overhead_rows(ds, scorer, weights, budget, cfg))
+    rows.append(_admission_saturated_row(smoke))
 
     if 16 in speedups:
         # acceptance headline: cross-query coalescing must at least halve the

@@ -25,10 +25,17 @@ into a hard failure: the diff exits non-zero (even under ``--warn-only``)
 unless the results came from a compiled backend — this is the flag the
 eventual TPU perf job sets so only compiled runs gate merges.
 
+``--require-rows name1,name2`` declares rows the run must contain regardless
+of any baseline — the hook CI uses for coverage-style rows (the tracker
+overhead and admission-saturation rows): a missing required row is a hard
+failure even under ``--warn-only``, because it means the gate that row
+carries never executed.
+
 Usage::
 
     python scripts/bench_diff.py RESULTS.json BASELINE.json [BASELINE2.json ...]
         [--threshold 1.5] [--warn-only] [--require-compiled]
+        [--require-rows name1,name2,...]
 """
 from __future__ import annotations
 
@@ -90,6 +97,9 @@ def main() -> None:
                     help="fail unless the results were produced by a "
                          "compiled backend (tpu/gpu) — the certified perf "
                          "gate; overrides --warn-only")
+    ap.add_argument("--require-rows", default="",
+                    help="comma-separated row names the run must contain; "
+                         "a missing row fails even under --warn-only")
     args = ap.parse_args()
 
     with open(args.results) as f:
@@ -112,6 +122,18 @@ def main() -> None:
         for line in regressions:
             print(f"[bench-diff]   SLOW {line}{tag}", file=sys.stderr)
         all_regressions += regressions
+    required = [n for n in args.require_rows.split(",") if n]
+    if required:
+        present = _rows(current)
+        missing = [n for n in required if n not in present]
+        for n in required:
+            if n in present:
+                print(f"[bench-diff]   ok   {n}: required row present")
+        for n in missing:
+            print(f"[bench-diff]   MISSING required row {n}: its gate never "
+                  f"ran", file=sys.stderr)
+        if missing:
+            raise SystemExit(3)
     if args.require_compiled and not certified:
         print(f"[bench-diff] FAIL: --require-compiled but results backend "
               f"is {backend!r} (need one of {', '.join(COMPILED_BACKENDS)})",

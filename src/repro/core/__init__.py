@@ -1,4 +1,5 @@
 """JoinML-X core: the paper's algorithms (WWJ, BAS) and query engine."""
+from repro.obs import QueryTelemetry  # noqa: F401 — QueryResult.telemetry type
 from .types import (  # noqa: F401
     Agg,
     BASConfig,

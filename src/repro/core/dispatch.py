@@ -23,6 +23,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import DispatchTelemetry
+
 from .bas import run_bas
 from .bas_streaming import run_bas_streaming
 from .types import BASConfig, JoinSpec, Query, QueryResult
@@ -63,7 +65,7 @@ def run_auto(
     once an artifact exists (built by a prior streaming query or the
     ``build-index`` launcher).
 
-    The decision is recorded in ``result.detail["dispatch"]`` so callers
+    The decision is recorded in ``result.telemetry.dispatch`` so callers
     (and the crossover benchmark) can audit it.
     """
     cfg = cfg or BASConfig()
@@ -86,13 +88,13 @@ def run_auto(
             query, cfg, seed=seed, n_bins=n_bins, artifact=artifact,
             index_store=index_store if artifact is None else None,
         )
-    res.detail["dispatch"] = {
-        "path": path,
-        "dense_weight_bytes": footprint,
-        "max_dense_weight_bytes": cfg.max_dense_weight_bytes,
-        "n_tuples": query.spec.n_tuples,
-        "sweep": cfg.use_sweep,
-        "sweep_precision": cfg.sweep_precision,
-        "index_store": index_store is not None,
-    }
+    res.telemetry.dispatch = DispatchTelemetry(
+        path=path,
+        dense_weight_bytes=footprint,
+        max_dense_weight_bytes=cfg.max_dense_weight_bytes,
+        n_tuples=query.spec.n_tuples,
+        sweep=cfg.use_sweep,
+        sweep_precision=cfg.sweep_precision,
+        index_store=index_store is not None,
+    )
     return res

@@ -412,9 +412,13 @@ class IndexStore:
     (``checkpoint.index_io``, mmap load) before paying a cold sweep.
     """
 
-    def __init__(self, max_bytes: int = 1 << 30, root: Optional[str] = None):
+    def __init__(self, max_bytes: int = 1 << 30, root: Optional[str] = None,
+                 tracker=None):
+        from repro.obs import NULL_TRACKER
+
         self.max_bytes = int(max_bytes)
         self.root = root
+        self.tracker = tracker if tracker is not None else NULL_TRACKER
         self._lock = threading.Lock()
         self._entries: "OrderedDict[str, Future]" = OrderedDict()
         self._sizes: dict = {}
@@ -535,6 +539,7 @@ class IndexStore:
                 del self._entries[old_key]
                 total -= self._sizes.pop(old_key, 0)
                 self.evictions += 1
+                self.tracker.count("index_store.evictions")
 
     # ---- observability -----------------------------------------------------
 
@@ -555,3 +560,17 @@ class IndexStore:
                 "index_bytes": sum(self._sizes.values()),
                 "delta_blocks": self.delta_blocks,
             }
+
+    def snapshot(self) -> dict[str, float]:
+        """Unified stats surface: ``index_store.*`` namespaced floats."""
+        stats = self.stats()
+        return {
+            "index_store.warm_hits": float(stats["index_hit"]),
+            "index_store.misses": float(stats["index_miss"]),
+            "index_store.builds": float(stats["index_build"]),
+            "index_store.loads": float(stats["index_load"]),
+            "index_store.evictions": float(stats["index_evict"]),
+            "index_store.build_ms": float(stats["index_build_ms"]),
+            "index_store.bytes": float(stats["index_bytes"]),
+            "index_store.delta_blocks": float(stats["delta_blocks"]),
+        }

@@ -38,12 +38,44 @@ class ConfidenceInterval:
         return bool(self.lo <= value <= self.hi)
 
 
-@dataclasses.dataclass
 class QueryResult:
-    estimate: float
-    ci: ConfidenceInterval
-    oracle_calls: int
-    detail: dict = dataclasses.field(default_factory=dict)
+    """One query's answer plus typed execution telemetry.
+
+    ``telemetry`` (a :class:`repro.obs.QueryTelemetry`) is the source of
+    truth for everything the pipeline recorded — which path ran, timings,
+    ledger counters, index/store accounting.  The legacy ``detail`` dict is
+    kept as a deprecated write-through *view* of that tree: constructing with
+    ``detail={...}`` parses into the tree, and ``result.detail[...]`` reads
+    and writes through it, so pre-redesign callers keep working.
+    """
+
+    __slots__ = ("estimate", "ci", "oracle_calls", "telemetry")
+
+    def __init__(self, estimate: float, ci: ConfidenceInterval,
+                 oracle_calls: int, detail: Optional[dict] = None,
+                 telemetry: Optional["QueryTelemetry"] = None):  # noqa: F821
+        from repro.obs.telemetry import QueryTelemetry
+
+        self.estimate = estimate
+        self.ci = ci
+        self.oracle_calls = oracle_calls
+        if telemetry is None:
+            telemetry = QueryTelemetry.from_detail(detail)
+        elif detail:
+            raise TypeError("pass either detail= or telemetry=, not both")
+        self.telemetry = telemetry
+
+    @property
+    def detail(self) -> "TelemetryView":  # noqa: F821 (repro.obs.telemetry)
+        """Deprecated dict view of :attr:`telemetry` (reads/writes through)."""
+        from repro.obs.telemetry import TelemetryView, _warn_detail_deprecated
+
+        _warn_detail_deprecated()
+        return TelemetryView(self.telemetry)
+
+    def __repr__(self) -> str:
+        return (f"QueryResult(estimate={self.estimate!r}, ci={self.ci!r}, "
+                f"oracle_calls={self.oracle_calls!r})")
 
     def error_ratio(self, truth: float) -> float:
         """Paper §7.2 metric: |mu_hat - mu| / (CI half width)."""

@@ -32,7 +32,10 @@ runs the same BAS queries through :class:`repro.serve.transport.RemoteOracle`
 ``--label-store-mb``/``--label-store-root`` give the service/server/worker
 modes a shared cross-query label store (charge-once oracle caching, see
 ``repro.serve.label_store``); shutdown prints window fill/dedup ratios and
-the store hit rate.
+the store hit rate from the unified ``snapshot()`` surface.  ``--tracker
+memory|jsonl`` attaches a :mod:`repro.obs` metrics tracker (JSON-lines
+output via ``--tracker-out``), and ``--deadline-ms`` puts the service-mode
+queries under deadline-based admission control (docs/serving.md).
 
 Index maintenance modes (no model; see ``repro.core.index``)::
 
@@ -197,12 +200,40 @@ def _make_label_store(args):
     return store
 
 
-def _print_service_stats(role: str, stats: dict) -> None:
-    """Shutdown observability line shared by the fleet and service modes."""
-    print(f"[{role}] windows: fill={stats.get('window_fill_ratio', 0.0):.2f} "
-          f"dedup={stats.get('window_dedup_ratio', 0.0):.2f}; "
-          f"store: hit_rate={stats.get('store_hit_rate', 0.0):.2f} "
-          f"charges_saved={stats.get('store_shared', 0) + stats.get('store_hits', 0)}")
+def _make_tracker(args):
+    """Tracker for the service/server/worker modes: ``--tracker none`` (the
+    default, zero-cost hooks), ``memory`` (in-process snapshot), or ``jsonl``
+    (append every signal to ``--tracker-out``)."""
+    from repro.obs import make_tracker
+
+    tracker = make_tracker(args.tracker,
+                           path=args.tracker_out or "tracker.jsonl")
+    if args.tracker == "jsonl":
+        print(f"[serve] tracker: jsonl -> {tracker.path}")
+    return tracker
+
+
+def _print_service_stats(role: str, snap: dict) -> None:
+    """Shutdown observability lines shared by the fleet and service modes —
+    read exclusively from the unified ``snapshot()`` surface.  The *_recent
+    ratios are last-N window means (steady state), unlike the lifetime
+    ratios that average warmup in forever."""
+    charges_saved = (snap.get("label_store.shared", 0.0)
+                     + snap.get("label_store.hits", 0.0))
+    print(f"[{role}] windows: "
+          f"fill={snap.get('service.window.fill_ratio', 0.0):.2f} "
+          f"(recent={snap.get('service.window.fill_ratio_recent', 0.0):.2f}) "
+          f"dedup={snap.get('service.window.dedup_ratio', 0.0):.2f} "
+          f"(recent={snap.get('service.window.dedup_ratio_recent', 0.0):.2f}); "
+          f"store: hit_rate={snap.get('label_store.hit_rate', 0.0):.2f} "
+          f"charges_saved={charges_saved:.0f}")
+    if snap.get("service.admission.rejected") or snap.get(
+            "service.worker.deaths"):
+        print(f"[{role}] admission: "
+              f"rejected={snap.get('service.admission.rejected', 0.0):.0f} "
+              f"rate={snap.get('service.rate_rows_per_s', 0.0):.0f} rows/s; "
+              f"workers: deaths={snap.get('service.worker.deaths', 0.0):.0f} "
+              f"rejoins={snap.get('service.worker.rejoins', 0.0):.0f}")
 
 
 def _run_fleet_role(args, scorer) -> None:
@@ -213,11 +244,13 @@ def _run_fleet_role(args, scorer) -> None:
                                        scorer_group)
 
     role = args.mode
+    tracker = _make_tracker(args)
     server = OracleServiceServer(
         {args.group: scorer_group(scorer, threshold=0.5)},
         host=args.host, port=args.port,
         workers=args.workers, max_wait_ms=8.0,
         label_store=_make_label_store(args),
+        tracker=tracker,
     )
     host, port = server.address
     print(f"[{role}] group {args.group!r} listening on {host}:{port}")
@@ -232,12 +265,13 @@ def _run_fleet_role(args, scorer) -> None:
     except KeyboardInterrupt:
         pass
     finally:
-        stats = server.service.stats()
+        snap = server.service.snapshot()
         server.close()
-        print(f"[{role}] shut down; {stats['windows']} windows, "
-              f"{stats['rows_labelled']} rows labelled, "
-              f"{stats['remote_shards']} remote shards")
-        _print_service_stats(role, stats)
+        tracker.close()
+        print(f"[{role}] shut down; {snap['service.windows']:.0f} windows, "
+              f"{snap['service.rows_labelled']:.0f} rows labelled, "
+              f"{snap['service.remote_shards']:.0f} remote shards")
+        _print_service_stats(role, snap)
 
 
 def main():
@@ -276,6 +310,16 @@ def main():
     ap.add_argument("--label-store-root", default="",
                     help="service/server/worker mode: persist stable label "
                          "store segments under this directory")
+    ap.add_argument("--tracker", choices=("none", "memory", "jsonl"),
+                    default="none",
+                    help="service/server/worker mode: metrics tracker "
+                         "(repro.obs) — none keeps the zero-cost hooks")
+    ap.add_argument("--tracker-out", default="",
+                    help="jsonl tracker output path (default tracker.jsonl)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="service mode: declare a deadline class for the "
+                         "queries — flushes are shed with AdmissionRejected "
+                         "when the queue predicts a miss (0 = no deadline)")
     ap.add_argument("--n-side", type=int, default=48,
                     help="server/client mode: synthetic table side length")
     ap.add_argument("--duration", type=float, default=0.0,
@@ -367,14 +411,27 @@ def main():
             for o in oracles
         ]
         lat = np.zeros(args.queries)
+        tracker = _make_tracker(args)
+        shed = [0]
         with OracleService(workers=args.workers, max_wait_ms=8.0,
-                           label_store=_make_label_store(args)) as svc:
-            svc.attach(*oracles)
+                           label_store=_make_label_store(args),
+                           tracker=tracker) as svc:
+            from repro.serve.oracle_service import AdmissionRejected
+
+            svc.attach(*oracles,
+                       deadline_ms=args.deadline_ms or None)
 
             def job(i: int):
                 t0 = time.time()
                 try:
-                    return run_bas(queries[i], cfg_bas, seed=i)
+                    while True:
+                        try:
+                            return run_bas(queries[i], cfg_bas, seed=i)
+                        except AdmissionRejected as e:
+                            # typed + retryable: ledger untouched, cache kept,
+                            # so re-running the (deterministic) query is safe
+                            shed[0] += 1
+                            time.sleep(min(e.predicted_ms, 1e3) / 1e3)
                 finally:
                     lat[i] = time.time() - t0
                     svc.detach(oracles[i])
@@ -384,16 +441,18 @@ def main():
                 svc, [lambda i=i: job(i) for i in range(args.queries)]
             )
             dt = time.time() - t0
-            stats = svc.stats()
+            snap = svc.snapshot()
+        tracker.close()
         labels = sum(o.calls for o in oracles)
         print(f"[serve] {args.queries} concurrent queries, {labels} oracle "
               f"labels in {dt:.2f}s ({labels/max(dt,1e-9):.1f} labels/s, "
               f"{scorer.forward_batches} device batches)")
         print(f"[serve] p50={np.quantile(lat, 0.5)*1e3:.0f}ms "
               f"p99={np.quantile(lat, 0.99)*1e3:.0f}ms per query; "
-              f"service: {stats['windows']} windows, "
-              f"{stats['segments_per_window']} flushes/window")
-        _print_service_stats("serve", stats)
+              f"service: {snap['service.windows']:.0f} windows, "
+              f"{snap['service.segments_per_window']:.2f} flushes/window"
+              + (f"; {shed[0]} flush(es) shed and retried" if shed[0] else ""))
+        _print_service_stats("serve", snap)
         for i, r in enumerate(results):
             print(f"[serve]   q{i}: estimate={r.estimate:.1f} "
                   f"ci=[{r.ci.lo:.1f}, {r.ci.hi:.1f}] "

@@ -1,0 +1,46 @@
+"""Observability for the serving data plane: pluggable metric trackers and
+the typed per-query telemetry tree.
+
+- :mod:`repro.obs.tracker` — the :class:`Tracker` protocol plus noop,
+  in-memory, and JSON-lines implementations (counters, gauges, streaming
+  p50/p99 histograms with bounded memory).
+- :mod:`repro.obs.telemetry` — :class:`QueryTelemetry`, the typed successor
+  to ``QueryResult.detail``, with a deprecation-shimmed dict view.
+"""
+from .telemetry import (
+    DispatchTelemetry,
+    IndexTelemetry,
+    OracleTelemetry,
+    QueryTelemetry,
+    StoreTelemetry,
+    StratifyTelemetry,
+    TelemetryView,
+)
+from .tracker import (
+    NULL_TRACKER,
+    InMemoryTracker,
+    JsonlTracker,
+    NoopTracker,
+    StreamingHistogram,
+    Tracker,
+    make_tracker,
+    merge_snapshots,
+)
+
+__all__ = [
+    "DispatchTelemetry",
+    "IndexTelemetry",
+    "InMemoryTracker",
+    "JsonlTracker",
+    "NULL_TRACKER",
+    "NoopTracker",
+    "OracleTelemetry",
+    "QueryTelemetry",
+    "StoreTelemetry",
+    "StratifyTelemetry",
+    "StreamingHistogram",
+    "TelemetryView",
+    "Tracker",
+    "make_tracker",
+    "merge_snapshots",
+]

@@ -191,9 +191,13 @@ class LabelStore:
     """Thread-safe shared label cache, bounded by ``max_bytes``, optionally
     persisted under ``root`` (module docstring has the full semantics)."""
 
-    def __init__(self, max_bytes: int = 256 << 20, root: Optional[str] = None):
+    def __init__(self, max_bytes: int = 256 << 20, root: Optional[str] = None,
+                 tracker=None):
+        from repro.obs import NULL_TRACKER
+
         self.max_bytes = int(max_bytes)
         self.root = root
+        self.tracker = tracker if tracker is not None else NULL_TRACKER
         self._lock = threading.Lock()
         self._segments: "OrderedDict[object, _StoreSegment]" = OrderedDict()
         self._gen = 0
@@ -309,6 +313,7 @@ class LabelStore:
             if victim is not None:
                 total -= self._segments.pop(victim).nbytes
                 self.evictions += 1
+                self.tracker.count("label_store.evictions")
                 continue
             hot = self._segments.get(hot_key)
             if hot is None or len(hot.keys) <= 1:
@@ -377,6 +382,13 @@ class LabelStore:
             "store_saves": self.saves,
             "store_loads": self.loads,
             "store_hit_rate": round(served / total, 4) if total else 0.0,
+        }
+
+    def snapshot(self) -> dict[str, float]:
+        """Unified stats surface: ``label_store.*`` namespaced floats."""
+        return {
+            "label_store." + k[len("store_"):]: float(v)
+            for k, v in self.stats().items()
         }
 
 

@@ -73,6 +73,19 @@ Architecture
   (first requester pays; everyone else's ``calls`` still advances exactly
   as in serial execution, so estimates stay bit-identical).
 
+* **Observability + admission control** (``repro.obs``): a pluggable
+  :class:`~repro.obs.Tracker` receives window assembly latency, fill/dedup
+  ratios, per-host shard latency, and per-query-class end-to-end flush
+  latency; everything is summarised through one namespaced
+  :meth:`OracleService.snapshot` surface.  Clients attached with a
+  ``deadline_ms`` class are subject to deadline-based admission control:
+  when the measured service rate times the queued backlog implies a
+  deadline miss, their flushes are rejected *before anything is dequeued or
+  charged* with a retryable :class:`AdmissionRejected`.  Worker hosts are
+  health-checked in the background — a failing host is unregistered (its
+  shards fall back to local execution, as in PR 4) and automatically
+  re-registered when its ping answers again.
+
 The window/plan/commit machinery here is transport-agnostic, and
 ``repro.serve.transport`` puts a network in front of it: remote client
 processes submit pre-planned segments via :meth:`OracleService.submit_raw`
@@ -101,6 +114,31 @@ from repro.core.oracle import (
     commit_requests,
     plan_requests,
 )
+from repro.obs import NULL_TRACKER, NoopTracker, StreamingHistogram, merge_snapshots
+
+
+class AdmissionRejected(RuntimeError):
+    """A flush shed by deadline-based admission control.
+
+    Raised by :meth:`OracleService.submit` *before* anything is dequeued,
+    planned, or charged — the batch's pending set is untouched and the
+    ledger never moves, so the caller may simply retry the flush (back off,
+    or re-submit once the queue drains).  ``retryable`` mirrors the
+    transport layer's error taxonomy."""
+
+    retryable = True
+
+    def __init__(self, qclass: str, deadline_ms: float, predicted_ms: float,
+                 queue_rows: int):
+        super().__init__(
+            f"admission rejected: class {qclass!r} declared a "
+            f"{deadline_ms:.0f}ms deadline but the predicted window wait is "
+            f"{predicted_ms:.0f}ms ({queue_rows} rows queued)"
+        )
+        self.qclass = qclass
+        self.deadline_ms = deadline_ms
+        self.predicted_ms = predicted_ms
+        self.queue_rows = queue_rows
 
 
 @dataclasses.dataclass
@@ -125,6 +163,9 @@ class _Segment:
     fn: Optional[Callable] = None
     idx: Optional[np.ndarray] = None
     client_id: Optional[int] = None
+    # observability: enqueue time (window assembly latency) + deadline class
+    t_enqueue: float = 0.0
+    qclass: str = "default"
 
     def group_key(self):
         return self.key if self.raw else self.oracle.service_group()
@@ -212,13 +253,35 @@ class OracleService:
         whenever their tuple indices fit the store's bit packing, so remote
         clients' EXEC answers can be store-served too.  ``close()`` calls
         ``label_store.save()``.
+    tracker:
+        Optional :class:`repro.obs.Tracker` receiving the service's signals
+        (window assembly latency, fill/dedup ratios, per-host shard latency,
+        per-class flush latency, admission/worker events).  Defaults to the
+        noop tracker — the uninstrumented fast path.  Attached stores that
+        have no tracker of their own inherit this one.
+    health_check_s:
+        Period of the background worker-host health checker (started with
+        the first :meth:`register_remote_worker`).  A host that fails a
+        shard or a ping is unregistered — its groups fall back to local
+        execution — and automatically re-registered (groups re-fetched)
+        once its ping answers again.  ``0`` disables the checker: a failed
+        host then stays unregistered, PR 4's fail-to-local behaviour.
     """
 
     def __init__(self, workers: int = 1, max_batch: int = 8192,
                  max_wait_ms: float = 4.0, min_shard: int = 256,
-                 index_store=None, label_store=None):
+                 index_store=None, label_store=None, tracker=None,
+                 health_check_s: float = 2.0):
         self.index_store = index_store
         self.label_store = label_store
+        self.tracker = tracker if tracker is not None else NULL_TRACKER
+        # one flag gate for the hot-path hooks: a NoopTracker pays nothing
+        self._tracking = not isinstance(self.tracker, NoopTracker)
+        for store in (index_store, label_store):
+            if store is not None and isinstance(
+                getattr(store, "tracker", None), NoopTracker
+            ):
+                store.tracker = self.tracker
         self.workers = max(int(workers), 1)
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_ms) / 1e3
@@ -237,6 +300,24 @@ class OracleService:
         # worker hosts (RemoteWorkerClient-shaped: .groups + .execute);
         # super-batches for wire groups they advertise shard across them
         self._remote_workers: list = []
+        # hosts that failed a shard or a ping: skipped by _eligible_workers
+        # until the health checker sees their ping answer again
+        self._dead_workers: list = []
+        self.health_check_s = float(health_check_s)
+        self._health_thread: Optional[threading.Thread] = None
+        self._health_stop = threading.Event()
+        # deadline-based admission control: per-oracle deadline class
+        # (attach(deadline_ms=...)), an EWMA of the measured service rate in
+        # rows/s, and the backlog the next flush would queue behind
+        self._deadlines: "weakref.WeakKeyDictionary[Oracle, float]" = (
+            weakref.WeakKeyDictionary()
+        )
+        self._classes: "weakref.WeakKeyDictionary[Oracle, str]" = (
+            weakref.WeakKeyDictionary()
+        )
+        self._service_rate = 0.0    # rows/s EWMA; 0 = not yet measured
+        self._queued_rows = 0
+        self._inflight_rows = 0
         self._closed = False
         self._pool: Optional[ThreadPoolExecutor] = (
             ThreadPoolExecutor(max_workers=self.workers,
@@ -257,6 +338,14 @@ class OracleService:
         self.rows_planned = 0       # rows surviving per-client cache dedup
         self.remote_shards = 0
         self.remote_failures = 0
+        self.admission_rejections = 0
+        self.worker_deaths = 0
+        self.worker_rejoins = 0
+        # last-N per-window fill/dedup ratios: the lifetime ratios in stats()
+        # average warmup in forever; these power the *_recent snapshot keys
+        # (written by the dispatcher only, read lock-free by snapshot())
+        self._fill_hist = StreamingHistogram(window=256)
+        self._dedup_hist = StreamingHistogram(window=256)
         self._dispatcher = threading.Thread(
             target=self._run, name="oracle-service", daemon=True
         )
@@ -264,16 +353,29 @@ class OracleService:
 
     # ---- client lifecycle --------------------------------------------------
 
-    def attach(self, *oracles: Oracle) -> "OracleService":
+    def attach(self, *oracles: Oracle, deadline_ms: Optional[float] = None,
+               query_class: Optional[str] = None) -> "OracleService":
         """Route the oracles' flushes through this service.  The attached set
         also drives window assembly: a window closes early once every
-        attached client has a flush in it."""
+        attached client has a flush in it.
+
+        ``deadline_ms`` declares a deadline class: flushes from these oracles
+        are shed with :class:`AdmissionRejected` whenever the measured
+        service rate and queued backlog predict a wait beyond the deadline.
+        Clients without a deadline are never shed.  ``query_class`` names the
+        class for per-class latency telemetry (defaults to ``dl<deadline>``,
+        or ``"default"`` with no deadline)."""
         with self._cv:
             if self._closed:
                 raise RuntimeError("OracleService is closed")
             for o in oracles:
                 o.service = self
                 self._clients.add(o)
+                if deadline_ms is not None:
+                    self._deadlines[o] = float(deadline_ms)
+                    self._classes[o] = query_class or f"dl{int(deadline_ms)}"
+                elif query_class is not None:
+                    self._classes[o] = query_class
         return self
 
     def detach(self, *oracles: Oracle) -> None:
@@ -285,25 +387,73 @@ class OracleService:
                 if o.service is self:
                     o.service = None
                 self._clients.discard(o)
+                self._deadlines.pop(o, None)
+                self._classes.pop(o, None)
             self._cv.notify_all()
+
+    def _predicted_wait_ms_locked(self, rows: int) -> float:
+        """Expected queue wait for a flush of ``rows`` rows, from the EWMA
+        service rate and the backlog (queued + in-flight + this flush) it
+        would land behind, plus the window-assembly deadline.  0 until the
+        first window has been measured (admit during warmup)."""
+        if self._service_rate <= 0.0:
+            return 0.0
+        backlog = self._queued_rows + self._inflight_rows + rows
+        return 1e3 * backlog / self._service_rate + 1e3 * self.max_wait_s
 
     def submit(self, batch: OracleBatch) -> Future:
         """Enqueue a batch's pending set; called by ``flush_async``.  The
         caller must not touch the batch again until the future resolves
         (one outstanding flush per batch — the submit-then-await protocol
-        every pipeline stage follows)."""
-        requests, batch._pending = batch._pending, []
-        seg = _Segment(
-            batch=batch, oracle=batch.oracle, requests=requests,
-            future=Future(), rows=sum(len(r.idx) for r in requests),
-        )
+        every pipeline stage follows).
+
+        If the batch's oracle declared a deadline class (``attach`` with
+        ``deadline_ms``) and the predicted wait exceeds it, raises
+        :class:`AdmissionRejected` *without dequeuing anything* — the
+        pending set and the ledger are untouched, so the flush can simply
+        be retried."""
+        rows = sum(len(r.idx) for r in batch._pending)
+        deadline_ms = self._deadlines.get(batch.oracle)
+        qclass = self._classes.get(batch.oracle, "default")
         with self._cv:
             if self._closed:
-                batch._pending = requests
                 raise RuntimeError("OracleService is closed")
+            if deadline_ms is not None:
+                predicted = self._predicted_wait_ms_locked(rows)
+                if predicted > deadline_ms:
+                    self.admission_rejections += 1
+                    queued = self._queued_rows + self._inflight_rows
+                    self.tracker.count("service.admission.rejected")
+                    self.tracker.event(
+                        "service.admission.rejected", qclass=qclass,
+                        deadline_ms=deadline_ms, predicted_ms=predicted,
+                    )
+                    raise AdmissionRejected(qclass, deadline_ms, predicted,
+                                            queued)
+            requests, batch._pending = batch._pending, []
+            seg = _Segment(
+                batch=batch, oracle=batch.oracle, requests=requests,
+                future=Future(), rows=rows,
+                t_enqueue=time.monotonic(), qclass=qclass,
+            )
             self._queue.append(seg)
+            self._queued_rows += rows
             self._cv.notify_all()
+        if self._tracking:
+            self._track_flush(seg)
         return seg.future
+
+    def _track_flush(self, seg: _Segment) -> None:
+        """Observe the segment's end-to-end latency under its deadline class
+        when its future completes (success or failure)."""
+        name = f"service.class.{seg.qclass}.flush_ms"
+
+        def done(_fut) -> None:
+            self.tracker.observe(
+                name, (time.monotonic() - seg.t_enqueue) * 1e3
+            )
+
+        seg.future.add_done_callback(done)
 
     # ---- transport integration (repro.serve.transport) ---------------------
 
@@ -339,12 +489,16 @@ class OracleService:
             batch=None, oracle=None, requests=[], future=Future(),
             rows=int(len(idx)), raw=True, key=("wire", str(name)), fn=fn,
             idx=idx, client_id=client_id,
+            t_enqueue=time.monotonic(), qclass="remote",
         )
         with self._cv:
             if self._closed:
                 raise RuntimeError("OracleService is closed")
             self._queue.append(seg)
+            self._queued_rows += seg.rows
             self._cv.notify_all()
+        if self._tracking:
+            self._track_flush(seg)
         return seg.future
 
     def register_remote_worker(self, worker) -> None:
@@ -354,7 +508,9 @@ class OracleService:
         :class:`repro.serve.transport.RemoteWorkerClient`).  Super-batches
         for those groups then shard across hosts as well as local threads;
         a worker failure mid-batch falls back to local execution for its
-        shard."""
+        shard, unregisters the host, and (with ``health_check_s > 0``) the
+        background health checker re-registers it as soon as its ping
+        answers again."""
         with self._cv:
             if self._closed:
                 raise RuntimeError("OracleService is closed")
@@ -364,12 +520,95 @@ class OracleService:
             # old pool is retired, not shut down — the dispatcher may hold a
             # reference mid-window, and submitting to a shut-down pool would
             # fail that window's flushes; retired pools are drained at close()
-            pool_size = self.workers + len(self._remote_workers)
+            pool_size = (self.workers + len(self._remote_workers)
+                         + len(self._dead_workers))
             if self._pool is not None:
                 self._retired_pools.append(self._pool)
             self._pool = ThreadPoolExecutor(
                 max_workers=pool_size, thread_name_prefix="oracle-worker"
             )
+            if self._health_thread is None and self.health_check_s > 0:
+                self._health_thread = threading.Thread(
+                    target=self._health_loop, name="oracle-service-health",
+                    daemon=True,
+                )
+                self._health_thread.start()
+
+    # ---- worker health ------------------------------------------------------
+
+    @staticmethod
+    def _worker_alive(worker) -> bool:
+        """One health probe.  ``ping`` may return a bool (transport style) or
+        raise; hosts without a ping are assumed alive (test doubles)."""
+        ping = getattr(worker, "ping", None)
+        if ping is None:
+            return True
+        try:
+            return ping() is not False
+        except BaseException:  # noqa: BLE001 — an unreachable host is dead
+            return False
+
+    @staticmethod
+    def _worker_label(worker) -> str:
+        addr = getattr(worker, "address", None)
+        if isinstance(addr, (tuple, list)) and len(addr) == 2:
+            return f"{addr[0]}:{addr[1]}"
+        return str(addr) if addr is not None else repr(worker)
+
+    def _mark_worker_dead(self, worker) -> None:
+        """Unregister a failing worker host: its groups stop routing to it
+        (shards fall back to local) until the health checker sees it answer
+        a ping again.  Idempotent — concurrent shard failures of one host
+        record one death."""
+        with self._cv:
+            if worker not in self._remote_workers:
+                return
+            self._remote_workers.remove(worker)
+            self._dead_workers.append(worker)
+            self.worker_deaths += 1
+        self.tracker.count("service.worker.deaths")
+        self.tracker.event("service.worker.dead",
+                           worker=self._worker_label(worker))
+
+    def _revive_worker(self, worker) -> bool:
+        """Probe one dead worker; on success re-fetch its group set and
+        re-register it.  Returns True when the worker rejoined."""
+        try:
+            if not self._worker_alive(worker):
+                return False
+            refresh = getattr(worker, "refresh_groups", None)
+            if refresh is not None:
+                refresh()
+        except BaseException:  # noqa: BLE001 — still dead, retry next sweep
+            return False
+        with self._cv:
+            if worker not in self._dead_workers:
+                return False
+            self._dead_workers.remove(worker)
+            self._remote_workers.append(worker)
+            self.worker_rejoins += 1
+        self.tracker.count("service.worker.rejoins")
+        self.tracker.event("service.worker.rejoined",
+                           worker=self._worker_label(worker))
+        return True
+
+    def _health_loop(self) -> None:
+        """Background sweep: ping live hosts (a failure unregisters them
+        without waiting for a mid-batch shard error) and probe dead ones
+        (a success re-registers them, groups re-fetched)."""
+        while True:
+            with self._cv:
+                if self._closed:
+                    return
+                live = list(self._remote_workers)
+                dead = list(self._dead_workers)
+            for worker in dead:
+                self._revive_worker(worker)
+            for worker in live:
+                if not self._worker_alive(worker):
+                    self._mark_worker_dead(worker)
+            if self._health_stop.wait(self.health_check_s):
+                return
 
     def close(self) -> None:
         """Drain the queue, stop the dispatcher, shut the worker pool, and
@@ -377,7 +616,10 @@ class OracleService:
         with self._cv:
             self._closed = True
             self._cv.notify_all()
+        self._health_stop.set()
         self._dispatcher.join()
+        if self._health_thread is not None:
+            self._health_thread.join()
         for pool in [self._pool] + self._retired_pools:
             if pool is not None:
                 pool.shutdown(wait=True)
@@ -419,6 +661,53 @@ class OracleService:
             out.update(self.label_store.stats())
         return out
 
+    def snapshot(self) -> dict[str, float]:
+        """The unified stats surface: one flat ``{dotted.name: float}`` dict
+        merging the service's own counters (``service.*``), the attached
+        stores (``index_store.*`` / ``label_store.*``), and everything the
+        tracker recorded (histogram series expand to ``.p50``/``.p99``/...).
+        ``service.window.fill_ratio_recent`` / ``.dedup_ratio_recent`` are
+        last-N per-window means — steady state, unlike the lifetime ratios.
+        """
+        base = {
+            "service.windows": float(self.windows),
+            "service.segments": float(self.segments),
+            "service.backend_calls": float(self.backend_calls),
+            "service.rows_requested": float(self.rows_requested),
+            "service.rows_labelled": float(self.rows_labelled),
+            "service.rows_planned": float(self.rows_planned),
+            "service.remote_shards": float(self.remote_shards),
+            "service.remote_failures": float(self.remote_failures),
+            "service.segments_per_window": (
+                self.segments / max(self.windows, 1)
+            ),
+            "service.window.fill_ratio": (
+                self.window_rows / max(self.windows * self.max_batch, 1)
+            ),
+            "service.window.dedup_ratio": (
+                1.0 - self.rows_planned / max(self.window_rows, 1)
+            ),
+            "service.window.fill_ratio_recent": self._fill_hist.recent_mean(),
+            "service.window.dedup_ratio_recent": (
+                self._dedup_hist.recent_mean()
+            ),
+            "service.queue.rows": float(self._queued_rows),
+            "service.rate_rows_per_s": float(self._service_rate),
+            "service.admission.rejected": float(self.admission_rejections),
+            "service.worker.live": float(len(self._remote_workers)),
+            "service.worker.dead": float(len(self._dead_workers)),
+            "service.worker.deaths": float(self.worker_deaths),
+            "service.worker.rejoins": float(self.worker_rejoins),
+        }
+        return merge_snapshots(
+            self.tracker.snapshot(),
+            self.index_store.snapshot() if self.index_store is not None
+            else None,
+            self.label_store.snapshot() if self.label_store is not None
+            else None,
+            base,
+        )
+
     # ---- dispatcher --------------------------------------------------------
 
     def _run(self) -> None:
@@ -452,12 +741,36 @@ class OracleService:
                     if self._closed or remain <= 0 or not waiting:
                         break                    # nobody left to wait for
                     self._cv.wait(remain)
+                # the window is now in flight: flushes submitted from here on
+                # queue behind it (admission control's backlog view)
+                self._queued_rows -= rows
+                self._inflight_rows = rows
+            if self._tracking:
+                t_dispatch = time.monotonic()
+                for seg in window:
+                    self.tracker.observe(
+                        "service.window.assembly_ms",
+                        (t_dispatch - seg.t_enqueue) * 1e3,
+                    )
+            t_proc = time.perf_counter()
             try:
                 self._process(window)
             except BaseException as e:  # noqa: BLE001 — dispatcher must survive
                 for seg in window:
                     if not seg.future.done():
                         seg.fail(e)
+            finally:
+                elapsed = time.perf_counter() - t_proc
+                with self._cv:
+                    self._inflight_rows = 0
+                    if rows and elapsed > 0:
+                        # EWMA of the measured service rate (rows/s) feeding
+                        # admission control's predicted-wait estimate
+                        sample = rows / elapsed
+                        self._service_rate = (
+                            sample if self._service_rate <= 0.0
+                            else 0.7 * self._service_rate + 0.3 * sample
+                        )
             # pools retired by register_remote_worker are quiescent once the
             # window completes (this thread is their only submitter and
             # _execute awaits every shard), so their threads are reaped here
@@ -472,8 +785,19 @@ class OracleService:
     def _process(self, window: list[_Segment]) -> None:
         self.windows += 1
         self.segments += len(window)
-        self.window_rows += sum(seg.rows for seg in window)
+        rows_w = sum(seg.rows for seg in window)
+        self.window_rows += rows_w
+        planned_before = self.rows_planned
         plans = self._plan(window)
+        # per-window fill/dedup observations: the *_recent snapshot keys and
+        # (when a tracker is attached) the service.window.{fill,dedup} series
+        fill = rows_w / self.max_batch
+        dedup = 1.0 - (self.rows_planned - planned_before) / max(rows_w, 1)
+        self._fill_hist.observe(fill)
+        self._dedup_hist.observe(dedup)
+        if self._tracking:
+            self.tracker.observe("service.window.fill", fill)
+            self.tracker.observe("service.window.dedup", dedup)
         try:
             groups: dict = {}
             for plan in plans:
@@ -618,7 +942,7 @@ class OracleService:
                        len(idx) // self.min_shard)
         if self._pool is None or n_shards < 2:
             self.backend_calls += 1
-            return np.asarray(fn(idx), np.float64)
+            return np.asarray(self._execute_local(fn, idx), np.float64)
         shards = np.array_split(idx, n_shards)
         self.backend_calls += n_shards
         n_remote = min(len(remotes), n_shards - 1)  # keep >=1 shard local
@@ -626,22 +950,41 @@ class OracleService:
             self._pool.submit(self._execute_remote, w, key[1], fn, s)
             for w, s in zip(remotes, shards[:n_remote])
         ]
-        futs += [self._pool.submit(fn, s) for s in shards[n_remote:]]
+        futs += [self._pool.submit(self._execute_local, fn, s)
+                 for s in shards[n_remote:]]
         return np.concatenate(
             [np.asarray(f.result(), np.float64) for f in futs]
         )
+
+    def _execute_local(self, fn: Callable, shard: np.ndarray):
+        """One shard on the local pool, timed into ``service.shard.local_ms``
+        when a tracker is attached."""
+        if not self._tracking:
+            return fn(shard)
+        t0 = time.perf_counter()
+        vals = fn(shard)
+        self.tracker.observe("service.shard.local_ms",
+                             (time.perf_counter() - t0) * 1e3)
+        return vals
 
     def _execute_remote(self, worker, name: str, fn: Callable,
                         shard: np.ndarray) -> np.ndarray:
         """One shard on one worker host; falls back to local execution when
         the host fails mid-batch (labelling is pure, so re-execution is
-        always safe) — a dead worker degrades throughput, never a query."""
+        always safe) — a dead worker degrades throughput, never a query.
+        The failing host is unregistered until its health check passes."""
         try:
+            t0 = time.perf_counter()
             vals = np.asarray(worker.execute(name, shard), np.float64)
             if vals.shape != (len(shard),):
                 raise RuntimeError(
                     f"worker returned shape {vals.shape} for "
                     f"{len(shard)} rows"
+                )
+            if self._tracking:
+                self.tracker.observe(
+                    f"service.shard.{self._worker_label(worker)}_ms",
+                    (time.perf_counter() - t0) * 1e3,
                 )
             with self._stats_lock:
                 self.remote_shards += 1
@@ -649,6 +992,7 @@ class OracleService:
         except BaseException:  # noqa: BLE001 — degrade to local execution
             with self._stats_lock:
                 self.remote_failures += 1
+            self._mark_worker_dead(worker)
             return np.asarray(fn(shard), np.float64)
 
     def _resolve_store(self, plan: _Plan) -> tuple:
@@ -739,4 +1083,4 @@ def serve_queries(service: OracleService, jobs: list) -> list:
     return results
 
 
-__all__ = ["OracleService", "serve_queries"]
+__all__ = ["AdmissionRejected", "OracleService", "serve_queries"]

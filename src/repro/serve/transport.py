@@ -171,8 +171,15 @@ class ServiceConnection:
 
     def __init__(self, address: tuple[str, int], retries: int = 5,
                  backoff_s: float = 0.05, max_backoff_s: float = 2.0,
-                 timeout_s: float = 120.0, announce: bool = False):
+                 timeout_s: float = 120.0, announce: bool = False,
+                 tracker=None):
+        from repro.obs import NULL_TRACKER, NoopTracker
+
         self.address = (str(address[0]), int(address[1]))
+        # observability (repro.obs): RTT per round trip, reconnect/backoff
+        # events, in-flight depth; a NoopTracker keeps the hooks free
+        self.tracker = tracker if tracker is not None else NULL_TRACKER
+        self._tracking = not isinstance(self.tracker, NoopTracker)
         self.retries = int(retries)
         self.backoff_s = float(backoff_s)
         self.max_backoff_s = float(max_backoff_s)
@@ -226,6 +233,10 @@ class ServiceConnection:
             self._sock = sock
             if self._epoch:         # any connect after the first survived a
                 self.reconnects += 1  # drop — count it even when the reader
+                self.tracker.count("transport.reconnects")
+                self.tracker.event("transport.reconnect",
+                                   address=f"{self.address[0]}:"
+                                           f"{self.address[1]}")
             self._epoch += 1          # noticed before a caller had to retry
             threading.Thread(target=self._read_loop,
                              args=(sock, self._epoch),
@@ -367,22 +378,35 @@ class ServiceConnection:
         last: Exception = TransportError("no attempt made")
         for attempt in range(self.retries + 1):
             try:
+                t0 = time.perf_counter()
                 fut = self._submit(
                     lambda epoch, f: self._pending.__setitem__(
                         rid, (epoch, f)),
                     lambda sock: send_frame(sock, MSG_EXEC, payload),
                 )
+                if self._tracking:
+                    self.tracker.gauge("transport.inflight",
+                                       len(self._pending))
                 res = self._await(fut)
             except (TransportError, OSError) as e:
                 last = e
                 if attempt < self.retries:
-                    time.sleep(self._backoff(attempt))
+                    delay = self._backoff(attempt)
+                    if self._tracking:
+                        self.tracker.count("transport.retries")
+                        self.tracker.event("transport.backoff",
+                                           attempt=attempt, delay_s=delay)
+                    time.sleep(delay)
                 continue
             if len(res.labels) != len(idx):
                 raise TransportError(
                     f"reply carries {len(res.labels)} labels for "
                     f"{len(idx)} rows"
                 )
+            if self._tracking:
+                self.tracker.observe("transport.rtt_ms",
+                                     (time.perf_counter() - t0) * 1e3)
+                self.tracker.gauge("transport.inflight", len(self._pending))
             return res.labels
         raise TransportError(
             f"{self.address[0]}:{self.address[1]} unreachable after "
@@ -445,13 +469,15 @@ class RemoteOracle(Oracle):
 
     def __init__(self, address: tuple[str, int], group: str = "default",
                  retries: int = 5, backoff_s: float = 0.05,
-                 max_backoff_s: float = 2.0, timeout_s: float = 120.0):
+                 max_backoff_s: float = 2.0, timeout_s: float = 120.0,
+                 tracker=None):
         super().__init__()
         self.group = str(group)
         self.conn = ServiceConnection(address, retries=retries,
                                       backoff_s=backoff_s,
                                       max_backoff_s=max_backoff_s,
-                                      timeout_s=timeout_s, announce=True)
+                                      timeout_s=timeout_s, announce=True,
+                                      tracker=tracker)
         self.conn.connect()     # best-effort: count toward windows early
 
     def _label(self, idx: np.ndarray) -> np.ndarray:
@@ -483,11 +509,11 @@ class RemoteWorkerClient:
 
     def __init__(self, address: tuple[str, int], retries: int = 2,
                  backoff_s: float = 0.05, max_backoff_s: float = 2.0,
-                 timeout_s: float = 120.0):
+                 timeout_s: float = 120.0, tracker=None):
         self.conn = ServiceConnection(address, retries=retries,
                                       backoff_s=backoff_s,
                                       max_backoff_s=max_backoff_s,
-                                      timeout_s=timeout_s)
+                                      timeout_s=timeout_s, tracker=tracker)
         self.groups: frozenset = frozenset(self.conn.groups())
 
     @property
@@ -496,6 +522,16 @@ class RemoteWorkerClient:
 
     def execute(self, group: str, idx: np.ndarray) -> np.ndarray:
         return self.conn.execute(group, idx)
+
+    def ping(self) -> bool:
+        """One health probe; the service's checker drives re-registration."""
+        return self.conn.ping()
+
+    def refresh_groups(self) -> frozenset:
+        """Re-fetch the worker's advertised groups (a restarted host may
+        serve a different set); called on health-check rejoin."""
+        self.groups = frozenset(self.conn.groups())
+        return self.groups
 
     def close(self) -> None:
         self.conn.close()
@@ -673,8 +709,11 @@ class OracleServiceServer:
 
     def register_worker(self, address: tuple[str, int]) -> RemoteWorkerClient:
         """Connect a worker host and hand it to the service: super-batches
-        for any group the worker advertises now shard across hosts."""
-        worker = RemoteWorkerClient(address)
+        for any group the worker advertises now shard across hosts.  The
+        worker's connection reports into the service's tracker, and the
+        service health-checks the host (re-registering it after an outage)."""
+        worker = RemoteWorkerClient(address,
+                                    tracker=self.service.tracker)
         self._workers.append(worker)
         self.service.register_remote_worker(worker)
         return worker

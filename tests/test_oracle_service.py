@@ -598,8 +598,10 @@ def test_super_batches_shard_across_worker_hosts():
 
 
 def test_dead_worker_host_degrades_to_local_execution():
-    """A worker host that died stays registered; its shards fall back to
-    local execution — a dead worker costs throughput, never a query."""
+    """A worker host that died is unregistered on its first failed shard;
+    the shard falls back to local execution — a dead worker costs
+    throughput, never a query (the health checker would re-register it
+    if the host came back; see test_worker_health_check_reregistration)."""
     worker = OracleServiceServer({"parity": _parity_fn}, max_wait_ms=1.0)
     front = OracleServiceServer({"parity": _parity_fn}, max_wait_ms=1.0,
                                 workers=1, min_shard=64)
@@ -615,3 +617,134 @@ def test_dead_worker_host_degrades_to_local_execution():
         assert front.service.stats()["remote_failures"] >= 1
     finally:
         front.close()
+
+
+def test_worker_health_check_reregistration():
+    """A worker host that dies is marked dead by the health checker; when it
+    comes back on the same port it is re-registered automatically (groups
+    re-fetched), shards route remotely again, and labels are bit-identical
+    across the death/rejoin cycle."""
+    import time
+
+    worker = OracleServiceServer({"parity": _parity_fn}, max_wait_ms=1.0)
+    port = worker.address[1]
+    front = OracleServiceServer({"parity": _parity_fn}, max_wait_ms=1.0,
+                                workers=1, min_shard=64, health_check_s=0.05)
+    try:
+        front.register_worker(worker.address)
+        assert front.service.snapshot()["service.worker.live"] == 1.0
+        worker.close()                               # host dies
+
+        def wait_for(pred, timeout=10.0):
+            deadline = time.monotonic() + timeout
+            while time.monotonic() < deadline:
+                snap = front.service.snapshot()
+                if pred(snap):
+                    return snap
+                time.sleep(0.02)
+            raise AssertionError(f"timeout; last snapshot: {snap}")
+
+        # the background checker notices the death without any query traffic
+        snap = wait_for(lambda s: s["service.worker.deaths"] >= 1.0)
+        assert snap["service.worker.live"] == 0.0
+        assert snap["service.worker.dead"] == 1.0
+
+        rng = np.random.default_rng(11)
+        idx = np.unique(rng.integers(0, 1000, size=(512, 2)), axis=0)
+        with RemoteOracle(front.address, "parity") as o:
+            o.bind_sizes((1000, 1000))
+            during = o.label(idx)                    # all-local while dead
+        np.testing.assert_array_equal(during, idx.sum(1) % 2)
+        shards_before = front.service.stats()["remote_shards"]
+
+        # host restarts on the same port -> checker re-registers it
+        worker = OracleServiceServer({"parity": _parity_fn}, port=port,
+                                     max_wait_ms=1.0)
+        snap = wait_for(lambda s: s["service.worker.rejoins"] >= 1.0)
+        assert snap["service.worker.live"] == 1.0
+        assert snap["service.worker.dead"] == 0.0
+
+        with RemoteOracle(front.address, "parity") as o:
+            o.bind_sizes((1000, 1000))
+            after = o.label(idx)
+        np.testing.assert_array_equal(after, during)  # bit-identical
+        # shards flow to the rejoined host again
+        assert front.service.stats()["remote_shards"] > shards_before
+    finally:
+        worker.close()
+        front.close()
+
+
+# ----------------------------------------------------------------------------
+# deadline-based admission control
+# ----------------------------------------------------------------------------
+
+def test_admission_sheds_only_over_deadline_class_and_never_charges():
+    """Under a saturated queue, only flushes whose declared deadline the
+    predicted wait would miss are shed — with a typed, retryable error and
+    zero ledger movement.  Deadline-free clients are never shed, and the
+    shed client succeeds on retry once the backlog drains."""
+    import time
+
+    from repro.obs import InMemoryTracker
+    from repro.serve.oracle_service import AdmissionRejected
+
+    def slow_fn(idx):                                # ~1e4 rows/s ceiling
+        time.sleep(len(idx) * 1e-4)
+        return (idx.sum(axis=1) % 2).astype(np.float64)
+
+    tight, lax = FnOracle(slow_fn), FnOracle(slow_fn)
+    tight.bind_sizes((10_000, 10_000))
+    lax.bind_sizes((10_000, 10_000))
+    tracker = InMemoryTracker()
+    with OracleService(workers=1, max_wait_ms=5.0, min_shard=1 << 30,
+                       tracker=tracker) as svc:
+        svc.attach(tight, deadline_ms=100.0, query_class="tight")
+        svc.attach(lax)
+
+        # warmup: admitted (no rate measured yet) and establishes the EWMA
+        warm = np.stack([np.arange(100), np.arange(100) + 1], axis=1)
+        np.testing.assert_array_equal(tight.label(warm), warm.sum(1) % 2)
+        assert tight.calls == len(warm)
+        snap = svc.snapshot()
+        assert snap["service.rate_rows_per_s"] > 0.0
+
+        # saturate: an 8000-row raw backlog -> predicted wait ~0.8 s
+        big = np.stack([np.arange(8000), np.arange(8000) + 1], axis=1)
+        bulk = svc.submit_raw("bulk", slow_fn, big)
+
+        small = np.array([[5001, 2], [5002, 7]])  # not in warm (uncached)
+        calls_before, charged_before = tight.calls, tight.charged
+        with pytest.raises(AdmissionRejected) as ei:
+            tight.label(small)                       # predicted >> 100 ms
+        assert ei.value.retryable is True
+        assert ei.value.qclass == "tight"
+        assert ei.value.deadline_ms == 100.0
+        assert ei.value.predicted_ms > 100.0
+        assert ei.value.queue_rows >= len(big)
+        assert tight.calls == calls_before           # zero ledger movement
+        assert tight.charged == charged_before
+
+        # the deadline-free client rides out the same backlog un-shed
+        np.testing.assert_array_equal(lax.label(small), small.sum(1) % 2)
+        assert lax.calls == len(small)
+
+        # recovery: after the backlog drains the same flush is admitted
+        np.testing.assert_array_equal(bulk.result(), big.sum(1) % 2)
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            try:
+                got = tight.label(small)
+                break
+            except AdmissionRejected:
+                time.sleep(0.01)
+        else:
+            raise AssertionError("shed flush never re-admitted after drain")
+        np.testing.assert_array_equal(got, small.sum(1) % 2)
+        assert tight.calls == calls_before + len(small)
+
+        snap = svc.snapshot()
+        assert snap["service.admission.rejected"] >= 1.0
+        assert snap["service.admission.rejected.events"] >= 1.0
+        assert "service.class.tight.flush_ms.p50" in snap
+    assert tracker.histogram("service.class.default.flush_ms") is not None
