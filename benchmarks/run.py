@@ -30,6 +30,7 @@ MODULES = {
     "service": "benchmarks.bench_service",          # async oracle service
     "index": "benchmarks.bench_index",              # persistent strat index
     "label_store": "benchmarks.bench_label_store",  # charge-once label cache
+    "cascade": "benchmarks.bench_cascade",          # multi-fidelity cascade
 }
 
 

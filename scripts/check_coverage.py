@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Soft line-coverage floor over the estimator core.
+
+Reads a Cobertura ``coverage.xml`` (what ``pytest --cov --cov-report=xml``
+emits), restricts it to files under ``--prefix`` (default: the statistical
+core, ``repro/core/``), and fails when aggregate line coverage drops below
+``--floor``.
+
+This is a *soft* floor, not a target: it sits well under the suite's
+current coverage and exists to catch a structural regression — a new core
+module landing with no tests, or a refactor orphaning a test file — rather
+than to police individual lines.  Raise the floor as the suite grows; never
+lower it to make a PR pass.
+
+``--warn-only`` reports without failing (used while bootstrapping a new
+environment).  Usage::
+
+    python scripts/check_coverage.py coverage.xml [--floor 60]
+        [--prefix repro/core/] [--warn-only]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import xml.etree.ElementTree as ET
+
+
+def collect(root: ET.Element, prefix: str) -> dict[str, tuple[int, int]]:
+    """filename -> (covered, total) statement lines, for files under prefix."""
+    files: dict[str, tuple[int, int]] = {}
+    for cls in root.iter("class"):
+        fn = cls.get("filename", "")
+        if prefix not in fn.replace("\\", "/"):
+            continue
+        lines = cls.findall("./lines/line")
+        covered = sum(1 for ln in lines if int(ln.get("hits", "0")) > 0)
+        prev_c, prev_t = files.get(fn, (0, 0))
+        files[fn] = (prev_c + covered, prev_t + len(lines))
+    return files
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("xml", help="Cobertura coverage.xml from pytest --cov")
+    ap.add_argument("--prefix", default="repro/core/",
+                    help="path fragment selecting the files under the floor")
+    ap.add_argument("--floor", type=float, default=60.0,
+                    help="minimum aggregate line coverage percent")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report but always exit 0")
+    args = ap.parse_args()
+
+    files = collect(ET.parse(args.xml).getroot(), args.prefix)
+    if not files:
+        print(f"[coverage] no files matching {args.prefix!r} in {args.xml} "
+              f"— the coverage run never measured the core", file=sys.stderr)
+        raise SystemExit(2)
+
+    for fn in sorted(files):
+        c, t = files[fn]
+        pct = 100.0 * c / t if t else 100.0
+        print(f"[coverage]   {fn}: {pct:.1f}% ({c}/{t})")
+    covered = sum(c for c, _ in files.values())
+    total = sum(t for _, t in files.values())
+    pct = 100.0 * covered / total if total else 100.0
+    ok = pct >= args.floor
+    print(f"[coverage] {args.prefix} line coverage {pct:.1f}% "
+          f"({covered}/{total}) vs floor {args.floor:.1f}% "
+          f"-> {'ok' if ok else 'BELOW FLOOR'}")
+    if not ok and not args.warn_only:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,12 +18,29 @@ else
   echo "WARN: ruff unavailable; skipping lint gate" >&2
 fi
 
+# Coverage is a dev dep like ruff: measure when pytest-cov is importable,
+# warn and run plain otherwise (offline containers).  The XML feeds the
+# scripts/check_coverage.py soft floor below and the CI artifact upload.
+COV_ARGS=()
+if python -c "import pytest_cov" >/dev/null 2>&1; then
+  COV_ARGS=(--cov=src/repro/core --cov-report=xml:coverage.xml --cov-report=)
+else
+  echo "WARN: pytest-cov unavailable; skipping coverage measurement" >&2
+fi
+
 if [[ "${CI_FULL:-0}" == "1" ]]; then
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -x -q "$@"
+    python -m pytest -x -q "${COV_ARGS[@]}" "$@"
 else
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -x -q -m "not slow and not pallas" "$@"
+    python -m pytest -x -q -m "not slow and not pallas" "${COV_ARGS[@]}" "$@"
+fi
+
+# Soft floor on statistical-core line coverage: catches a new core module
+# landing untested or a refactor orphaning a test file.  The fast tier
+# deselects slow/pallas tests, so it uses a lower floor than the full run.
+if [[ -f coverage.xml && ${#COV_ARGS[@]} -gt 0 ]]; then
+  python scripts/check_coverage.py coverage.xml --floor "${COV_FLOOR:-60}"
 fi
 
 # Oracle execution-layer smoke benchmark: fails loudly if the batched

@@ -22,6 +22,11 @@ from .oracle import (  # noqa: F401
 )
 from .bas import run_bas, run_exact, run_stratified_pipeline  # noqa: F401
 from .bas_streaming import run_bas_streaming  # noqa: F401
+from .cascade import (  # noqa: F401
+    SimilarityProxyOracle,
+    run_bas_cascade,
+    similarity_proxy,
+)
 from .dispatch import choose_path, dense_weight_bytes, run_auto  # noqa: F401
 from .index import (  # noqa: F401
     IndexArtifact,

@@ -310,23 +310,18 @@ def run_stratified_pipeline(
     )
 
 
-def run_bas(
+def build_dense_space(
     query: Query,
-    cfg: Optional[BASConfig] = None,
-    seed: int = 0,
+    cfg: BASConfig,
+    rng: np.random.Generator,
+    timings: dict,
     weights: Optional[np.ndarray] = None,
-) -> QueryResult:
-    cfg = cfg or BASConfig()
-    rng = np.random.default_rng(seed)
-    t_start = time.perf_counter()
-    timings: dict = {}
-
-    query.oracle.set_budget(query.budget)
-    query.oracle.bind_sizes(query.spec.sizes)
-    n_total = query.spec.n_tuples
-    if query.budget >= n_total:
-        return run_exact(query)
-
+) -> StratifiedSpace:
+    """Stage 1 of the dense path: materialised chain weights + sorted-top
+    stratification, packaged as a :class:`StratifiedSpace`.  Shared by
+    ``run_bas`` and the cascade estimator (``cascade.run_bas_cascade``), so
+    both regimes stratify identically and differ only in how the pipeline
+    spends the Oracle budget."""
     # ---- similarity + stratification -------------------------------------
     t0 = time.perf_counter()
     if weights is None:
@@ -358,13 +353,33 @@ def run_bas(
             return StratumDraw(tup=tup, q=q, size=int(sizes[0]))
         return _draw_stratum(weights, per_idx[i], n, query, rng, cfg.defensive_mix)
 
-    space = StratifiedSpace(
+    return StratifiedSpace(
         sizes=sizes,
         weight_sums=weight_sums,
         sample_stratum=sample_stratum,
         stratum_tuples=lambda i: flat_to_tuples(per_idx[i], query.spec.sizes),
         meta={"path": "dense-sort"},
     )
+
+
+def run_bas(
+    query: Query,
+    cfg: Optional[BASConfig] = None,
+    seed: int = 0,
+    weights: Optional[np.ndarray] = None,
+) -> QueryResult:
+    cfg = cfg or BASConfig()
+    rng = np.random.default_rng(seed)
+    t_start = time.perf_counter()
+    timings: dict = {}
+
+    query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
+    n_total = query.spec.n_tuples
+    if query.budget >= n_total:
+        return run_exact(query)
+
+    space = build_dense_space(query, cfg, rng, timings, weights)
     return run_stratified_pipeline(
         query, cfg, rng, space, {"mode": "bas"}, timings, t_start
     )

@@ -89,43 +89,30 @@ def _walk_rejection_sample(
     return out_idx[:got], out_p[:got]
 
 
-def run_bas_streaming(
+def build_streaming_space(
     query: Query,
-    cfg: Optional[BASConfig] = None,
-    seed: int = 0,
+    cfg: BASConfig,
+    rng: np.random.Generator,
+    timings: dict,
     n_bins: int = 4096,
     use_kernel: Optional[bool] = None,
     use_sweep: Optional[bool] = None,
     precision: Optional[str] = None,
     artifact=None,
     index_store=None,
-) -> QueryResult:
-    """k-way streaming BAS.  Same estimator/CI machinery as the dense path
-    (all aggregates); the cross product is never materialised.
-
-    ``artifact`` (:class:`repro.core.index.IndexArtifact`) stratifies from
-    a persisted sweep instead of recomputing it — bit-identical at fp32.
-    ``index_store`` (:class:`repro.core.index.IndexStore`) resolves the
-    artifact by content key, building (once, shared across concurrent
-    queries) on miss; ignored when ``artifact`` is given.  Either way the
-    index accounting lands in ``QueryResult.detail["stratify"]``
-    (``index_hit``, ``index_build_ms``, ``delta_blocks``,
-    ``index_version``)."""
-    cfg = cfg or BASConfig()
+) -> tuple:
+    """Stage 1 of the streaming path: histogram stratification + the
+    walk+rejection D_0 sampler, packaged as a :class:`StratifiedSpace`.
+    Returns ``(space, extra_detail)`` — the extra detail carries the
+    streaming-specific keys (``p_top``, ``use_kernel``) the caller merges
+    into its pipeline detail dict.  Shared by ``run_bas_streaming`` and the
+    cascade estimator so both spend stage 1 identically."""
     if use_kernel is None:
         use_kernel = cfg.use_kernel
     if use_sweep is None:
         use_sweep = cfg.use_sweep
     if precision is None:
         precision = cfg.sweep_precision
-    rng = np.random.default_rng(seed)
-    t_start = time.perf_counter()
-    timings: dict = {}
-
-    query.oracle.set_budget(query.budget)
-    query.oracle.bind_sizes(query.spec.sizes)
-    if query.budget >= query.spec.n_tuples:
-        return run_exact(query)
 
     embeddings = [np.asarray(e, np.float32) for e in query.spec.embeddings]
     sizes_spec = tuple(e.shape[0] for e in embeddings)
@@ -228,8 +215,47 @@ def run_bas_streaming(
         stratum_tuples=lambda i: per_tup[i],
         meta=meta,
     )
+    return space, {"p_top": p_top, "use_kernel": use_kernel}
+
+
+def run_bas_streaming(
+    query: Query,
+    cfg: Optional[BASConfig] = None,
+    seed: int = 0,
+    n_bins: int = 4096,
+    use_kernel: Optional[bool] = None,
+    use_sweep: Optional[bool] = None,
+    precision: Optional[str] = None,
+    artifact=None,
+    index_store=None,
+) -> QueryResult:
+    """k-way streaming BAS.  Same estimator/CI machinery as the dense path
+    (all aggregates); the cross product is never materialised.
+
+    ``artifact`` (:class:`repro.core.index.IndexArtifact`) stratifies from
+    a persisted sweep instead of recomputing it — bit-identical at fp32.
+    ``index_store`` (:class:`repro.core.index.IndexStore`) resolves the
+    artifact by content key, building (once, shared across concurrent
+    queries) on miss; ignored when ``artifact`` is given.  Either way the
+    index accounting lands in ``QueryResult.detail["stratify"]``
+    (``index_hit``, ``index_build_ms``, ``delta_blocks``,
+    ``index_version``)."""
+    cfg = cfg or BASConfig()
+    rng = np.random.default_rng(seed)
+    t_start = time.perf_counter()
+    timings: dict = {}
+
+    query.oracle.set_budget(query.budget)
+    query.oracle.bind_sizes(query.spec.sizes)
+    if query.budget >= query.spec.n_tuples:
+        return run_exact(query)
+
+    space, extra = build_streaming_space(
+        query, cfg, rng, timings, n_bins=n_bins, use_kernel=use_kernel,
+        use_sweep=use_sweep, precision=precision, artifact=artifact,
+        index_store=index_store,
+    )
     return run_stratified_pipeline(
-        query, cfg, rng, space,
-        {"mode": "bas_streaming", "p_top": p_top, "use_kernel": use_kernel},
+        query, cfg, rng, space, {"mode": "bas_streaming", **extra},
         timings, t_start,
     )

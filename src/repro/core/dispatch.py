@@ -27,7 +27,7 @@ from repro.obs import DispatchTelemetry
 
 from .bas import run_bas
 from .bas_streaming import run_bas_streaming
-from .types import BASConfig, JoinSpec, Query, QueryResult
+from .types import Agg, BASConfig, JoinSpec, Query, QueryResult
 
 _WEIGHT_BYTES = np.dtype(np.float64).itemsize
 
@@ -67,6 +67,12 @@ def run_auto(
 
     The decision is recorded in ``result.telemetry.dispatch`` so callers
     (and the crossover benchmark) can audit it.
+
+    ``cfg.cascade`` layers the multi-fidelity cascade (``core/cascade.py``)
+    on top of the same memory decision: linear aggregates route through
+    ``run_bas_cascade`` on the chosen regime (``path="cascade-dense"`` /
+    ``"cascade-streaming"``); non-linear aggregates have no difference
+    decomposition and fall through to plain BAS.
     """
     cfg = cfg or BASConfig()
     footprint = dense_weight_bytes(query.spec)
@@ -81,7 +87,17 @@ def run_auto(
         )
         if artifact is not None:
             path = "streaming-index"
-    if path == "dense":
+    if cfg.cascade and query.agg in (Agg.COUNT, Agg.SUM, Agg.AVG):
+        from .cascade import run_bas_cascade   # lazy: cascade imports us
+
+        regime = "dense" if path == "dense" else "streaming"
+        res = run_bas_cascade(
+            query, cfg, seed=seed, path=regime, n_bins=n_bins,
+            artifact=artifact,
+            index_store=index_store if artifact is None else None,
+        )
+        path = f"cascade-{path}"
+    elif path == "dense":
         res = run_bas(query, cfg, seed=seed)
     else:
         res = run_bas_streaming(

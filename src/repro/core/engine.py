@@ -153,7 +153,13 @@ class JoinMLEngine:
     concurrent queries on the same registered tables stratify from one
     persistent sweep artifact: ``method="auto"`` routes through a fresh
     resident artifact when one exists, and ``method="bas-streaming"``
-    resolves (building on first miss) through the store."""
+    resolves (building on first miss) through the store.
+
+    ``proxy_factory`` (same signature as ``oracle_factory``) supplies the
+    cheap proxy oracle for the multi-fidelity cascade
+    (``method="bas-cascade"`` or ``cfg.cascade``); without one, the cascade
+    falls back to the thresholded-similarity proxy
+    (:func:`repro.core.cascade.similarity_proxy`)."""
 
     def __init__(
         self,
@@ -161,11 +167,15 @@ class JoinMLEngine:
         oracle_factory: Callable[[Union[str, list[str]], list[str]], Oracle],
         cfg: Optional[BASConfig] = None,
         index_store=None,
+        proxy_factory: Optional[
+            Callable[[Union[str, list[str]], list[str]], Oracle]
+        ] = None,
     ):
         self.catalog = catalog
         self.oracle_factory = oracle_factory
         self.cfg = cfg or BASConfig()
         self.index_store = index_store
+        self.proxy_factory = proxy_factory
 
     def build(self, sql: str, budget: Optional[int] = None,
               confidence: Optional[float] = None) -> Query:
@@ -182,6 +192,8 @@ class JoinMLEngine:
             g=g,
             budget=budget or pq.budget or 10000,
             confidence=confidence or pq.confidence or 0.95,
+            proxy=(self.proxy_factory(nl, pq.table_names)
+                   if self.proxy_factory is not None else None),
         )
 
     def execute(self, sql: str, method: str = "auto", seed: int = 0,
@@ -199,6 +211,12 @@ class JoinMLEngine:
             return bas.run_bas(q, self.cfg, seed=seed)
         if method == "bas-streaming":
             return bas_streaming.run_bas_streaming(
+                q, self.cfg, seed=seed, index_store=self.index_store
+            )
+        if method == "bas-cascade":
+            from . import cascade
+
+            return cascade.run_bas_cascade(
                 q, self.cfg, seed=seed, index_store=self.index_store
             )
         if method == "wwj":

@@ -133,6 +133,20 @@ class BASConfig:
                                   # caps HT weights at |D_i|/mix, bounding the
                                   # variance blow-up when false negatives hide
                                   # at near-floor similarity (beyond-paper)
+    cascade: bool = False         # multi-fidelity cascade (core/cascade.py):
+                                  # a cheap proxy oracle labels broadly, the
+                                  # expensive Oracle pays only for the
+                                  # difference-estimator correction; run_auto
+                                  # routes through it for linear aggregates
+                                  # when a proxy is available
+    cascade_proxy_factor: float = 4.0
+                                  # proxy-stage sample rows per unit of
+                                  # (expensive) oracle budget: the proxy term
+                                  # is HT-estimated from factor*b cheap draws
+    cascade_proxy_threshold: float = 0.5
+                                  # default similarity-proxy decision
+                                  # threshold on the chain weight (used when
+                                  # no explicit proxy oracle is supplied)
 
 
 @dataclasses.dataclass
@@ -187,6 +201,10 @@ class Query:
     n_groups: int = 0
     g_bounds: Optional[tuple] = None     # (lo, hi) data-wide bounds of g, used
                                          # for MIN/MAX CIs (paper §5.3)
+    proxy: Optional["Oracle"] = None     # noqa: F821 — cheap proxy oracle for
+                                         # the multi-fidelity cascade
+                                         # (core/cascade.py); its calls are
+                                         # NOT charged against ``budget``
 
     def attr(self) -> AttrFn:
         return self.g if self.g is not None else constant_attr(1.0)

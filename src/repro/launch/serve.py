@@ -234,6 +234,37 @@ def _print_service_stats(role: str, snap: dict) -> None:
               f"rate={snap.get('service.rate_rows_per_s', 0.0):.0f} rows/s; "
               f"workers: deaths={snap.get('service.worker.deaths', 0.0):.0f} "
               f"rejoins={snap.get('service.worker.rejoins', 0.0):.0f}")
+    for line in _service_class_lines(snap):
+        print(f"[{role}] {line}")
+
+
+def _service_class_lines(snap: dict) -> list[str]:
+    """One line per deadline/query class seen by the service: flush-latency
+    histogram percentiles (``service.class.<name>.flush_ms.*``, written by a
+    tracker) and the class's own admission EWMA
+    (``service.class.<name>.rate_rows_per_s``)."""
+    classes: set[str] = set()
+    for key in snap:
+        if key.startswith("service.class."):
+            rest = key[len("service.class."):]
+            classes.add(rest.rsplit(".", 1)[0].split(".")[0])
+    lines = []
+    for qc in sorted(classes):
+        prefix = f"service.class.{qc}"
+        parts = [f"class {qc!r}:"]
+        if f"{prefix}.flush_ms.count" in snap:
+            parts.append(
+                f"flushes={snap[f'{prefix}.flush_ms.count']:.0f} "
+                f"p50={snap.get(f'{prefix}.flush_ms.p50', 0.0):.1f}ms "
+                f"p99={snap.get(f'{prefix}.flush_ms.p99', 0.0):.1f}ms"
+            )
+        if f"{prefix}.rate_rows_per_s" in snap:
+            parts.append(
+                f"rate={snap[f'{prefix}.rate_rows_per_s']:.0f} rows/s"
+            )
+        if len(parts) > 1:
+            lines.append(" ".join(parts))
+    return lines
 
 
 def _run_fleet_role(args, scorer) -> None:

@@ -8,6 +8,7 @@ the typed per-query telemetry tree.
   to ``QueryResult.detail``, with a deprecation-shimmed dict view.
 """
 from .telemetry import (
+    CascadeTelemetry,
     DispatchTelemetry,
     IndexTelemetry,
     OracleTelemetry,
@@ -28,6 +29,7 @@ from .tracker import (
 )
 
 __all__ = [
+    "CascadeTelemetry",
     "DispatchTelemetry",
     "IndexTelemetry",
     "InMemoryTracker",

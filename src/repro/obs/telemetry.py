@@ -74,6 +74,25 @@ class DispatchTelemetry:
     extra: dict[str, Any] = dataclasses.field(default_factory=dict)
 
 
+@dataclasses.dataclass
+class CascadeTelemetry:
+    """Per-stage counters of the multi-fidelity cascade (``core/cascade.py``).
+
+    ``proxy_*`` is the cheap unmetered stage, ``oracle_calls`` the expensive
+    ledger the §2 budget binds; ``*_group`` record the distinct
+    ``service_group()`` keys the two stages super-batch under."""
+
+    proxy_calls: int = 0
+    proxy_requests: int = 0
+    oracle_calls: int = 0
+    proxy_rows: int = 0
+    correction_rows: int = 0
+    disagreement_rate: float = 0.0
+    proxy_group: str = ""
+    oracle_group: str = ""
+    extra: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
 _INDEX_KEYS = ("index_hit", "index_version", "delta_blocks", "index_build_ms")
 _SCALAR_FIELDS = ("beta", "num_strata", "stratum_sizes", "pilot_n", "est_mse")
 
@@ -94,6 +113,7 @@ class QueryTelemetry:
     stratify: Optional[StratifyTelemetry] = None
     index: Optional[IndexTelemetry] = None
     dispatch: Optional[DispatchTelemetry] = None
+    cascade: Optional[CascadeTelemetry] = None
     beta: Optional[list] = None
     num_strata: Optional[int] = None
     stratum_sizes: Optional[list] = None
@@ -120,6 +140,8 @@ class QueryTelemetry:
             self._parse_stratify(value)
         elif key == "dispatch" and isinstance(value, dict):
             self._parse_dispatch(value)
+        elif key == "cascade" and isinstance(value, dict):
+            self._parse_cascade(value)
         elif key == "timings" and isinstance(value, dict):
             self.timings = dict(value)
         elif key in _SCALAR_FIELDS:
@@ -156,6 +178,14 @@ class QueryTelemetry:
         d = dict(d)
         known = {f.name for f in dataclasses.fields(DispatchTelemetry)} - {"extra"}
         self.dispatch = DispatchTelemetry(
+            **{k: d.pop(k) for k in list(d) if k in known},
+            extra=d,
+        )
+
+    def _parse_cascade(self, d: dict) -> None:
+        d = dict(d)
+        known = {f.name for f in dataclasses.fields(CascadeTelemetry)} - {"extra"}
+        self.cascade = CascadeTelemetry(
             **{k: d.pop(k) for k in list(d) if k in known},
             extra=d,
         )
@@ -202,6 +232,12 @@ class QueryTelemetry:
                   if f.name != "extra"}
             dd.update(self.dispatch.extra)
             d["dispatch"] = dd
+        if self.cascade is not None:
+            cc = {f.name: getattr(self.cascade, f.name)
+                  for f in dataclasses.fields(CascadeTelemetry)
+                  if f.name != "extra"}
+            cc.update(self.cascade.extra)
+            d["cascade"] = cc
         return d
 
 
@@ -251,6 +287,8 @@ class TelemetryView(MutableMapping):
             t.stratify = t.index = None
         elif key == "dispatch":
             t.dispatch = None
+        elif key == "cascade":
+            t.cascade = None
         elif key == "timings":
             t.timings = {}
         elif key in _SCALAR_FIELDS:

@@ -316,6 +316,11 @@ class OracleService:
             weakref.WeakKeyDictionary()
         )
         self._service_rate = 0.0    # rows/s EWMA; 0 = not yet measured
+        # per-deadline-class EWMAs: each window's rate sample updates every
+        # class present in that window, so one slow class's measurements
+        # never drag down the predicted wait of a fast class (global-rate
+        # sharing let a slow tenant shed a fast tenant's queries)
+        self._class_rates: dict[str, float] = {}
         self._queued_rows = 0
         self._inflight_rows = 0
         self._closed = False
@@ -391,15 +396,19 @@ class OracleService:
                 self._classes.pop(o, None)
             self._cv.notify_all()
 
-    def _predicted_wait_ms_locked(self, rows: int) -> float:
-        """Expected queue wait for a flush of ``rows`` rows, from the EWMA
-        service rate and the backlog (queued + in-flight + this flush) it
-        would land behind, plus the window-assembly deadline.  0 until the
-        first window has been measured (admit during warmup)."""
-        if self._service_rate <= 0.0:
+    def _predicted_wait_ms_locked(self, rows: int,
+                                  qclass: str = "default") -> float:
+        """Expected queue wait for a flush of ``rows`` rows, from the
+        class's own EWMA service rate and the backlog (queued + in-flight +
+        this flush) it would land behind, plus the window-assembly deadline.
+        0 until the class has a measured window (admit during warmup) —
+        falling back to another class's rate would reintroduce exactly the
+        cross-tenant coupling the per-class budgets exist to remove."""
+        rate = self._class_rates.get(qclass, 0.0)
+        if rate <= 0.0:
             return 0.0
         backlog = self._queued_rows + self._inflight_rows + rows
-        return 1e3 * backlog / self._service_rate + 1e3 * self.max_wait_s
+        return 1e3 * backlog / rate + 1e3 * self.max_wait_s
 
     def submit(self, batch: OracleBatch) -> Future:
         """Enqueue a batch's pending set; called by ``flush_async``.  The
@@ -419,7 +428,7 @@ class OracleService:
             if self._closed:
                 raise RuntimeError("OracleService is closed")
             if deadline_ms is not None:
-                predicted = self._predicted_wait_ms_locked(rows)
+                predicted = self._predicted_wait_ms_locked(rows, qclass)
                 if predicted > deadline_ms:
                     self.admission_rejections += 1
                     queued = self._queued_rows + self._inflight_rows
@@ -693,6 +702,8 @@ class OracleService:
             ),
             "service.queue.rows": float(self._queued_rows),
             "service.rate_rows_per_s": float(self._service_rate),
+            **{f"service.class.{qc}.rate_rows_per_s": float(r)
+               for qc, r in self._class_rates.items()},
             "service.admission.rejected": float(self.admission_rejections),
             "service.worker.live": float(len(self._remote_workers)),
             "service.worker.dead": float(len(self._dead_workers)),
@@ -765,12 +776,21 @@ class OracleService:
                     self._inflight_rows = 0
                     if rows and elapsed > 0:
                         # EWMA of the measured service rate (rows/s) feeding
-                        # admission control's predicted-wait estimate
+                        # admission control's predicted-wait estimate; the
+                        # sample also updates every deadline class present in
+                        # this window so each class predicts from its own
+                        # history only
                         sample = rows / elapsed
                         self._service_rate = (
                             sample if self._service_rate <= 0.0
                             else 0.7 * self._service_rate + 0.3 * sample
                         )
+                        for qc in {seg.qclass for seg in window}:
+                            prev = self._class_rates.get(qc, 0.0)
+                            self._class_rates[qc] = (
+                                sample if prev <= 0.0
+                                else 0.7 * prev + 0.3 * sample
+                            )
             # pools retired by register_remote_worker are quiescent once the
             # window completes (this thread is their only submitter and
             # _execute awaits every shard), so their threads are reaped here

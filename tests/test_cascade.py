@@ -1,0 +1,208 @@
+"""Multi-fidelity cascade (``core/cascade.py``): wiring and ledger contracts.
+
+Statistical validity lives in ``tests/test_guarantees.py`` (coverage) and
+``tests/test_cascade_property.py`` (unbiasedness / degradation under random
+proxy quality).  Here we pin the deterministic contracts: the §2 budget binds
+only the expensive oracle, telemetry reports both stages, dispatch and the
+engine route the cascade, non-linear aggregates fall back to plain BAS, and
+execution through an :class:`OracleService` is bit-identical to serial while
+proxy and oracle traffic super-batch under distinct service groups.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Agg,
+    ArrayOracle,
+    BASConfig,
+    Catalog,
+    JoinMLEngine,
+    Query,
+    Table,
+    run_auto,
+    run_bas_cascade,
+    similarity_proxy,
+)
+from repro.data import make_clustered_tables
+from repro.obs import InMemoryTracker
+from repro.serve.oracle_service import OracleService, serve_queries
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return make_clustered_tables(80, 80, n_entities=120, noise=0.4, seed=3)
+
+
+def _mk_query(ds, budget=600, proxy=None, agg=Agg.COUNT, **kw):
+    return Query(spec=ds.spec(), agg=agg, oracle=ds.oracle(), budget=budget,
+                 proxy=proxy, **kw)
+
+
+def test_perfect_proxy_reports_zero_disagreement(ds):
+    """proxy == oracle: every correction label is 0, so the pilot measures
+    zero disagreement and the estimate still lands (proxy regime carries it)."""
+    truth = float(ds.truth.sum())
+    q = _mk_query(ds, proxy=ArrayOracle(ds.truth.astype(np.float64)))
+    res = run_bas_cascade(q, seed=0, path="dense")
+    c = res.telemetry.cascade
+    assert c is not None
+    assert c.disagreement_rate == 0.0
+    assert c.proxy_rows > 0 and c.correction_rows > 0
+    assert res.ci.contains(truth)
+
+
+def test_budget_binds_oracle_only_and_ledger_is_consistent(ds):
+    """The §2 contract: at most ``budget`` unique tuples hit the expensive
+    oracle across pilot + blocking + correction rounds, every one of them
+    charged; the proxy runs unmetered on its own ledger."""
+    budget = 500
+    proxy = ArrayOracle(ds.truth.astype(np.float64))
+    q = _mk_query(ds, budget=budget, proxy=proxy)
+    res = run_bas_cascade(q, seed=1, path="dense")
+    assert q.oracle.calls <= budget
+    assert q.oracle.calls == q.oracle.charged        # no store: 1:1 pacing
+    assert res.oracle_calls == q.oracle.calls
+    assert res.telemetry.cascade.oracle_calls == q.oracle.calls
+    # the cheap stage did the broad labelling, unconstrained by the budget
+    assert proxy.budget is None
+    assert proxy.calls > budget
+    assert res.telemetry.cascade.proxy_calls == proxy.calls
+
+
+def test_exact_shortcut_when_budget_covers_space(ds):
+    q = _mk_query(ds, budget=ds.spec().n_tuples)
+    res = run_bas_cascade(q, seed=0)
+    assert res.telemetry.mode == "exact"
+    assert res.estimate == float(ds.truth.sum())
+
+
+def test_nonlinear_aggregate_falls_back_to_plain_bas(ds):
+    """MIN/MAX/MEDIAN have no difference decomposition: the cascade entry
+    point runs plain BAS on the chosen path instead."""
+    col = ds.columns1["value"]
+    g = lambda idx: col[idx[:, 0]]  # noqa: E731
+    q = _mk_query(ds, agg=Agg.MEDIAN, g=g)
+    res = run_bas_cascade(q, seed=0, path="dense")
+    assert res.telemetry.mode == "bas"
+    assert res.telemetry.cascade is None
+
+
+def test_dispatch_routes_cascade_and_labels_path(ds):
+    cfg = BASConfig(cascade=True)
+    q = _mk_query(ds, proxy=ArrayOracle(ds.truth.astype(np.float64)))
+    res = run_auto(q, cfg, seed=0)
+    assert res.telemetry.mode == "bas-cascade"
+    assert res.telemetry.dispatch.path == "cascade-dense"
+    assert res.telemetry.cascade is not None
+
+
+def test_dispatch_cascade_nonlinear_falls_through_to_plain(ds):
+    col = ds.columns1["value"]
+    g = lambda idx: col[idx[:, 0]]  # noqa: E731
+    cfg = BASConfig(cascade=True)
+    q = _mk_query(ds, agg=Agg.MIN, g=g, g_bounds=(float(col.min()), None))
+    res = run_auto(q, cfg, seed=0)
+    assert res.telemetry.mode == "bas"
+    assert res.telemetry.dispatch.path == "dense"
+
+
+def test_streaming_routed_cascade_runs(ds):
+    """Forcing the streaming regime exercises the shared streaming space
+    builder (histogram stratification + walk+rejection D_0) under the
+    cascade pipeline."""
+    q = _mk_query(ds, proxy=ArrayOracle(ds.truth.astype(np.float64)))
+    res = run_bas_cascade(q, seed=2, path="streaming")
+    assert res.telemetry.mode == "bas-cascade"
+    assert res.telemetry.stratify is not None        # streaming stage-1 meta
+    assert res.telemetry.cascade.correction_rows > 0
+
+
+def test_engine_method_and_proxy_factory(ds):
+    cat = Catalog()
+    cat.register(Table("t1", ds.emb1, ds.columns1))
+    cat.register(Table("t2", ds.emb2, ds.columns2))
+    pt = ds.truth.astype(np.float64)
+    eng = JoinMLEngine(cat, lambda nl, names: ds.oracle(),
+                       proxy_factory=lambda nl, names: ArrayOracle(pt))
+    res = eng.execute(
+        "SELECT COUNT(*) FROM t1 JOIN t2 ON NL('same entity') "
+        "ORACLE BUDGET 600 WITH PROBABILITY 0.95",
+        method="bas-cascade", seed=4,
+    )
+    assert res.telemetry.mode == "bas-cascade"
+    assert res.telemetry.cascade.disagreement_rate == 0.0
+
+
+def test_similarity_proxy_service_group_is_content_keyed(ds):
+    """The default proxy's service group is fingerprinted from the table
+    embeddings: same tables -> same group (cross-query super-batch fusion +
+    safe label sharing), different tables -> different group."""
+    p1 = similarity_proxy(ds.spec())
+    p2 = similarity_proxy(ds.spec())
+    assert p1.service_group() == p2.service_group()
+    assert p1.service_group()[0] == "scorer"
+    other = make_clustered_tables(40, 40, n_entities=60, noise=0.4, seed=9)
+    assert similarity_proxy(other.spec()).service_group() != p1.service_group()
+
+
+def test_cascade_telemetry_roundtrip(ds):
+    q = _mk_query(ds, proxy=ArrayOracle(ds.truth.astype(np.float64)))
+    res = run_bas_cascade(q, seed=0, path="dense")
+    d = res.telemetry.as_detail()
+    assert d["cascade"]["proxy_group"] != d["cascade"]["oracle_group"]
+    from repro.obs import QueryTelemetry
+
+    rt = QueryTelemetry.from_detail(d)
+    assert rt.cascade.proxy_calls == res.telemetry.cascade.proxy_calls
+    assert rt.as_detail() == d
+
+
+# ----------------------------------------------------------------------------
+# OracleService integration (acceptance: bit-identical to serial)
+# ----------------------------------------------------------------------------
+
+def _served_queries(seeds):
+    out = []
+    for s in seeds:
+        d = make_clustered_tables(64, 64, n_entities=96, noise=0.4, seed=s)
+        out.append(Query(spec=d.spec(), agg=Agg.COUNT, oracle=d.oracle(),
+                         budget=400,
+                         proxy=ArrayOracle(d.truth.astype(np.float64))))
+    return out
+
+
+def test_served_cascade_bit_identical_to_serial():
+    """Concurrent cascade queries through one OracleService produce exactly
+    the serial estimates/CIs/ledgers; proxy traffic super-batches under its
+    own ``cascade-proxy`` class and shows up in the per-class telemetry."""
+    seeds = (1, 2, 3)
+    serial = []
+    for q, s in zip(_served_queries(seeds), seeds):
+        res = run_bas_cascade(q, seed=s, path="dense")
+        serial.append((res, q.oracle.calls, q.oracle.requests))
+
+    tracker = InMemoryTracker()
+    with OracleService(workers=2, max_wait_ms=20.0, tracker=tracker) as svc:
+        queries = _served_queries(seeds)
+        svc.attach(*[q.oracle for q in queries])
+
+        def job(q, s):
+            try:
+                return run_bas_cascade(q, seed=s, path="dense")
+            finally:
+                svc.detach(q.oracle)
+
+        results = serve_queries(
+            svc, [lambda q=q, s=s: job(q, s) for q, s in zip(queries, seeds)]
+        )
+        snap = svc.snapshot()
+
+    for (ref, calls, requests), got, q in zip(serial, results, queries):
+        assert got.estimate == ref.estimate          # bit-identical
+        assert got.ci.lo == ref.ci.lo and got.ci.hi == ref.ci.hi
+        assert q.oracle.calls == calls               # same ledger charge
+        assert q.oracle.requests == requests
+        # the auto-attached proxy detached with its query
+        assert q.proxy.service is None
+    # proxy stage landed in its own deadline-class telemetry
+    assert snap["service.class.cascade-proxy.flush_ms.count"] > 0.0

@@ -1,0 +1,124 @@
+"""Tier-1 statistical-coverage harness (paper §6 guarantee, Fig. 2/5).
+
+The product the paper sells is not the point estimate but the guarantee:
+``P(mu in CI) >= p`` at any oracle budget.  These tests promote that claim
+from a reporting benchmark (``benchmarks/bench_guarantees.py``) into the
+fast test tier: every estimator path the engine routes — dense BAS,
+streaming BAS, and the multi-fidelity cascade on both regimes — runs ~50
+seeded replicates over a small synthetic workload with known ground truth,
+and the empirical CI coverage must stay above ``nominal - slack``.
+
+Everything is deterministic (fixed dataset seed, replicate seeds 0..N-1),
+so a coverage regression fails CI reproducibly rather than flaking.  The
+slack (0.10 under nominal 0.95) absorbs the binomial noise of 50
+replicates (sd ~ 0.03 at p=0.95) plus small-sample bootstrap-t error; a
+real guarantee break (e.g. a biased correction term, a variance formula
+dropping a regime) lands far below it.
+
+The workload is sized for signal, not triviality: the budget is small
+enough that every path actually samples (non-zero RMSE) instead of
+blocking its way to exactness.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Agg,
+    ArrayOracle,
+    BASConfig,
+    Query,
+    run_bas,
+    run_bas_cascade,
+    run_bas_streaming,
+)
+from repro.data import make_clustered_tables
+
+N_REP = 50
+NOMINAL = 0.95
+SLACK = 0.10
+BUDGET = 500
+
+# modest bootstrap depth keeps the harness in the fast tier; CI *quality*
+# at n_bootstrap=1000 is the default config's concern, not this test's
+CFG = BASConfig(n_bootstrap=200)
+
+
+@pytest.fixture(scope="module")
+def workload():
+    ds = make_clustered_tables(96, 96, n_entities=150, noise=0.45, seed=11)
+    truth = float(ds.truth.sum())
+    assert truth > 0
+    return ds, truth
+
+
+def _mk_query(ds, agg=Agg.COUNT, g=None):
+    return Query(spec=ds.spec(), agg=agg, oracle=ds.oracle(), budget=BUDGET,
+                 g=g)
+
+
+def _coverage(ds, truth, run_one, agg=Agg.COUNT, g=None):
+    hits, ests = 0, []
+    for seed in range(N_REP):
+        res = run_one(_mk_query(ds, agg, g), seed)
+        hits += res.ci.contains(truth)
+        ests.append(res.estimate)
+    return hits / N_REP, ests
+
+
+PATHS = {
+    "bas-dense": lambda q, s: run_bas(q, CFG, seed=s),
+    "bas-streaming": lambda q, s: run_bas_streaming(q, CFG, seed=s),
+    "cascade-dense": lambda q, s: run_bas_cascade(q, CFG, seed=s,
+                                                  path="dense"),
+    "cascade-streaming": lambda q, s: run_bas_cascade(q, CFG, seed=s,
+                                                      path="streaming"),
+}
+
+
+@pytest.mark.parametrize("path", sorted(PATHS))
+def test_count_ci_coverage_at_nominal(workload, path):
+    """Empirical COUNT coverage >= nominal - slack on every estimator path,
+    including both cascade-routed regimes (the acceptance bar: the
+    difference-estimator correction must not cost guarantee validity)."""
+    ds, truth = workload
+    cov, ests = _coverage(ds, truth, PATHS[path])
+    assert cov >= NOMINAL - SLACK, (
+        f"{path}: coverage {cov:.2f} < {NOMINAL - SLACK:.2f} "
+        f"(mean est {np.mean(ests):.1f}, truth {truth:.1f})"
+    )
+    # the workload must exercise sampling, not collapse to an exact scan
+    assert np.std(ests) > 0.0
+    # and the estimator stays centred (bias regression guard, generous band)
+    assert abs(np.mean(ests) - truth) < 0.25 * truth
+
+
+@pytest.mark.parametrize("path", ["cascade-dense", "bas-dense"])
+def test_sum_ci_coverage_at_nominal(workload, path):
+    """SUM with a real attribute column holds coverage through the cascade's
+    two-regime decomposition (g rides both the proxy and correction terms)."""
+    ds, truth_count = workload
+    col = ds.columns1["value"]
+    g = lambda idx: col[idx[:, 0]]  # noqa: E731
+    truth = float((col[:, None] * ds.truth).sum())
+    cov, ests = _coverage(ds, truth, PATHS[path], agg=Agg.SUM, g=g)
+    assert cov >= NOMINAL - SLACK, (
+        f"{path}: SUM coverage {cov:.2f} < {NOMINAL - SLACK:.2f}"
+    )
+    assert abs(np.mean(ests) - truth) < 0.3 * truth
+
+
+def test_cascade_coverage_robust_to_garbage_proxy(workload):
+    """An adversarial proxy (labels = coin flips, uncorrelated with truth)
+    widens the cascade's CIs but must not break their validity — the
+    difference estimator corrects any proxy bias by construction."""
+    ds, truth = workload
+    rng = np.random.default_rng(99)
+    garbage = ArrayOracle((rng.random(ds.truth.shape) < 0.5)
+                          .astype(np.float64))
+    hits = 0
+    for seed in range(N_REP):
+        q = _mk_query(ds)
+        q.proxy = garbage
+        res = run_bas_cascade(q, CFG, seed=seed, path="dense")
+        hits += res.ci.contains(truth)
+    assert hits / N_REP >= NOMINAL - SLACK

@@ -290,3 +290,29 @@ def test_noop_tracker_service_snapshot_still_has_base_keys():
     assert snap["service.admission.rejected"] == 0.0
     assert snap["service.worker.live"] == 0.0
     assert not any(k.endswith(".p50") for k in snap)
+
+
+def test_launcher_prints_service_class_histograms(capsys):
+    """The launcher shutdown print surfaces one line per deadline/query
+    class, fed from the ``service.class.*`` snapshot keys an attached class
+    generates (flush-latency percentiles + the per-class admission EWMA)."""
+    from repro.launch.serve import _print_service_stats
+    from repro.serve.oracle_service import OracleService
+
+    tracker = InMemoryTracker()
+    with OracleService(max_wait_ms=1.0, tracker=tracker) as svc:
+        o = FnOracle(lambda idx: np.ones(len(idx), np.float64))
+        o.bind_sizes((100, 100))
+        svc.attach(o, deadline_ms=60_000.0, query_class="tight")
+        o.label(np.array([[1, 2], [3, 4]]))
+        snap = svc.snapshot()
+
+    # the attached class produced its snapshot keys...
+    assert "service.class.tight.flush_ms.p50" in snap
+    assert "service.class.tight.flush_ms.p99" in snap
+    assert snap["service.class.tight.rate_rows_per_s"] > 0.0
+    # ...and the shutdown print renders them
+    _print_service_stats("service", snap)
+    out = capsys.readouterr().out
+    assert "class 'tight':" in out
+    assert "p50=" in out and "p99=" in out and "rate=" in out

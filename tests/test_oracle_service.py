@@ -748,3 +748,48 @@ def test_admission_sheds_only_over_deadline_class_and_never_charges():
         assert snap["service.admission.rejected.events"] >= 1.0
         assert "service.class.tight.flush_ms.p50" in snap
     assert tracker.histogram("service.class.default.flush_ms") is not None
+
+def test_slow_class_cannot_shed_fast_class():
+    """Per-deadline-class admission budgets: each class predicts its wait
+    from its OWN measured EWMA rate.  Regression for the single global-rate
+    design, under which a slow tenant's measurements inflated the predicted
+    wait of a fast tenant enough to shed it."""
+    import time
+
+    def slow_fn(idx):                                # ~1e4 rows/s ceiling
+        time.sleep(len(idx) * 1e-4)
+        return np.ones(len(idx), np.float64)
+
+    slow, fast = FnOracle(slow_fn), FnOracle(lambda idx: np.ones(len(idx)))
+    slow.bind_sizes((10_000, 10_000))
+    fast.bind_sizes((10_000, 10_000))
+    with OracleService(workers=1, max_wait_ms=5.0, min_shard=1 << 30) as svc:
+        svc.attach(slow, deadline_ms=60_000.0, query_class="slow")
+        svc.attach(fast, deadline_ms=100.0, query_class="fast")
+
+        # the slow class measures its (terrible) rate into its own EWMA
+        warm = np.stack([np.arange(2000), np.arange(2000) + 1], axis=1)
+        slow.label(warm)
+        with svc._cv:
+            global_rate = svc._service_rate
+        assert global_rate > 0.0
+
+        # a backlog that, at the slow class's measured rate, predicts far
+        # beyond the fast class's 100 ms deadline
+        big = np.stack([np.arange(6000), np.arange(6000) + 1], axis=1)
+        bulk = svc.submit_raw("bulk", slow_fn, big)
+
+        small = np.array([[7001, 2], [7002, 7]])
+        with svc._cv:
+            backlog = svc._queued_rows + svc._inflight_rows + len(small)
+        # the retired global-rate design would have shed the fast class here
+        assert 1e3 * backlog / global_rate > 100.0
+        got = fast.label(small)      # per-class rate: fast is unmeasured ->
+        np.testing.assert_array_equal(got, np.ones(2))   # admitted
+        assert fast.calls == len(small)
+
+        bulk.result()
+        snap = svc.snapshot()
+        assert snap["service.class.slow.rate_rows_per_s"] > 0.0
+        assert snap["service.class.fast.rate_rows_per_s"] > 0.0
+        assert snap["service.admission.rejected"] == 0.0
