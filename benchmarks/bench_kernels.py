@@ -92,7 +92,7 @@ def run(fast: bool = True, smoke: bool = False):
             sim_topk_pallas(a, b, k=8, bm=128, bn=128, interpret=interpret),
         )
 
-    dt_f, (bc, vf, jf) = _time(fused, e1, e2)
+    dt_f, (bc, vf, jf, rs_f) = _time(fused, e1, e2)
     dt_s, (hist, (vs, js)) = _time(sequential, e1, e2)
     agree = bool(
         np.array_equal(np.asarray(bc).sum(axis=0), np.asarray(hist))
@@ -108,6 +108,35 @@ def run(fast: bool = True, smoke: bool = False):
     rows.append(row("kernel_sim_sweep_fused", dt_f, f"agree={agree}"))
     rows.append(row("kernel_sim_sweep_sequential", dt_s,
                     f"fused_speedup_x={speedup:.2f}"))
+
+    # one-pass chain statistics: the fused sweep already emitted the walk
+    # row sums above for free — compare against the retired schedule that
+    # ran the sweep and then two standalone f64 passes for walk setup
+    from repro.core.similarity import chain_total_weight, edge_row_sums_raw
+
+    e1_np, e2_np = np.asarray(e1), np.asarray(e2)
+
+    def sweep_plus_two_pass(a, b):
+        out = sim_sweep_pallas(a, b, n_bins=512, k=8, bm=128, bn=128,
+                               interpret=interpret)
+        rs = edge_row_sums_raw([e1_np, e2_np])
+        total = chain_total_weight([e1_np, e2_np])
+        return out, rs, total
+
+    dt_two, (_, rs_ref, total_ref) = _time(sweep_plus_two_pass, e1, e2)
+    rs_fused = np.asarray(rs_f)[:, 0].astype(np.float64)
+    np.testing.assert_allclose(rs_fused, rs_ref[0], rtol=1e-6)
+    assert abs(float(rs_fused.sum()) - total_ref) <= 1e-6 * total_ref
+    rowsum_speedup = dt_two / dt_f
+    if not interpret:
+        assert rowsum_speedup >= 1.5, (
+            f"compiled fused-with-rowsums only {rowsum_speedup:.2f}x vs "
+            "sweep plus two standalone passes"
+        )
+    rows.append(row("kernel_sweep_fused_rowsums", dt_f,
+                    "sums_rel_err<=1e-6"))
+    rows.append(row("kernel_sweep_plus_two_pass", dt_two,
+                    f"fused_speedup_x={rowsum_speedup:.2f}"))
 
     # low-precision fast paths of the same fused pass
     for precision, dtype in (("bf16", jnp.bfloat16),):

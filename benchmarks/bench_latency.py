@@ -59,7 +59,66 @@ def run(fast: bool = True, smoke: bool = False):
                     f"speedup_vs_sort_x={dt_sort / max(dt_two, 1e-9):.2f}"))
     rows.append(row("fig14_stratify_sweep_kernel", dt_sweep,
                     f"sweep_vs_twopass_x={dt_two / max(dt_sweep, 1e-9):.2f}"))
+    rows.extend(walk_setup_rows(fast, smoke))
     rows.extend(crossover_sweep(fast, smoke))
+    return rows
+
+
+def walk_setup_rows(fast: bool = True, smoke: bool = False):
+    """Walk-setup latency (per-edge row sums + chain total weight for the
+    WWJ sampler), separated from sampling.
+
+    ``walk_setup_twopass`` is the retired schedule: two standalone f64
+    passes over the cross product after stratification.  The fused sweep
+    emits the same statistics inline (one-pass chain statistics, see
+    docs/kernels.md), so a cold fused query's walk setup is just a read of
+    the sweep output (``walk_setup_fused_cold``, measured end-to-end inside
+    a streaming query) and a warm-index query hydrates them from the
+    artifact with ZERO passes (``walk_setup_warm_index``, gated >= 5x
+    faster than the two-pass recomputation)."""
+    import numpy as np
+
+    from repro.core.index import build_index
+    from repro.core.similarity import chain_total_weight, edge_row_sums
+
+    rows = []
+    n = 300 if smoke else 600 if fast else 2000
+    ds = make_clustered_tables(n, n, n_entities=n, noise=0.4, seed=23)
+    embs = [np.asarray(ds.emb1, np.float32), np.asarray(ds.emb2, np.float32)]
+
+    t0 = time.perf_counter()
+    rs_ref = edge_row_sums(embs)
+    total_ref = chain_total_weight(embs)
+    dt_two = time.perf_counter() - t0
+
+    # cold fused query: walk setup reads the statistics the stratification
+    # sweep already emitted — timed end-to-end by the streaming pipeline
+    res = run_bas_streaming(
+        Query(spec=ds.spec(), agg=Agg.COUNT, oracle=ds.oracle(),
+              budget=max(n * n // 40, 2000)), seed=0)
+    dt_cold = res.telemetry.timings["walk_setup_s"]
+
+    art = build_index(embs, n_bins=512)   # one cold sweep, not timed here
+    t0 = time.perf_counter()
+    info = art.sweep_info()
+    rs, total = info.row_sums, info.total_weight
+    dt_warm = time.perf_counter() - t0
+    assert rs is not None and total is not None
+    np.testing.assert_allclose(rs[0], rs_ref[0], rtol=1e-6)
+    assert abs(total - total_ref) <= 1e-6 * total_ref
+    warm_x = dt_two / max(dt_warm, 1e-9)
+    cold_x = dt_two / max(dt_cold, 1e-9)
+    assert warm_x >= 5.0, (
+        f"warm-index walk setup only {warm_x:.1f}x vs two-pass recompute"
+    )
+    rows.append(row("walk_setup_twopass", dt_two,
+                    "edge_row_sums+chain_total_weight"))
+    rows.append(row("walk_setup_fused_cold", dt_cold,
+                    f"twopass_over_fused_x={cold_x:.1f}"))
+    rows.append(row("walk_setup_warm_index", dt_warm,
+                    f"twopass_over_warm_x={warm_x:.1f}"))
+    rows.append(row("fig14_walk_setup", dt_cold,
+                    "streaming-query walk-setup phase"))
     return rows
 
 

@@ -9,6 +9,7 @@ Layout (one directory per content key, one subdirectory per version)::
         block_counts.npy
         emb_0.npy ... emb_{k-1}.npy
         topk_vals.npy topk_idx.npy topk_valid.npy   # two-table kernel builds
+        row_sums_0.npy ... row_sums_{k-2}.npy       # fp32-effective builds
 
 Guarantees:
   * atomic — written to ``<key>/.tmp_<version>`` then ``os.replace``'d (the
@@ -79,6 +80,9 @@ def save_index(root: str, art: IndexArtifact, keep_last: int = 2) -> str:
         arrays["topk_vals"] = np.asarray(art.topk_vals)
         arrays["topk_idx"] = np.asarray(art.topk_idx)
         arrays["topk_valid"] = np.asarray(art.topk_valid)
+    if art.row_sums is not None:
+        for j, rs in enumerate(art.row_sums):
+            arrays[f"row_sums_{j}"] = np.asarray(rs, np.float64)
 
     manifest = {}
     for name, arr in arrays.items():
@@ -89,6 +93,7 @@ def save_index(root: str, art: IndexArtifact, keep_last: int = 2) -> str:
         format=INDEX_FORMAT,
         sizes=list(art.sizes),
         n_tables=len(art.embeddings),
+        total_weight=art.total_weight,
         stats=art.stats,
         arrays=manifest,
     )
@@ -175,6 +180,10 @@ def load_index(root: str, key: str, version: Optional[int] = None,
 
     embeddings = [arr(f"emb_{i}") for i in range(meta["n_tables"])]
     topk = {n: (arr(n) if n in meta["arrays"] else None) for n in _TOPK}
+    row_sums = None
+    if "row_sums_0" in meta["arrays"]:
+        row_sums = [arr(f"row_sums_{j}")
+                    for j in range(meta["n_tables"] - 1)]
     return IndexArtifact(
         key=meta["key"], version=meta["version"],
         sizes=tuple(meta["sizes"]), n_bins=meta["n_bins"],
@@ -187,5 +196,7 @@ def load_index(root: str, key: str, version: Optional[int] = None,
         embeddings=embeddings,
         topk_vals=topk["topk_vals"], topk_idx=topk["topk_idx"],
         topk_valid=topk["topk_valid"],
+        row_sums=row_sums,
+        total_weight=meta.get("total_weight"),
         stats=meta.get("stats", {}),
     )

@@ -13,7 +13,10 @@ Differences from the dense path (``bas.run_bas``):
   operand carries the prefix chain weight and nothing bigger than one block
   is materialised.  ``cfg.sweep_precision`` opts into the bf16/int8 MXU
   fast path (tolerance-gated, see ``stratify.sweep_pass``); the fp32
-  default is bit-identical to the retired two-pass schedule;
+  default bins bit-identically to the retired two-pass schedule, and its
+  fused walk statistics (row sums / chain total, compensated f32) agree
+  with the f64 recomputation to ~1 ulp — so estimates match the two-pass
+  path to ~1e-7 relative, with zero extra passes over the product;
 * the minimum sampling regime D_0 is sampled by **walk + rejection**: WWJ
   walk proposals from the full-space distribution
   p(t) = (1/N1) * prod_j w_j(t_j, t_{j+1}) / r_j(t_j)
@@ -150,8 +153,21 @@ def build_streaming_space(
     )
 
     # ---- full-space sampling distribution pieces for D_0 rejection -------
+    # Walk setup (row sums + chain total weight) consumes the statistics the
+    # fused sweep emitted alongside the histogram — or, on a warm index,
+    # hydrates them from the artifact — so no second pass over the cross
+    # product is ever launched here.  Only the two-pass baseline
+    # (use_sweep=False) and low-precision sweeps (which withhold their sums,
+    # see stratify.SweepInfo) fall back to the standalone recomputation.
     t0 = time.perf_counter()
-    row_sums = edge_row_sums(embeddings, exp, floor)
+    fused = strat.sweep is not None and strat.sweep.row_sums is not None
+    if fused:
+        row_sums = strat.sweep.row_sums
+        total_weight = strat.sweep.total_weight
+    else:
+        row_sums = edge_row_sums(embeddings, exp, floor)
+        total_weight = chain_total_weight(embeddings, exp, floor)
+    timings["walk_setup_s"] = time.perf_counter() - t0
     tup_top = flat_to_tuples(strat.order, sizes_spec)
     # one pass over the edges gives both the top-set chain weights and the
     # full-space walk probabilities p(t) = (1/N1) prod_j w_j / r_j
@@ -177,9 +193,7 @@ def build_streaming_space(
             chain_tuple_weights(embeddings, t, exp, floor) for t in per_tup[1:]
         ]
     weight_sums = np.zeros(k + 1, np.float64)
-    weight_sums[0] = max(
-        chain_total_weight(embeddings, exp, floor) - float(top_w.sum()), 0.0
-    )
+    weight_sums[0] = max(total_weight - float(top_w.sum()), 0.0)
     for i in range(1, k + 1):
         weight_sums[i] = float(per_w[i].sum())
     timings["similarity_s"] = time.perf_counter() - t0
@@ -195,7 +209,8 @@ def build_streaming_space(
             tup = per_tup[i][pos]
         return StratumDraw(tup=tup, q=q, size=int(sizes[i]))
 
-    meta = {"path": "sweep" if strat.sweep is not None else "two-pass"}
+    meta = {"path": "sweep" if strat.sweep is not None else "two-pass",
+            "walk_setup": "fused" if fused else "recompute"}
     if strat.sweep is not None:
         meta.update(
             kernel=strat.sweep.kernel, precision=strat.sweep.precision,

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import threading
 import time
 from collections import OrderedDict
@@ -50,7 +51,11 @@ import numpy as np
 
 from .stratify import TOPK_CANDIDATES, SweepInfo, sweep_pass, sweep_pass_chain
 
-INDEX_FORMAT = 1   # bump when the artifact/on-disk layout changes
+INDEX_FORMAT = 2   # bump when the artifact/on-disk layout changes
+# format history:
+#   1 — counts/edges/block_counts/embeddings/topk
+#   2 — + per-edge walk row_sums and chain total_weight (one-pass chain
+#       statistics: warm queries sample without re-reading the product)
 
 
 def table_fingerprint(emb: np.ndarray) -> str:
@@ -118,6 +123,8 @@ class IndexArtifact:
     topk_vals: Optional[np.ndarray] = None   # (N1, k) f32 clipped scores
     topk_idx: Optional[np.ndarray] = None    # (N1, k) i32 right-row indices
     topk_valid: Optional[np.ndarray] = None  # (N1, k) bool
+    row_sums: Optional[list] = None          # per-edge (N_j,) f64 walk sums
+    total_weight: Optional[float] = None     # chain total sum_t prod_j w_j
     stats: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -129,6 +136,8 @@ class IndexArtifact:
         arrays = [self.counts, self.edges, self.block_counts, *self.embeddings]
         if self.topk_vals is not None:
             arrays += [self.topk_vals, self.topk_idx, self.topk_valid]
+        if self.row_sums is not None:
+            arrays += list(self.row_sums)
         return int(sum(a.nbytes for a in arrays))
 
     def check(self, sizes=None, n_bins=None, exponent=None, floor=None):
@@ -161,7 +170,8 @@ class IndexArtifact:
             counts=self.counts, edges=self.edges,
             block_counts=self.block_counts, block_rows=self.block_rows,
             topk=topk, kernel=self.kernel, precision=self.precision,
-            stats=stats,
+            stats=stats, row_sums=self.row_sums,
+            total_weight=self.total_weight,
         )
 
 
@@ -210,6 +220,7 @@ def build_index(
         block_counts=np.asarray(info.block_counts, np.int64),
         embeddings=embeddings,
         topk_vals=vals, topk_idx=idx, topk_valid=valid,
+        row_sums=info.row_sums, total_weight=info.total_weight,
         stats={"build_s": build_s, "appends": 0, "delta_blocks": 0,
                "delta_rows": 0, "sweep": dict(info.stats)},
     )
@@ -237,7 +248,7 @@ def _sweep_rows(e_rows, e2, art: IndexArtifact, use_kernel: bool,
     info = sweep_pass(
         e_rows, e2, art.n_bins, art.exponent, art.floor,
         block=art.block_rows, use_kernel=use_kernel, precision=art.precision,
-        tolerance=float("inf"), k_top=k_top,
+        tolerance=float("inf"), k_top=k_top, kernel_block=art.block_rows,
     )
     if art.precision != "fp32" and info.precision != art.precision:
         raise RuntimeError(
@@ -302,12 +313,14 @@ def append_rows(
         # region's tile (the chunk may internally tile finer; counts is the
         # exact integer sum of its sub-tiles).
         start = (n1_old // br) * br
-        tiles, tops = [], []
+        tiles, tops, region_sums = [], [], []
         for cs in range(start, e1_new.shape[0], br):
             info = _sweep_rows(e1_new[cs : cs + br], e2, art, use_kernel,
                                k_top=TOPK_CANDIDATES if has_topk else 1)
             tiles.append(np.asarray(info.counts, np.int64))
             tops.append(info.topk)
+            region_sums.append(None if info.row_sums is None
+                               else info.row_sums[0])
         block_counts = np.concatenate(
             [np.asarray(art.block_counts[: start // br], np.int64),
              np.stack(tiles)]
@@ -331,6 +344,17 @@ def append_rows(
             topk_valid = np.concatenate(
                 [np.asarray(art.topk_valid[:n1_old]), tail_ok[keep:]]
             )
+        row_sums = total_weight = None
+        if art.row_sums is not None and all(s is not None for s in region_sums):
+            # new left rows add their own walk sums; the re-swept overlap
+            # [start, n1_old) is replaced by its (deterministically equal)
+            # recomputation — total updated in O(delta), never re-reduced
+            old_rs = np.asarray(art.row_sums[0], np.float64)
+            tail_rs = np.concatenate(region_sums)
+            row_sums = [np.concatenate([old_rs[:start], tail_rs])]
+            total_weight = float(
+                art.total_weight - old_rs[start:].sum() + tail_rs.sum()
+            )
         embeddings = [e1_new, e2]
     else:
         n2_old = e2.shape[0]
@@ -351,6 +375,13 @@ def append_rows(
                 (art.topk_vals, art.topk_idx, art.topk_valid),
                 info.topk, n2_old, e2_new.shape[0],
             )
+        row_sums = total_weight = None
+        if art.row_sums is not None and info.row_sums is not None:
+            # the delta sweep's sums are each left row's mass over the new
+            # columns only — elementwise add, O(N1) like the delta tiles
+            delta_rs = np.asarray(info.row_sums[0], np.float64)
+            row_sums = [np.asarray(art.row_sums[0], np.float64) + delta_rs]
+            total_weight = float(art.total_weight + delta_rs.sum())
         embeddings = [e1, e2_new]
 
     stats["delta_blocks"] = int(stats.get("delta_blocks", 0)) + delta_blocks
@@ -369,6 +400,7 @@ def append_rows(
         block_counts=block_counts,
         embeddings=embeddings,
         topk_vals=topk_vals, topk_idx=topk_idx, topk_valid=topk_valid,
+        row_sums=row_sums, total_weight=total_weight,
         stats=stats,
     )
 
@@ -418,6 +450,13 @@ class IndexStore:
 
         self.max_bytes = int(max_bytes)
         self.root = root
+        if root is not None:
+            # tuned kernel block schedules live next to the artifacts they
+            # accelerate (configure() only records the path — no jax import,
+            # no measurement until a compiled sweep actually runs)
+            from repro.kernels import autotune
+
+            autotune.configure(os.path.join(os.fspath(root), "autotune.json"))
         self.tracker = tracker if tracker is not None else NULL_TRACKER
         self._lock = threading.Lock()
         self._entries: "OrderedDict[str, Future]" = OrderedDict()

@@ -148,15 +148,23 @@ def chain_tuple_weights(
     return w
 
 
-def edge_row_sums(
+# Pass accounting for the standalone walk-statistic recomputations below.
+# The fused sweep (repro.core.stratify.sweep_pass*) emits row sums and the
+# chain total in the same blocked pass as the histogram, so a streaming
+# query that goes through the sweep — or hydrates a warm IndexArtifact —
+# should never land here; tests assert these counters stay flat on those
+# paths (see tests/test_chain_stats.py).
+PASS_COUNTS: dict[str, int] = {"edge_row_sums": 0, "chain_total_weight": 0}
+
+
+def edge_row_sums_raw(
     embeddings: list,
     exponent: float = 1.0,
     floor: float = 1e-3,
     block: int = 4096,
 ) -> list:
-    """Per-edge row sums r_j[i] = sum_t w_j(i, t), streamed in O(block * N)
-    memory.  These normalise the WWJ walk distribution p(t) =
-    (1/N1) * prod_j w_j(t_j, t_{j+1}) / r_j(t_j)."""
+    """:func:`edge_row_sums` without the pass accounting — for internal
+    callers (the fused sweep) that only touch cheap prefix edges."""
     out = []
     for j in range(len(embeddings) - 1):
         e1, e2 = embeddings[j], embeddings[j + 1]
@@ -169,6 +177,19 @@ def edge_row_sums(
     return out
 
 
+def edge_row_sums(
+    embeddings: list,
+    exponent: float = 1.0,
+    floor: float = 1e-3,
+    block: int = 4096,
+) -> list:
+    """Per-edge row sums r_j[i] = sum_t w_j(i, t), streamed in O(block * N)
+    memory.  These normalise the WWJ walk distribution p(t) =
+    (1/N1) * prod_j w_j(t_j, t_{j+1}) / r_j(t_j)."""
+    PASS_COUNTS["edge_row_sums"] += 1
+    return edge_row_sums_raw(embeddings, exponent, floor, block)
+
+
 def chain_total_weight(
     embeddings: list,
     exponent: float = 1.0,
@@ -177,6 +198,7 @@ def chain_total_weight(
 ) -> float:
     """sum over the full cross product of prod_j w_j — via the backward
     matrix-vector chain v_j = W_j v_{j+1}, streamed (O(max N) memory)."""
+    PASS_COUNTS["chain_total_weight"] += 1
     v = np.ones(embeddings[-1].shape[0], np.float64)
     for j in range(len(embeddings) - 2, -1, -1):
         e1, e2 = embeddings[j], embeddings[j + 1]

@@ -138,10 +138,19 @@ TOPK_CANDIDATES = 32
 class SweepInfo:
     """Everything one fused pass over the (never materialised) product
     yields: the global histogram, per-(row-block, bin) count tiles at
-    ``block_rows`` left/prefix-row granularity, and (two-table kernel path
-    only) the per-row top-k candidates.  ``stats`` accumulates collection
-    bookkeeping (blocks rescanned vs proven empty, retry counts) that the
-    BAS engines surface in ``QueryResult.detail``."""
+    ``block_rows`` left/prefix-row granularity, (two-table kernel path
+    only) the per-row top-k candidates, and the walk statistics
+    (``row_sums`` per edge + chain ``total_weight``) the streaming sampler
+    needs for its proposal normalisation — fused into the same pass, so
+    walk setup never re-reads the cross product.  ``stats`` accumulates
+    collection bookkeeping (blocks rescanned vs proven empty, retry
+    counts) that the BAS engines surface in ``QueryResult.detail``.
+
+    ``row_sums``/``total_weight`` are only attached when the sweep ran at
+    effective fp32 (kernel compensated accumulation, or the f64 numpy
+    fallback) — low-precision sweeps leave them ``None`` so consumers
+    recompute exactly rather than inherit bf16/int8 error into the
+    Horvitz–Thompson weights."""
 
     counts: np.ndarray
     edges: np.ndarray
@@ -151,6 +160,8 @@ class SweepInfo:
     kernel: bool
     precision: str
     stats: dict = dataclasses.field(default_factory=dict)
+    row_sums: Optional[list] = None     # per-edge (n_j,) f64 walk sums
+    total_weight: Optional[float] = None
 
     @property
     def n_bins(self) -> int:
@@ -206,19 +217,25 @@ def _kernel_op(module: str, attr: str, *args, **kwargs):
 
 
 def _kernel_sweep(e1, e2, n_bins, exponent, floor, scale=None,
-                  precision="fp32", k_top=TOPK_CANDIDATES, right=None):
+                  precision="fp32", k_top=TOPK_CANDIDATES, right=None,
+                  rs_exponent=None, block=None):
     """Fused-kernel sweep, or None -> blocked numpy fallback."""
+    kwargs = dict(k=k_top, scale=scale, precision=precision, right=right,
+                  rs_exponent=rs_exponent)
+    if block is not None:
+        kwargs["block"] = block
     return _kernel_op(
         "repro.kernels.sim_sweep.ops", "sim_sweep", e1, e2, n_bins, exponent,
-        floor, k=k_top, scale=scale, precision=precision, right=right,
+        floor, **kwargs,
     )
 
 
-def _prepare_sweep_right(e2, precision):
+def _prepare_sweep_right(e2, precision, n1_hint=None):
     """Padded/quantised right table for repeated chain sweeps, or None when
     the kernel layer is unavailable."""
     return _kernel_op(
-        "repro.kernels.sim_sweep.ops", "prepare_right", e2, precision=precision
+        "repro.kernels.sim_sweep.ops", "prepare_right", e2,
+        precision=precision, n1_hint=n1_hint,
     )
 
 
@@ -279,8 +296,14 @@ def sweep_pass(
     tolerance: Optional[float] = None,
     k_top: int = TOPK_CANDIDATES,
     artifact=None,
+    kernel_block: Optional[int] = None,
 ) -> SweepInfo:
     """One pass over the two-table product: histogram + count tiles + top-k.
+
+    ``kernel_block`` caps the kernel path's row-block (tile stride) — index
+    maintenance passes the artifact's ``block_rows`` so delta tiles nest
+    into the stored ones even after the table outgrows its original
+    power-of-two bucket.
 
     ``k_top`` sizes the top-k output; callers that know collection will go
     dense (m_cap >= 16 * n1) pass 1 to skip the extract-max cost.  The
@@ -305,7 +328,8 @@ def sweep_pass(
     tolerance = _precision_tolerance(precision, tolerance)
     if use_kernel:
         out = _kernel_sweep(e1, e2, n_bins, exponent, floor,
-                            precision=precision, k_top=k_top)
+                            precision=precision, k_top=k_top,
+                            block=kernel_block)
         if out is not None:
             info = SweepInfo(
                 counts=out.counts, edges=out.edges,
@@ -313,6 +337,12 @@ def sweep_pass(
                 topk=(out.vals, out.idx, out.valid) if k_top >= 2 else None,
                 kernel=True, precision=precision,
             )
+            if precision == "fp32":
+                # compensated fused walk sums (~1 f32 ulp of the f64
+                # reference); lowp sums would leak quantisation error into
+                # the HT weights, so those paths recompute instead
+                info.row_sums = [out.row_sums]
+                info.total_weight = float(out.row_sums.sum())
             if precision != "fp32":
                 rows = min(info.block_rows, e1.shape[0])
                 ref = _binned_counts(pair_weights(e1[:rows], e2, exponent, floor), n_bins)
@@ -328,6 +358,7 @@ def sweep_pass(
                     info = sweep_pass(
                         e1, e2, n_bins, exponent, floor, block, use_kernel,
                         precision="fp32", k_top=k_top,
+                        kernel_block=kernel_block,
                     )
                     info.stats["lowp_fallback"] = dev
             return info
@@ -337,14 +368,18 @@ def sweep_pass(
     edges = np.linspace(0.0, 1.0, n_bins + 1)
     n1 = e1.shape[0]
     tiles = []
+    sums = []
     for s in range(0, n1, block):
         w = pair_weights(e1[s : s + block], e2, exponent, floor)
         c, _ = np.histogram(w, bins=edges)
         tiles.append(c.astype(np.int64))
+        sums.append(w.sum(axis=1))  # f64: the walk sums come free here
     bc = np.stack(tiles) if tiles else np.zeros((1, n_bins), np.int64)
+    row_sums = np.concatenate(sums) if sums else np.zeros(0, np.float64)
     return SweepInfo(
         counts=bc.sum(axis=0), edges=edges, block_counts=bc, block_rows=block,
         topk=None, kernel=False, precision="fp32",
+        row_sums=[row_sums], total_weight=float(row_sums.sum()),
     )
 
 
@@ -404,9 +439,16 @@ def sweep_pass_chain(
     kernel_ok = use_kernel
     kernel_tiles = 0
     lowp_dev = None
+    # walk statistics, fused into the same prefix sweeps: the last-edge row
+    # sums r[i] = sum_c w_last(i, c) (every i in the last prefix table is
+    # visited as i_last cycles the prefix cross product, duplicates rewrite
+    # identical values) and the chain total sum_t wp(t) * r[i_last(t)]
+    r_last = np.zeros(e_prev.shape[0], np.float64)
+    total = 0.0
     right = None  # right table padded/quantised once, swept per prefix block
     if kernel_ok:
-        right = _prepare_sweep_right(e_last, precision)
+        right = _prepare_sweep_right(e_last, precision,
+                                     n1_hint=min(block, n_prefix))
         kernel_ok = right is not None
     if not kernel_ok and precision != "fp32":
         _warn_lowp_unavailable(precision)
@@ -415,17 +457,21 @@ def sweep_pass_chain(
             embeddings, s, min(s + block, n_prefix), exponent, floor
         )
         tile = None
+        rs_blk = None
         if kernel_ok:
             # kernel bins max(clip(sim), floor)**(e*root) * scale —
-            # exactly (wp * w_last)**root when scale = wp**root
+            # exactly (wp * w_last)**root when scale = wp**root; the walk
+            # sums ride along at the raw full exponent (rs_exponent)
             out = _kernel_sweep(
                 e_prev[i_last], None, n_bins, exponent * root, floor,
                 scale=wp**root, precision=precision, k_top=1, right=right,
+                rs_exponent=exponent,
             )
             if out is None:
                 kernel_ok = False
             else:
                 tile = out.counts
+                rs_blk = out.row_sums
                 kernel_tiles += 1
                 if precision != "fp32" and s == 0:
                     w = pair_weights(e_prev[i_last], e_last, exponent * root, floor)
@@ -446,9 +492,12 @@ def sweep_pass_chain(
                         return info
         if tile is None:
             w = pair_weights(e_prev[i_last], e_last, exponent, floor)
+            rs_blk = w.sum(axis=1)
             v = (wp[:, None] * w) ** root
             c, _ = np.histogram(v, bins=edges)
             tile = c.astype(np.int64)
+        total += float(wp @ rs_blk)
+        r_last[i_last] = rs_blk
         tiles.append(tile)
     bc = np.stack(tiles) if tiles else np.zeros((1, n_bins), np.int64)
     # the precision label drives blocks_over's safety margin: any tile binned
@@ -465,6 +514,15 @@ def sweep_pass_chain(
     if kernel_tiles and not kernel_ok:
         info.stats["kernel_tiles"] = kernel_tiles
         info.stats["numpy_tiles"] = len(tiles) - kernel_tiles
+    if not used_lowp:
+        # earlier edges are small inter-table products (already paid inside
+        # the prefix tuple weights); only the last cross-product edge was
+        # ever expensive, and its sums were fused above
+        from .similarity import edge_row_sums_raw
+
+        info.row_sums = edge_row_sums_raw(embeddings[:-1], exponent,
+                                          floor) + [r_last]
+        info.total_weight = total
     return info
 
 

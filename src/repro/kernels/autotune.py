@@ -1,0 +1,195 @@
+"""Block-shape autotuner for the fused similarity kernels.
+
+The sim_sweep/sim_hist grids are parameterised by a (row-block, col-block)
+schedule.  The historical defaults (256, 256) are sensible on one TPU
+generation but leave throughput on the table on others — and hardcoding a
+single shape makes per-accelerator perf gates (``bench_diff
+--require-compiled``) brittle.  This module measures a small candidate set
+on **first compiled use** per (op, backend, device kind, dtype, shape
+bucket), caches the winner in memory and on disk, and the ops route their
+block choice through :func:`schedule`.
+
+Behaviour contract:
+
+* On non-compiled backends (CPU / interpret mode) :func:`schedule` returns
+  ``None`` immediately — zero measurement, zero behaviour change, so CI and
+  the numerics tests never depend on tuning.
+* Shapes are bucketed to powers of two; one measurement serves every shape
+  in the bucket.
+* The disk cache is a single JSON file (``autotune.json``), written
+  atomically next to the index store when one is configured
+  (:meth:`repro.core.index.IndexStore`), so tuned schedules survive process
+  restarts and ship with the index artifacts they accelerate.
+* Measurement failures (OOM on an exotic candidate, unsupported shape) are
+  swallowed per-candidate; if every candidate fails the op falls back to
+  its built-in defaults.
+
+The module deliberately avoids importing jax at module scope so that
+configuring the cache path from the (jax-free) index layer stays cheap.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Optional
+
+# (row-block, col-block) candidates, all power-of-two so the ops' padding
+# math and the kernel's pairwise reduction stay exact
+CANDIDATES = ((256, 256), (128, 256), (256, 128), (512, 256), (256, 512))
+COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+_lock = threading.Lock()
+_memory: dict[str, tuple[int, int]] = {}
+_path: Optional[str] = None
+_loaded = False
+
+
+def configure(path: Optional[str]) -> None:
+    """Point the disk cache at ``path`` (a JSON file).  Existing entries are
+    merged into the in-memory cache lazily on first :func:`schedule` call."""
+    global _path, _loaded
+    with _lock:
+        _path = os.fspath(path) if path is not None else None
+        _loaded = False
+
+
+def reset() -> None:
+    """Drop the in-memory cache and disk path (tests)."""
+    global _path, _loaded
+    with _lock:
+        _memory.clear()
+        _path = None
+        _loaded = False
+
+
+def cache_info() -> dict[str, tuple[int, int]]:
+    with _lock:
+        return dict(_memory)
+
+
+def _bucket(x: int) -> int:
+    return max(8, 1 << (max(int(x), 1) - 1).bit_length())
+
+
+def _key(op: str, backend: str, device_kind: str, precision: str,
+         m: int, n: int, d: int) -> str:
+    return (f"{op}/{backend}/{device_kind}/{precision}/"
+            f"{_bucket(m)}x{_bucket(n)}x{_bucket(d)}")
+
+
+def _load_locked() -> None:
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    if _path is None or not os.path.exists(_path):
+        return
+    try:
+        with open(_path) as f:
+            disk = json.load(f)
+        for k, bmn in disk.items():
+            _memory.setdefault(k, (int(bmn[0]), int(bmn[1])))
+    except (OSError, ValueError, TypeError, IndexError):
+        pass  # corrupt cache: re-measure and overwrite
+
+
+def _save_locked() -> None:
+    if _path is None:
+        return
+    try:
+        os.makedirs(os.path.dirname(_path) or ".", exist_ok=True)
+        tmp = f"{_path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            json.dump({k: list(v) for k, v in sorted(_memory.items())}, f,
+                      indent=1)
+        os.replace(tmp, _path)
+    except OSError:
+        pass  # cache is best-effort; never fail the sweep over it
+
+
+def _time_candidate(op: str, m: int, n: int, d: int, precision: str,
+                    bm: int, bn: int) -> float:
+    """Wall-time one schedule on synthetic data at the bucket shape (one
+    warmup + compile, then best of two timed reps)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    e1 = jnp.asarray(rng.standard_normal((m, d)), jnp.float32)
+    e2 = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    if op == "sim_hist":
+        from .sim_hist.kernel import sim_hist_pallas
+
+        def run():
+            return sim_hist_pallas(e1, e2, bm=bm, bn=bn, interpret=False)
+    else:
+        from .sim_sweep.kernel import sim_sweep_pallas
+
+        dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
+
+        def run():
+            return sim_sweep_pallas(e1, e2, bm=bm, bn=bn, interpret=False,
+                                    compute_dtype=dtype)
+
+    jax.block_until_ready(run())  # compile + warmup
+    best = float("inf")
+    for _ in range(2):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _measure(op: str, m: int, n: int, d: int, precision: str,
+             candidates) -> Optional[tuple[int, int]]:
+    """Return the fastest feasible (bm, bn) candidate, or None."""
+    best = None
+    best_t = float("inf")
+    for bm, bn in candidates:
+        try:
+            t = _time_candidate(op, m, n, d, precision, bm, bn)
+        except Exception:  # OOM / unsupported shape: skip this candidate
+            continue
+        if t < best_t:
+            best, best_t = (bm, bn), t
+    return best
+
+
+def schedule(op: str, m: int, n: int, d: int, precision: str = "fp32",
+             backend: Optional[str] = None) -> Optional[tuple[int, int]]:
+    """Tuned (row-block, col-block) for ``op`` at this shape bucket, or
+    ``None`` when not on a compiled backend (callers keep their defaults).
+    First compiled use per bucket measures :data:`CANDIDATES` and persists
+    the winner."""
+    if backend is None:
+        import jax
+
+        backend = jax.default_backend()
+    if backend not in COMPILED_BACKENDS:
+        return None
+    try:
+        import jax
+
+        device_kind = jax.devices(backend)[0].device_kind.replace(" ", "_")
+    except Exception:
+        device_kind = backend
+    key = _key(op, backend, device_kind, precision, m, n, d)
+    with _lock:
+        _load_locked()
+        if key in _memory:
+            return _memory[key]
+    bm_cap, bn_cap = _bucket(m), _bucket(n)
+    cands = [(bm, bn) for bm, bn in CANDIDATES if bm <= bm_cap and bn <= bn_cap]
+    if not cands:
+        cands = [(min(CANDIDATES[0][0], bm_cap), min(CANDIDATES[0][1], bn_cap))]
+    won = _measure(op, _bucket(m), _bucket(n), _bucket(d), precision, cands)
+    if won is None:
+        return None
+    with _lock:
+        _memory[key] = won
+        _save_locked()
+    return won

@@ -7,6 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import autotune
 from ..padding import pad_rows, remove_pad_counts
 from .kernel import sim_hist_pallas
 from .ref import sim_hist_ref  # noqa: F401  (oracle for tests/benchmarks)
@@ -30,6 +31,10 @@ def sim_hist(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, block=256,
     n1, n2 = e1.shape[0], e2.shape[0]
     bm = min(block, max(8, 1 << (n1 - 1).bit_length()))
     bn = min(block, max(8, 1 << (n2 - 1).bit_length()))
+    sched = autotune.schedule("sim_hist", n1, n2, e1.shape[1])
+    if sched is not None:  # tuned block shapes on compiled backends only
+        bm = min(sched[0], max(8, 1 << (n1 - 1).bit_length()))
+        bn = min(sched[1], max(8, 1 << (n2 - 1).bit_length()))
     e1p, p1 = pad_rows(e1, bm)
     e2p, p2 = pad_rows(e2, bn)
     s = np.ones(n1, np.float32) if scale is None else np.asarray(scale, np.float32)

@@ -1,4 +1,5 @@
-"""Single-sweep stratification kernel: histogram + top-k + per-block bins.
+"""Single-sweep stratification kernel: histogram + top-k + per-block bins
++ compensated walk row-sums.
 
 The streaming stratifier (``repro.core.stratify``) used to pay the blocked
 ``E1 @ E2^T`` product twice — once for the weight histogram (``sim_hist``)
@@ -11,12 +12,27 @@ from **one** pass over the product:
   integer column sum, and the tiles tell the collector/sampler which row
   blocks contain over-threshold mass so rescans touch only those blocks;
 * the running per-row top-k of the raw clipped similarity (bit-identical
-  semantics to ``sim_topk``: k static, maintained by k extract-max passes).
+  semantics to ``sim_topk``: k static, maintained by k extract-max passes);
+* per-left-row walk sums ``row_sums[i] = sum_c base(i,c)**rs_exponent *
+  v[c]`` — the wandering-join proposal normaliser (and, via the backward
+  vector ``v``, the chain-total-weight contraction) that previously cost a
+  second full pass in numpy.
 
 The histogram half bins the *sampling weight* ``max(clip(s,0,1), floor) **
 exponent * scale`` (``scale`` is the per-left-row chain-prefix weight for
 k-way joins, exactly as in ``sim_hist``); the top-k half ranks the raw
-clipped score, which is monotone in the weight for any fixed row.
+clipped score, which is monotone in the weight for any fixed row.  The
+walk-sum half applies the same clip/floor transform at an independent static
+power ``rs_exponent`` (chain sweeps bin the geometric-mean weight at
+``exponent * root`` but need the raw full-exponent edge weight in the sums).
+
+Walk sums are accumulated with **compensated f32 arithmetic**: each (bm, bn)
+block is reduced by an error-free pairwise tree that carries (hi, lo) pairs
+through branch-free Knuth two-sum steps, and the cross-block running total
+lives in two VMEM scratch vectors (sum, compensation).  The result matches a
+float64 reference to ~1 ulp of f32 (|rel err| ~1e-7) regardless of the
+column count or magnitude spread — naive sequential f32 accumulation loses
+several digits at these reduction lengths (see ``tests/test_chain_stats``).
 
 Precision paths (static ``compute_dtype``): fp32 casts inputs to f32 before
 the MXU (bit-identical to the sim_hist/sim_topk pair); bf16 feeds the MXU
@@ -25,7 +41,7 @@ takes per-row-quantised int8 embeddings + scales, accumulates in int32 on
 the MXU and rescales to f32 scores.
 
 Grid: (M/bm, N/bn); the N dimension iterates sequentially (TPU grid order),
-the count tile and top-k scratch are initialised at j == 0.
+the count tile, top-k and walk-sum scratch are initialised at j == 0.
 """
 from __future__ import annotations
 
@@ -41,19 +57,54 @@ from ..binning import bin_counts, plan_bins
 NEG = -1e30
 
 
-def _fused_epilogue(scores, s, bc_ref, vals_ref, idx_ref, run_v, run_i, *,
-                    n_bins, exponent, floor, k, bn, n_blocks, plan):
-    """Shared histogram + top-k epilogue over one (bm, bn) score block."""
+def two_sum(a, b):
+    """Branch-free error-free transform (Knuth): a + b == s + err exactly."""
+    s = a + b
+    bv = s - a
+    err = (a - (s - bv)) + (b - bv)
+    return s, err
+
+
+def comp_block_sum(x):
+    """Error-free pairwise reduction along axis 1: returns (hi, lo) column
+    vectors with ``sum(x, axis=1) == hi + lo`` to ~1 ulp.  The tree halves
+    the width each level, carrying per-lane compensation terms, so the whole
+    reduction stays vectorised on the VPU (log2(width) levels)."""
+    hi = x
+    lo = jnp.zeros_like(x)
+    while hi.shape[1] > 1:
+        if hi.shape[1] % 2:  # pad one zero column so the halves line up
+            hi = jnp.concatenate([hi, jnp.zeros_like(hi[:, :1])], axis=1)
+            lo = jnp.concatenate([lo, jnp.zeros_like(lo[:, :1])], axis=1)
+        half = hi.shape[1] // 2
+        s, e = two_sum(hi[:, :half], hi[:, half:])
+        lo = lo[:, :half] + lo[:, half:] + e
+        hi = s
+    return hi, lo
+
+
+def _fused_epilogue(scores, s, v, bc_ref, vals_ref, idx_ref, rs_ref, run_v,
+                    run_i, rs_hi, rs_lo, *, n_bins, exponent, rs_exponent,
+                    floor, k, bn, n_blocks, plan):
+    """Shared histogram + top-k + walk-sum epilogue over one (bm, bn) block."""
     j = pl.program_id(1)
 
     # ---- histogram half: sampling-weight transform + per-block bin counts
-    w = jnp.clip(scores, 0.0, 1.0)
-    w = jnp.maximum(w, floor)
-    if exponent != 1.0:
-        w = w**exponent
+    base = jnp.maximum(jnp.clip(scores, 0.0, 1.0), floor)
+    w = base if exponent == 1.0 else base**exponent
     w = w * s.astype(jnp.float32)  # (bm, 1) prefix weights broadcast
     idx = jnp.clip((w * n_bins).astype(jnp.int32), 0, n_bins - 1)
     bc_ref[...] = bc_ref[...] + bin_counts(idx, n_bins, plan).reshape(1, n_bins)
+
+    # ---- walk-sum half: compensated accumulation of the raw edge weight
+    # times the backward vector.  Padded columns carry v == 0 and vanish, so
+    # unlike the histogram no host-side padding correction is needed.
+    wr = base if rs_exponent == 1.0 else base**rs_exponent
+    wr = wr * v.astype(jnp.float32)  # (1, bn) backward vector broadcast
+    blk_hi, blk_lo = comp_block_sum(wr)
+    acc_hi, acc_err = two_sum(rs_hi[...], blk_hi)
+    rs_hi[...] = acc_hi
+    rs_lo[...] = rs_lo[...] + (blk_lo + acc_err)
 
     # ---- top-k half: raw clipped scores, identical math to sim_topk
     sc = jnp.clip(scores, 0.0, 1.0)
@@ -83,44 +134,50 @@ def _fused_epilogue(scores, s, bc_ref, vals_ref, idx_ref, run_v, run_i, *,
     def _emit():
         vals_ref[...] = new_v
         idx_ref[...] = new_i
+        rs_ref[...] = rs_hi[...] + rs_lo[...]
 
 
-def _init(bc_ref, run_v, run_i):
+def _init(bc_ref, run_v, run_i, rs_hi, rs_lo):
     @pl.when(pl.program_id(1) == 0)
     def _():
         bc_ref[...] = jnp.zeros_like(bc_ref)
         run_v[...] = jnp.full_like(run_v, NEG)
         run_i[...] = jnp.zeros_like(run_i)
+        rs_hi[...] = jnp.zeros_like(rs_hi)
+        rs_lo[...] = jnp.zeros_like(rs_lo)
 
 
-def _kernel(e1_ref, e2_ref, s_ref, bc_ref, vals_ref, idx_ref, run_v, run_i, *,
-            n_bins, exponent, floor, k, bn, n_blocks, plan, compute_dtype):
-    _init(bc_ref, run_v, run_i)
+def _kernel(e1_ref, e2_ref, s_ref, v_ref, bc_ref, vals_ref, idx_ref, rs_ref,
+            run_v, run_i, rs_hi, rs_lo, *, n_bins, exponent, rs_exponent,
+            floor, k, bn, n_blocks, plan, compute_dtype):
+    _init(bc_ref, run_v, run_i, rs_hi, rs_lo)
     e1 = e1_ref[...].astype(compute_dtype)
     e2 = e2_ref[...].astype(compute_dtype)
     scores = jax.lax.dot_general(
         e1, e2, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
     _fused_epilogue(
-        scores, s_ref[...], bc_ref, vals_ref, idx_ref, run_v, run_i,
-        n_bins=n_bins, exponent=exponent, floor=floor, k=k, bn=bn,
-        n_blocks=n_blocks, plan=plan,
+        scores, s_ref[...], v_ref[...], bc_ref, vals_ref, idx_ref, rs_ref,
+        run_v, run_i, rs_hi, rs_lo, n_bins=n_bins, exponent=exponent,
+        rs_exponent=rs_exponent, floor=floor, k=k, bn=bn, n_blocks=n_blocks,
+        plan=plan,
     )
 
 
-def _kernel_q(q1_ref, q2_ref, s_ref, rs1_ref, rs2_ref, bc_ref, vals_ref,
-              idx_ref, run_v, run_i, *, n_bins, exponent, floor, k, bn,
-              n_blocks, plan):
-    _init(bc_ref, run_v, run_i)
+def _kernel_q(q1_ref, q2_ref, s_ref, rs1_ref, rs2_ref, v_ref, bc_ref,
+              vals_ref, idx_ref, rs_ref, run_v, run_i, rs_hi, rs_lo, *,
+              n_bins, exponent, rs_exponent, floor, k, bn, n_blocks, plan):
+    _init(bc_ref, run_v, run_i, rs_hi, rs_lo)
     acc = jax.lax.dot_general(
         q1_ref[...], q2_ref[...], (((1,), (1,)), ((), ())),
         preferred_element_type=jnp.int32,
     )
     scores = acc.astype(jnp.float32) * rs1_ref[...] * rs2_ref[...]
     _fused_epilogue(
-        scores, s_ref[...], bc_ref, vals_ref, idx_ref, run_v, run_i,
-        n_bins=n_bins, exponent=exponent, floor=floor, k=k, bn=bn,
-        n_blocks=n_blocks, plan=plan,
+        scores, s_ref[...], v_ref[...], bc_ref, vals_ref, idx_ref, rs_ref,
+        run_v, run_i, rs_hi, rs_lo, n_bins=n_bins, exponent=exponent,
+        rs_exponent=rs_exponent, floor=floor, k=k, bn=bn, n_blocks=n_blocks,
+        plan=plan,
     )
 
 
@@ -130,30 +187,36 @@ def _out_shapes(m, n_bins, k, bm):
             pl.BlockSpec((1, n_bins), lambda i, j: (i, 0)),
             pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
             pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
         ],
         [
             jax.ShapeDtypeStruct((m // bm, n_bins), jnp.int32),
             jax.ShapeDtypeStruct((m, k), jnp.float32),
             jax.ShapeDtypeStruct((m, k), jnp.int32),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
         ],
         [
             pltpu.VMEM((bm, k), jnp.float32),
             pltpu.VMEM((bm, k), jnp.int32),
+            pltpu.VMEM((bm, 1), jnp.float32),
+            pltpu.VMEM((bm, 1), jnp.float32),
         ],
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bins", "exponent", "floor", "k", "bm", "bn",
-                     "bin_chunk", "interpret", "compute_dtype"),
+    static_argnames=("n_bins", "exponent", "rs_exponent", "floor", "k", "bm",
+                     "bn", "bin_chunk", "interpret", "compute_dtype"),
 )
 def sim_sweep_pallas(
     e1: jax.Array,
     e2: jax.Array,
     scale: jax.Array | None = None,
+    v: jax.Array | None = None,
     n_bins: int = 4096,
     exponent: float = 1.0,
+    rs_exponent: float | None = None,
     floor: float = 1e-3,
     k: int = 8,
     bm: int = 256,
@@ -163,7 +226,10 @@ def sim_sweep_pallas(
     compute_dtype=jnp.float32,
 ):
     """Fused pass: returns (block_counts (M/bm, n_bins) i32, vals (M, k) f32,
-    idx (M, k) i32).  The global histogram is ``block_counts.sum(axis=0)``."""
+    idx (M, k) i32, row_sums (M, 1) f32).  The global histogram is
+    ``block_counts.sum(axis=0)``; ``row_sums`` is the compensated
+    ``sum_c base**rs_exponent * v`` walk sum (``rs_exponent`` defaults to
+    ``exponent``, ``v`` to ones — pass zeros in padded columns)."""
     m, d = e1.shape
     n, _ = e2.shape
     assert m % bm == 0 and n % bn == 0, "pad inputs to block multiples"
@@ -173,30 +239,37 @@ def sim_sweep_pallas(
         scale = jnp.ones((m, 1), jnp.float32)
     else:
         scale = scale.reshape(m, 1).astype(jnp.float32)
+    if v is None:
+        v = jnp.ones((1, n), jnp.float32)
+    else:
+        v = v.reshape(1, n).astype(jnp.float32)
+    rs_exp = exponent if rs_exponent is None else rs_exponent
     grid = (m // bm, n // bn)
     out_specs, out_shape, scratch = _out_shapes(m, n_bins, k, bm)
     return pl.pallas_call(
         functools.partial(
-            _kernel, n_bins=n_bins, exponent=exponent, floor=floor, k=k,
-            bn=bn, n_blocks=n // bn, plan=plan, compute_dtype=compute_dtype,
+            _kernel, n_bins=n_bins, exponent=exponent, rs_exponent=rs_exp,
+            floor=floor, k=k, bn=bn, n_blocks=n // bn, plan=plan,
+            compute_dtype=compute_dtype,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bn, d), lambda i, j: (j, 0)),
             pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
-    )(e1, e2, scale)
+    )(e1, e2, scale, v)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("n_bins", "exponent", "floor", "k", "bm", "bn",
-                     "bin_chunk", "interpret"),
+    static_argnames=("n_bins", "exponent", "rs_exponent", "floor", "k", "bm",
+                     "bn", "bin_chunk", "interpret"),
 )
 def sim_sweep_q_pallas(
     q1: jax.Array,
@@ -204,8 +277,10 @@ def sim_sweep_q_pallas(
     rs1: jax.Array,
     rs2: jax.Array,
     scale: jax.Array | None = None,
+    v: jax.Array | None = None,
     n_bins: int = 4096,
     exponent: float = 1.0,
+    rs_exponent: float | None = None,
     floor: float = 1e-3,
     k: int = 8,
     bm: int = 256,
@@ -224,12 +299,17 @@ def sim_sweep_q_pallas(
         scale = jnp.ones((m, 1), jnp.float32)
     else:
         scale = scale.reshape(m, 1).astype(jnp.float32)
+    if v is None:
+        v = jnp.ones((1, n), jnp.float32)
+    else:
+        v = v.reshape(1, n).astype(jnp.float32)
+    rs_exp = exponent if rs_exponent is None else rs_exponent
     grid = (m // bm, n // bn)
     out_specs, out_shape, scratch = _out_shapes(m, n_bins, k, bm)
     return pl.pallas_call(
         functools.partial(
-            _kernel_q, n_bins=n_bins, exponent=exponent, floor=floor, k=k,
-            bn=bn, n_blocks=n // bn, plan=plan,
+            _kernel_q, n_bins=n_bins, exponent=exponent, rs_exponent=rs_exp,
+            floor=floor, k=k, bn=bn, n_blocks=n // bn, plan=plan,
         ),
         grid=grid,
         in_specs=[
@@ -238,9 +318,10 @@ def sim_sweep_q_pallas(
             pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
             pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
             pl.BlockSpec((1, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),
         ],
         out_specs=out_specs,
         out_shape=out_shape,
         scratch_shapes=scratch,
         interpret=interpret,
-    )(q1, q2, scale, rs1.reshape(m, 1), rs2.reshape(1, n))
+    )(q1, q2, scale, rs1.reshape(m, 1), rs2.reshape(1, n), v)

@@ -3,10 +3,12 @@
 One blocked pass over ``E1 @ E2^T`` yields everything the streaming
 stratifier needs: the global weight histogram (exact integer column sum of
 the per-block tiles), per-(row-block, bin) count tiles for targeted rescans,
-and the per-left-row top-k similar right rows for blocking-regime collection.
-Padding corrections are the shared ``repro.kernels.padding`` helpers (the
-same ones ``sim_hist`` applies, so the fp32 sweep stays bit-identical to the
-two-kernel path).
+the per-left-row top-k similar right rows for blocking-regime collection,
+and compensated per-row walk sums (the wandering-join proposal normaliser —
+see ``repro.core.bas_streaming``).  Padding corrections for the counts are
+the shared ``repro.kernels.padding`` helpers (the same ones ``sim_hist``
+applies, so the fp32 sweep stays bit-identical to the two-kernel path); the
+walk sums need none because the backward vector is zero in padded columns.
 
 ``precision`` selects the compute path: ``"fp32"`` (default, bit-identical
 to the sequential sim_hist + sim_topk pair), ``"bf16"`` (bf16 MXU inputs,
@@ -17,6 +19,11 @@ Chain callers sweep many left blocks against one fixed right table: build a
 :class:`PreparedRight` once with :func:`prepare_right` and pass it as
 ``right=`` so padding/quantisation/upload of the right side happen once, not
 per prefix block.
+
+Block shapes route through :mod:`repro.kernels.autotune` on compiled
+backends (the tuned (bm, bn) schedule is cached on disk next to the index
+store); on CPU/interpret the historical power-of-two defaults are used
+unchanged.
 """
 from typing import NamedTuple, Optional
 
@@ -24,11 +31,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import autotune
 from ..padding import pad_rows, remove_pad_counts
 from .kernel import sim_sweep_pallas, sim_sweep_q_pallas
 from .ref import sim_sweep_ref  # noqa: F401  (oracle for tests/benchmarks)
 
 PRECISIONS = ("fp32", "bf16", "int8")
+
+
+def _pow2_block(block, n):
+    return min(block, max(8, 1 << (n - 1).bit_length()))
 
 
 class PreparedRight(NamedTuple):
@@ -51,13 +63,19 @@ class SweepOut(NamedTuple):
     vals: np.ndarray          # (n1, k) f32 clipped top-k scores
     idx: np.ndarray           # (n1, k) i32 right-row indices
     valid: np.ndarray         # (n1, k) bool — False for padded-column hits
+    row_sums: np.ndarray      # (n1,) f64 compensated walk sums
 
 
-def prepare_right(e2, block=256, precision="fp32") -> PreparedRight:
+def prepare_right(e2, block=256, precision="fp32",
+                  n1_hint: Optional[int] = None) -> PreparedRight:
     assert precision in PRECISIONS, precision
     e2 = np.asarray(e2, np.float32)
     n2 = e2.shape[0]
-    bn = min(block, max(8, 1 << (n2 - 1).bit_length()))
+    bn = _pow2_block(block, n2)
+    sched = autotune.schedule("sim_sweep", n1_hint or n2, n2, e2.shape[1],
+                              precision)
+    if sched is not None:
+        bn = _pow2_block(sched[1], n2)
     e2p, p2 = pad_rows(e2, bn)
     q2 = rs2 = None
     if precision == "int8":
@@ -71,36 +89,49 @@ def prepare_right(e2, block=256, precision="fp32") -> PreparedRight:
 
 def sim_sweep(e1, e2=None, n_bins=4096, exponent=1.0, floor=1e-3, k=8,
               block=256, interpret=None, scale=None, precision="fp32",
-              right: Optional[PreparedRight] = None) -> SweepOut:
+              right: Optional[PreparedRight] = None, back_v=None,
+              rs_exponent=None) -> SweepOut:
+    """``back_v`` (optional, (n2,) f32) is the backward chain vector applied
+    inside the walk sums; ``rs_exponent`` (optional) overrides the weight
+    power for the sums only (chain sweeps bin at ``exponent * root`` but
+    need the raw full-exponent edge weight in the walk sums)."""
     assert precision in PRECISIONS, precision
+    e1 = np.asarray(e1, np.float32)
+    n1 = e1.shape[0]
     if right is None:
         assert e2 is not None, "pass e2 or a PreparedRight"
-        right = prepare_right(e2, block, precision)
+        right = prepare_right(e2, block, precision, n1_hint=n1)
     assert right.precision == precision, (right.precision, precision)
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    e1 = np.asarray(e1, np.float32)
-    n1, n2 = e1.shape[0], right.n2
-    bm = min(block, max(8, 1 << (n1 - 1).bit_length()))
+    n2 = right.n2
+    bm = _pow2_block(block, n1)
+    sched = autotune.schedule("sim_sweep", n1, n2, e1.shape[1], precision)
+    if sched is not None:
+        bm = _pow2_block(sched[0], n1)
     bn = right.bn
     e1p, p1 = pad_rows(e1, bm)
     s = np.ones(n1, np.float32) if scale is None else np.asarray(scale, np.float32)
     sp = np.concatenate([s, np.zeros(p1, np.float32)]) if p1 else s
+    # backward vector, zero-padded so padded right columns drop out of the
+    # walk sums with no host-side correction
+    vp = np.zeros(right.e2p.shape[0], np.float32)
+    vp[:n2] = 1.0 if back_v is None else np.asarray(back_v, np.float32)
     kk = min(k, bn)
-    common = dict(n_bins=n_bins, exponent=exponent, floor=floor, k=kk, bm=bm,
-                  bn=bn, interpret=interpret)
+    common = dict(n_bins=n_bins, exponent=exponent, rs_exponent=rs_exponent,
+                  floor=floor, k=kk, bm=bm, bn=bn, interpret=interpret)
     if precision == "int8":
         from repro.core.similarity import quantize_rows_int8
 
         q1, rs1 = quantize_rows_int8(e1p)
-        bc, vals, idx = sim_sweep_q_pallas(
+        bc, vals, idx, rs = sim_sweep_q_pallas(
             jnp.asarray(q1), right.q2, jnp.asarray(rs1), right.rs2,
-            jnp.asarray(sp), **common,
+            jnp.asarray(sp), jnp.asarray(vp), **common,
         )
     else:
         dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
-        bc, vals, idx = sim_sweep_pallas(
-            jnp.asarray(e1p), right.e2p, jnp.asarray(sp),
+        bc, vals, idx, rs = sim_sweep_pallas(
+            jnp.asarray(e1p), right.e2p, jnp.asarray(sp), jnp.asarray(vp),
             compute_dtype=dtype, **common,
         )
     bc = np.asarray(bc).astype(np.int64)
@@ -110,7 +141,8 @@ def sim_sweep(e1, e2=None, n_bins=4096, exponent=1.0, floor=1e-3, k=8,
     edges = np.linspace(0.0, 1.0, n_bins + 1)
     vals = np.asarray(vals)[:n1]
     idx = np.asarray(idx)[:n1]
+    row_sums = np.asarray(rs)[:n1, 0].astype(np.float64)
     return SweepOut(
         counts=counts, edges=edges, block_counts=bc, block_rows=bm,
-        vals=vals, idx=idx, valid=idx < n2,
+        vals=vals, idx=idx, valid=idx < n2, row_sums=row_sums,
     )

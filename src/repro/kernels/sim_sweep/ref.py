@@ -2,21 +2,24 @@
 import jax
 import jax.numpy as jnp
 
+from .kernel import comp_block_sum
+
 
 def sim_sweep_ref(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, k=8,
-                  bm=None, scale=None):
+                  bm=None, scale=None, v=None, rs_exponent=None):
     """Returns (block_counts (M/bm, n_bins) i32, vals (M, k) f32,
-    idx (M, k) i32) — the same triple as ``sim_sweep_pallas``."""
+    idx (M, k) i32, row_sums (M, 1) f32) — the same quadruple as
+    ``sim_sweep_pallas``.  Row sums use the same compensated pairwise
+    reduction as the kernel (here over the full width in one block), so the
+    oracle matches both the kernel and a float64 reference to ~1 ulp."""
     m = e1.shape[0]
     bm = m if bm is None else bm
     scores = jnp.dot(
         e1.astype(jnp.float32), e2.astype(jnp.float32).T,
         preferred_element_type=jnp.float32,
     )
-    w = jnp.clip(scores, 0.0, 1.0)
-    w = jnp.maximum(w, floor)
-    if exponent != 1.0:
-        w = w**exponent
+    base = jnp.maximum(jnp.clip(scores, 0.0, 1.0), floor)
+    w = base if exponent == 1.0 else base**exponent
     if scale is not None:
         w = w * scale.reshape(-1, 1).astype(jnp.float32)
     idx = jnp.clip((w * n_bins).astype(jnp.int32), 0, n_bins - 1)
@@ -26,4 +29,9 @@ def sim_sweep_ref(e1, e2, n_bins=4096, exponent=1.0, floor=1e-3, k=8,
         idx.reshape(-1),
     ].add(1)
     vals, top_i = jax.lax.top_k(jnp.clip(scores, 0.0, 1.0), k)
-    return bc, vals, top_i.astype(jnp.int32)
+    rs_exp = exponent if rs_exponent is None else rs_exponent
+    wr = base if rs_exp == 1.0 else base**rs_exp
+    if v is not None:
+        wr = wr * v.reshape(1, -1).astype(jnp.float32)
+    hi, lo = comp_block_sum(wr)
+    return bc, vals, top_i.astype(jnp.int32), hi + lo

@@ -213,6 +213,21 @@ def _make_tracker(args):
     return tracker
 
 
+def _start_metrics(args, *sources):
+    """``--metrics-port N``: start the OpenMetrics ``/metrics`` endpoint
+    over the given ``snapshot()`` sources (0, the default, disables it).
+    Returns the running :class:`repro.obs.MetricsExporter` or ``None``."""
+    if not getattr(args, "metrics_port", 0):
+        return None
+    from repro.obs import MetricsExporter
+
+    exp = MetricsExporter(list(sources), host=args.host,
+                          port=args.metrics_port).start()
+    host, port = exp.address
+    print(f"[serve] metrics: http://{host}:{port}/metrics")
+    return exp
+
+
 def _print_service_stats(role: str, snap: dict) -> None:
     """Shutdown observability lines shared by the fleet and service modes —
     read exclusively from the unified ``snapshot()`` surface.  The *_recent
@@ -285,6 +300,7 @@ def _run_fleet_role(args, scorer) -> None:
     )
     host, port = server.address
     print(f"[{role}] group {args.group!r} listening on {host}:{port}")
+    metrics = _start_metrics(args, server.service.snapshot)
     for spec in (args.worker_hosts.split(",") if args.worker_hosts else []):
         w = server.register_worker(parse_address(spec))
         print(f"[{role}] registered worker {w.address[0]}:{w.address[1]} "
@@ -297,6 +313,8 @@ def _run_fleet_role(args, scorer) -> None:
         pass
     finally:
         snap = server.service.snapshot()
+        if metrics is not None:
+            metrics.stop()
         server.close()
         tracker.close()
         print(f"[{role}] shut down; {snap['service.windows']:.0f} windows, "
@@ -345,6 +363,9 @@ def main():
                     default="none",
                     help="service/server/worker mode: metrics tracker "
                          "(repro.obs) — none keeps the zero-cost hooks")
+    ap.add_argument("--metrics-port", type=int, default=0,
+                    help="service/server/worker mode: serve the unified "
+                         "snapshot as OpenMetrics on this port (0=off)")
     ap.add_argument("--tracker-out", default="",
                     help="jsonl tracker output path (default tracker.jsonl)")
     ap.add_argument("--deadline-ms", type=float, default=0.0,
@@ -449,6 +470,7 @@ def main():
                            tracker=tracker) as svc:
             from repro.serve.oracle_service import AdmissionRejected
 
+            metrics = _start_metrics(args, svc.snapshot)
             svc.attach(*oracles,
                        deadline_ms=args.deadline_ms or None)
 
@@ -473,6 +495,8 @@ def main():
             )
             dt = time.time() - t0
             snap = svc.snapshot()
+            if metrics is not None:
+                metrics.stop()
         tracker.close()
         labels = sum(o.calls for o in oracles)
         print(f"[serve] {args.queries} concurrent queries, {labels} oracle "

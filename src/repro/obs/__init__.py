@@ -6,7 +6,10 @@ the typed per-query telemetry tree.
   p50/p99 histograms with bounded memory).
 - :mod:`repro.obs.telemetry` — :class:`QueryTelemetry`, the typed successor
   to ``QueryResult.detail``, with a deprecation-shimmed dict view.
+- :mod:`repro.obs.prometheus` — OpenMetrics text rendering of any
+  ``snapshot()`` dict plus a stdlib HTTP ``/metrics`` exporter.
 """
+from .prometheus import MetricsExporter, render_openmetrics
 from .telemetry import (
     CascadeTelemetry,
     DispatchTelemetry,
@@ -34,6 +37,7 @@ __all__ = [
     "IndexTelemetry",
     "InMemoryTracker",
     "JsonlTracker",
+    "MetricsExporter",
     "NULL_TRACKER",
     "NoopTracker",
     "OracleTelemetry",
@@ -45,4 +49,5 @@ __all__ = [
     "Tracker",
     "make_tracker",
     "merge_snapshots",
+    "render_openmetrics",
 ]

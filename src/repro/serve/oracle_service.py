@@ -115,6 +115,7 @@ from repro.core.oracle import (
     plan_requests,
 )
 from repro.obs import NULL_TRACKER, NoopTracker, StreamingHistogram, merge_snapshots
+from repro.serve.transport import ThroughputEWMA
 
 
 class AdmissionRejected(RuntimeError):
@@ -343,6 +344,11 @@ class OracleService:
         self.rows_planned = 0       # rows surviving per-client cache dedup
         self.remote_shards = 0
         self.remote_failures = 0
+        # per-executor rows/s EWMAs ("local" + one per worker host label):
+        # _execute sizes shards in proportion to these (capacity-weighted
+        # splits, ROADMAP serving item c).  Keyed creation is guarded by
+        # _stats_lock; each EWMA is itself thread-safe.
+        self._shard_rates: dict[str, ThroughputEWMA] = {}
         self.admission_rejections = 0
         self.worker_deaths = 0
         self.worker_rejoins = 0
@@ -709,6 +715,8 @@ class OracleService:
             "service.worker.dead": float(len(self._dead_workers)),
             "service.worker.deaths": float(self.worker_deaths),
             "service.worker.rejoins": float(self.worker_rejoins),
+            **{f"service.shard.rate.{lb}": ewma.rate
+               for lb, ewma in list(self._shard_rates.items())},
         }
         return merge_snapshots(
             self.tracker.snapshot(),
@@ -953,19 +961,68 @@ class OracleService:
             return []
         return [w for w in self._remote_workers if key[1] in w.groups]
 
+    def _record_rate(self, label: str, rows: int, seconds: float) -> None:
+        """Fold one shard's measured throughput into its executor's EWMA."""
+        with self._stats_lock:
+            ewma = self._shard_rates.get(label)
+            if ewma is None:
+                ewma = self._shard_rates[label] = ThroughputEWMA()
+        ewma.update(rows, seconds)
+
+    def _capacity_split(self, idx: np.ndarray, labels: list) -> list:
+        """Contiguous shards of ``idx`` sized in proportion to each
+        executor's measured throughput (rows/s EWMA, see
+        :class:`repro.serve.transport.ThroughputEWMA`).
+
+        Executors without a measurement yet are assigned the mean measured
+        rate — so the very first super-batch splits uniformly and later
+        ones adapt.  The split is contiguous and order-preserving (largest
+        remainder apportionment with a one-row floor per shard), so the
+        concatenated result is bit-identical to the uniform split it
+        replaces regardless of how the sizes skew."""
+        n = len(labels)
+        with self._stats_lock:
+            rates = [
+                self._shard_rates[lb].rate
+                if lb in self._shard_rates
+                and self._shard_rates[lb].samples > 0 else 0.0
+                for lb in labels
+            ]
+        measured = [r for r in rates if r > 0.0]
+        if not measured:
+            return np.array_split(idx, n)
+        fallback = sum(measured) / len(measured)
+        weights = np.asarray(
+            [r if r > 0.0 else fallback for r in rates], np.float64
+        )
+        raw = weights * (len(idx) / weights.sum())
+        sizes = np.floor(raw).astype(np.int64)
+        order = np.argsort(-(raw - sizes), kind="stable")
+        for j in range(len(idx) - int(sizes.sum())):
+            sizes[order[j % n]] += 1
+        for i in range(n):          # one-row floor: steal from the largest
+            while sizes[i] == 0:
+                sizes[int(np.argmax(sizes))] -= 1
+                sizes[i] += 1
+        return np.split(idx, np.cumsum(sizes)[:-1])
+
     def _execute(self, fn: Callable, idx: np.ndarray, key=None) -> np.ndarray:
         """Shard a super-batch across the local thread pool and any worker
-        hosts serving the group; shard order is preserved, so results are
-        bit-identical regardless of where each shard ran."""
+        hosts serving the group, each shard sized by the executor's measured
+        throughput (``_capacity_split``); shard order is preserved, so
+        results are bit-identical regardless of where each shard ran or how
+        the sizes skew."""
         remotes = self._eligible_workers(key)
         n_shards = min(self.workers + len(remotes),
                        len(idx) // self.min_shard)
         if self._pool is None or n_shards < 2:
             self.backend_calls += 1
             return np.asarray(self._execute_local(fn, idx), np.float64)
-        shards = np.array_split(idx, n_shards)
-        self.backend_calls += n_shards
         n_remote = min(len(remotes), n_shards - 1)  # keep >=1 shard local
+        labels = [self._worker_label(w) for w in remotes[:n_remote]]
+        labels += ["local"] * (n_shards - n_remote)
+        shards = self._capacity_split(idx, labels)
+        self.backend_calls += n_shards
         futs = [
             self._pool.submit(self._execute_remote, w, key[1], fn, s)
             for w, s in zip(remotes, shards[:n_remote])
@@ -977,14 +1034,14 @@ class OracleService:
         )
 
     def _execute_local(self, fn: Callable, shard: np.ndarray):
-        """One shard on the local pool, timed into ``service.shard.local_ms``
-        when a tracker is attached."""
-        if not self._tracking:
-            return fn(shard)
+        """One shard on the local pool, timed into the ``local`` throughput
+        EWMA (and ``service.shard.local_ms`` when a tracker is attached)."""
         t0 = time.perf_counter()
         vals = fn(shard)
-        self.tracker.observe("service.shard.local_ms",
-                             (time.perf_counter() - t0) * 1e3)
+        dt = time.perf_counter() - t0
+        self._record_rate("local", len(shard), dt)
+        if self._tracking:
+            self.tracker.observe("service.shard.local_ms", dt * 1e3)
         return vals
 
     def _execute_remote(self, worker, name: str, fn: Callable,
@@ -1001,10 +1058,12 @@ class OracleService:
                     f"worker returned shape {vals.shape} for "
                     f"{len(shard)} rows"
                 )
+            dt = time.perf_counter() - t0
+            self._record_rate(self._worker_label(worker), len(shard), dt)
             if self._tracking:
                 self.tracker.observe(
                     f"service.shard.{self._worker_label(worker)}_ms",
-                    (time.perf_counter() - t0) * 1e3,
+                    dt * 1e3,
                 )
             with self._stats_lock:
                 self.remote_shards += 1

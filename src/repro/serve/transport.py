@@ -501,6 +501,49 @@ class RemoteOracle(Oracle):
         self.close()
 
 
+class ThroughputEWMA:
+    """Thread-safe rows/s exponentially-weighted moving average for one
+    shard executor (the local pool or one worker host).
+
+    ``OracleService._execute`` sizes super-batch shards in proportion to
+    these rates, so a host that labels half as fast gets roughly half the
+    rows — uniform splits make every super-batch as slow as the slowest
+    host.  The first sample seeds the average (no zero-warmup bias);
+    later samples blend in with weight ``alpha``, so a host that speeds
+    up or slows down re-converges within a few windows."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = float(alpha)
+        self._lock = threading.Lock()
+        self._rate = 0.0
+        self._samples = 0
+
+    def update(self, rows: int, seconds: float) -> float:
+        """Fold one measured shard into the average; degenerate samples
+        (no rows, or a timer resolution of zero) are dropped."""
+        if rows <= 0 or seconds <= 0.0:
+            return self.rate
+        sample = rows / seconds
+        with self._lock:
+            if self._samples == 0:
+                self._rate = sample
+            else:
+                self._rate += self.alpha * (sample - self._rate)
+            self._samples += 1
+            return self._rate
+
+    @property
+    def rate(self) -> float:
+        """Current rows/s estimate; 0.0 until the first sample lands."""
+        with self._lock:
+            return self._rate
+
+    @property
+    def samples(self) -> int:
+        with self._lock:
+            return self._samples
+
+
 class RemoteWorkerClient:
     """The front server's handle on one worker host: a
     :class:`ServiceConnection` plus the group names the worker advertised at

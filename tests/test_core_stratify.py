@@ -222,14 +222,22 @@ def _small_query(budget=900):
                  budget=budget)
 
 
-def test_bas_streaming_sweep_estimates_bit_identical():
+def test_bas_streaming_sweep_estimates_match_two_pass():
+    """The fused sweep path draws the same samples as the two-pass schedule
+    (identical strata and oracle calls); its walk setup reads the sweep's
+    compensated f32 row sums instead of recomputing them in f64, so the
+    estimate agrees to the compensated-accumulation contract (~1 f32 ulp),
+    not bit-exactly (see kernels/sim_sweep: one-pass chain statistics)."""
     from repro.core.bas_streaming import run_bas_streaming
 
     r1 = run_bas_streaming(_small_query(), seed=0, use_sweep=True)
     r2 = run_bas_streaming(_small_query(), seed=0, use_sweep=False)
-    assert r1.estimate == r2.estimate
-    assert (r1.ci.lo, r1.ci.hi) == (r2.ci.lo, r2.ci.hi)
+    assert r1.estimate == pytest.approx(r2.estimate, rel=1e-7)
+    assert r1.ci.lo == pytest.approx(r2.ci.lo, rel=1e-6)
+    assert r1.ci.hi == pytest.approx(r2.ci.hi, rel=1e-6)
+    assert r1.oracle_calls == r2.oracle_calls
     assert r1.detail["stratify"]["path"] == "sweep"
+    assert r1.detail["stratify"]["walk_setup"] == "fused"
     assert "stratify" not in r2.detail or r2.detail["stratify"]["path"] == "two-pass"
 
 

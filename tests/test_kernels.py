@@ -148,11 +148,12 @@ def test_sim_sweep_matches_ref():
     rng = np.random.default_rng(12)
     e1 = rand_emb(rng, 128, 16, jnp.float32)
     e2 = rand_emb(rng, 64, 16, jnp.float32)
-    bc, vals, idx = sim_sweep_pallas(e1, e2, n_bins=256, k=4, bm=64, bn=64,
-                                     interpret=True)
-    rbc, rvals, ridx = sim_sweep_ref(e1, e2, n_bins=256, k=4, bm=64)
+    bc, vals, idx, rs = sim_sweep_pallas(e1, e2, n_bins=256, k=4, bm=64,
+                                         bn=64, interpret=True)
+    rbc, rvals, ridx, rrs = sim_sweep_ref(e1, e2, n_bins=256, k=4, bm=64)
     np.testing.assert_array_equal(np.asarray(bc), np.asarray(rbc))
     np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(rs), np.asarray(rrs), rtol=1e-6)
     distinct = np.abs(np.diff(np.asarray(rvals), axis=1)) > 1e-5
     same = np.asarray(idx)[:, :-1][distinct] == np.asarray(ridx)[:, :-1][distinct]
     assert same.mean() > 0.99

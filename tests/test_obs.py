@@ -316,3 +316,82 @@ def test_launcher_prints_service_class_histograms(capsys):
     out = capsys.readouterr().out
     assert "class 'tight':" in out
     assert "p50=" in out and "p99=" in out and "rate=" in out
+
+
+# ----------------------------------------------------------------------------
+# OpenMetrics exporter: snapshot() dicts -> Prometheus scrape surface
+# ----------------------------------------------------------------------------
+
+def test_render_openmetrics_contract():
+    """Rendering mangles dotted names, types every sample as a gauge, drops
+    non-finite values, and terminates with # EOF."""
+    from repro.obs import render_openmetrics
+
+    snap = {
+        "service.window.fill_ratio": 0.25,
+        "service.shard.rate.127.0.0.1:9000": 1234.5,
+        "label_store.hits": 7,
+        "bad.value": float("nan"),
+        "9starts.with.digit": 1.0,
+    }
+    body = render_openmetrics(snap)
+    lines = body.splitlines()
+    assert lines[-1] == "# EOF" and body.endswith("\n")
+    assert "# TYPE repro_service_window_fill_ratio gauge" in lines
+    assert "repro_service_window_fill_ratio 0.25" in lines
+    # ':' survives (legal in prometheus names); '.' does not
+    assert "repro_service_shard_rate_127_0_0_1:9000 1234.5" in lines
+    assert "repro_label_store_hits 7.0" in lines
+    assert not any("bad_value" in ln for ln in lines)       # NaN dropped
+    assert "_9starts_with_digit 1.0" in [
+        ln for ln in lines if "digit" in ln and "TYPE" not in ln
+    ][0]
+    # every sample line is parseable as "name value"
+    for ln in lines:
+        if not ln.startswith("#"):
+            name, val = ln.split(" ")
+            float(val)
+
+
+def test_metrics_exporter_http_roundtrip():
+    """The /metrics endpoint serves the merged live snapshots with the
+    OpenMetrics content type; a failing source is skipped, not fatal."""
+    import urllib.request
+
+    from repro.obs import MetricsExporter
+
+    tracker = InMemoryTracker()
+    tracker.count("scrapes", 3)
+
+    def broken():
+        raise RuntimeError("wedged store")
+
+    with OracleService(max_wait_ms=1.0, tracker=tracker) as svc:
+        o = FnOracle(lambda idx: np.ones(len(idx), np.float64))
+        o.bind_sizes((100, 100))
+        svc.attach(o)
+        o.label(np.array([[1, 2], [3, 4]]))
+        with MetricsExporter([svc.snapshot, broken], port=0) as exp:
+            host, port = exp.address
+            with urllib.request.urlopen(
+                f"http://{host}:{port}/metrics", timeout=10
+            ) as resp:
+                assert resp.status == 200
+                ctype = resp.headers["Content-Type"]
+                body = resp.read().decode("utf-8")
+        assert ctype.startswith("application/openmetrics-text")
+        assert body.rstrip().endswith("# EOF")
+        assert "repro_service_rows_labelled 2.0" in body
+        assert "repro_scrapes 3.0" in body
+        svc.detach(o)
+
+
+def test_metrics_exporter_404_off_path():
+    from repro.obs import MetricsExporter
+    import urllib.error
+    import urllib.request
+
+    with MetricsExporter([lambda: {"x": 1.0}], port=0) as exp:
+        host, port = exp.address
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"http://{host}:{port}/nope", timeout=10)

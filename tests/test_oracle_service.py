@@ -597,6 +597,90 @@ def test_super_batches_shard_across_worker_hosts():
     assert stats["remote_shards"] >= 1
 
 
+def test_capacity_split_proportions_and_order():
+    """The capacity-weighted split is contiguous, order-preserving, sized in
+    proportion to measured rows/s EWMAs (mean-rate fallback for unmeasured
+    executors, uniform when nothing is measured), and never emits an empty
+    shard."""
+    svc = OracleService(workers=2, max_wait_ms=1.0)
+    try:
+        idx = np.arange(1000)
+        # nothing measured yet -> uniform
+        assert [len(p) for p in svc._capacity_split(idx, ["a", "local"])] \
+            == [500, 500]
+        svc._record_rate("a", 100, 1.0)       # 100 rows/s
+        svc._record_rate("local", 300, 1.0)   # 300 rows/s
+        parts = svc._capacity_split(idx, ["a", "local"])
+        assert [len(p) for p in parts] == [250, 750]
+        np.testing.assert_array_equal(np.concatenate(parts), idx)
+        # an unmeasured executor is assigned the mean measured rate
+        parts = svc._capacity_split(idx, ["a", "b", "local"])
+        sizes = [len(p) for p in parts]
+        assert sum(sizes) == 1000
+        assert abs(sizes[1] - 1000 * 200 / 600) <= 1
+        assert sizes[0] < sizes[1] < sizes[2]
+        np.testing.assert_array_equal(np.concatenate(parts), idx)
+        # one-row floor: a very slow executor still gets a shard
+        svc._record_rate("crawl", 1, 1000.0)  # 0.001 rows/s
+        parts = svc._capacity_split(idx, ["crawl", "local"])
+        assert [len(p) for p in parts] == [1, 999]
+        np.testing.assert_array_equal(np.concatenate(parts), idx)
+    finally:
+        svc.close()
+
+
+def test_slow_worker_host_gets_smaller_shard_bit_identical():
+    """Capacity-weighted sharding (ROADMAP serving item c): after a uniform
+    warm-up round measures per-host throughput, a deliberately slow worker
+    host receives a proportionally smaller shard — and because the split is
+    contiguous and order-preserving, labels stay bit-identical to the
+    reference."""
+    import time as _time
+
+    worker_shards, local_shards = [], []
+    lock = threading.Lock()
+
+    def slow_worker_fn(idx):
+        with lock:
+            worker_shards.append(len(idx))
+        _time.sleep(0.05)                     # a host ~100x slower per row
+        return _parity_fn(idx)
+
+    def local_fn(idx):
+        with lock:
+            local_shards.append(len(idx))
+        return _parity_fn(idx)
+
+    rng = np.random.default_rng(7)
+    idx1 = np.unique(rng.integers(0, 1000, size=(640, 2)), axis=0)
+    idx2 = np.unique(rng.integers(1000, 2000, size=(640, 2)), axis=0)
+    with OracleServiceServer({"parity": slow_worker_fn},
+                             max_wait_ms=1.0) as worker:
+        with OracleServiceServer({"parity": local_fn}, max_wait_ms=1.0,
+                                 workers=1, min_shard=64) as front:
+            front.register_worker(worker.address)
+            with RemoteOracle(front.address, "parity") as o:
+                o.bind_sizes((2000, 2000))
+                got1 = o.label(idx1)          # uniform warm-up round
+                got2 = o.label(idx2)          # capacity-weighted round
+            snap = front.service.snapshot()
+    np.testing.assert_array_equal(got1, idx1.sum(1) % 2)
+    np.testing.assert_array_equal(got2, idx2.sum(1) % 2)
+    assert len(worker_shards) == 2 and len(local_shards) == 2
+    # warm-up split evenly; the weighted round shrinks the slow host's share
+    assert abs(worker_shards[0] - len(idx1) // 2) <= 1
+    assert worker_shards[1] < worker_shards[0]
+    assert worker_shards[1] < len(idx2) // 2 < local_shards[1]
+    assert worker_shards[1] + local_shards[1] == len(idx2)
+    # the rates back the snapshot surface: slow host measured slower
+    rates = {k: v for k, v in snap.items()
+             if k.startswith("service.shard.rate.")}
+    assert rates["service.shard.rate.local"] > 0.0
+    worker_rate = [v for k, v in rates.items() if k.endswith(
+        f":{worker.address[1]}")]
+    assert worker_rate and worker_rate[0] < rates["service.shard.rate.local"]
+
+
 def test_dead_worker_host_degrades_to_local_execution():
     """A worker host that died is unregistered on its first failed shard;
     the shard falls back to local execution — a dead worker costs
